@@ -1,0 +1,112 @@
+"""Shared benchmark substrate: small trained models (cached on disk)."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, get_config
+from repro.data.synthetic import GaussianBlobs, MarkovLM
+from repro.distributed import checkpoint as ckpt
+from repro.models import cnn as cnn_lib
+from repro.models import lm
+from repro.models.losses import lm_loss
+from repro.optim import adamw
+from repro.training.loop import run_training
+
+CACHE = "artifacts/bench_models"
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def lm_setup(steps=300):
+    """(params, cfg, eval_fn) for a trained tiny LM, cached across runs."""
+    cfg = get_config("olmo-1b").reduced()
+    data = MarkovLM(cfg.vocab_size, 64, 16, seed=0)
+    cdir = os.path.join(CACHE, "lm")
+    run = RunConfig(arch="olmo-1b", steps=steps if not QUICK else 120,
+                    checkpoint_dir=cdir, checkpoint_every=10 ** 9,
+                    remat=False, learning_rate=1e-3)
+    state, _, _ = run_training(cfg, run, iter(data))
+
+    eval_batches = [data.batch(5000 + i) for i in range(4)]
+
+    def eval_fn(params):
+        """jit-pure: returns a jnp scalar (resilience jits inject+eval)."""
+        accs = []
+        for batch in eval_batches:
+            logits, _, _ = lm.forward(params, cfg, batch, remat=False)
+            accs.append(lm_loss(logits, batch["labels"])[1]["accuracy"])
+        return jnp.mean(jnp.stack(accs))
+
+    return state.params, cfg, eval_fn, data
+
+
+def cnn_setup(steps=400):
+    """(params, eval_fn, task, train_more) for a trained CNN, cached."""
+    task = GaussianBlobs()
+    cdir = os.path.join(CACHE, "cnn")
+    steps = steps if not QUICK else 150
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0))
+    opt = adamw.init_opt_state(params)
+    ocfg = adamw.AdamWConfig(weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        (loss, acc), grads = jax.value_and_grad(cnn_lib.cnn_loss, has_aux=True)(
+            params, x, y)
+        p2, o2 = adamw.adamw_update(grads, opt, params, 3e-3, ocfg)
+        return p2, o2, loss
+
+    latest = ckpt.latest_step(cdir)
+    if latest == steps:
+        params, _ = ckpt.restore(params, cdir)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+    else:
+        for i in range(steps):
+            x, y = task.batch(64, i)
+            params, opt, _ = step(params, opt, x, y)
+        ckpt.save(params, steps, cdir)
+
+    xe, ye = task.batch(1024, 99_999)
+
+    def eval_fn(p):
+        """jit-pure accuracy on a fixed eval batch."""
+        logits = cnn_lib.apply_cnn(p, xe)
+        return jnp.mean(jnp.argmax(logits, -1) == ye)
+
+    return params, eval_fn, task
+
+
+def finetune_cnn(params, task, align_cfg, steps=120, lr=1e-3):
+    """Paper §III-C fine-tuning: align, then train with the frozen-exponent
+    projection applied after every update."""
+    from repro.core import align as align_lib
+    aligned, exps = align_lib.align_pytree(params, align_cfg)
+    signs = jax.tree_util.tree_map(
+        lambda w, e: None if e is None else jnp.sign(w).astype(jnp.int8),
+        aligned, exps, is_leaf=lambda x: x is None)
+    opt = adamw.init_opt_state(aligned)
+    ocfg = adamw.AdamWConfig(weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        (loss, acc), grads = jax.value_and_grad(cnn_lib.cnn_loss, has_aux=True)(
+            params, x, y)
+        p2, o2 = adamw.adamw_update(grads, opt, params, lr, ocfg)
+        p2 = align_lib.project_pytree(p2, exps, signs, align_cfg)
+        return p2, o2, loss
+
+    p = aligned
+    for i in range(steps if not QUICK else 50):
+        x, y = task.batch(64, 10_000 + i)
+        p, opt, _ = step(p, opt, x, y)
+    return p
+
+
+def emit(rows):
+    """CSV rows: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")

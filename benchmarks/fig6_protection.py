@@ -1,0 +1,47 @@
+"""Fig. 6: accuracy vs BER with and without One4N ECC on the CIM deployment
+(exponent-aligned weights, bit-accurate SRAM image)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import QUICK, emit, lm_setup
+from repro.core import cim as cim_lib
+from repro.core import resilience
+
+BERS = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2]
+
+
+def main():
+    params, cfg, eval_fn, _ = lm_setup()
+    rows = [("fig6.lm.clean", None, f"acc={float(eval_fn(params)):.4f}")]
+    trials = 3 if QUICK else 8
+    t0 = time.time()
+    results = resilience.characterize_protection(
+        jax.random.PRNGKey(5), params, eval_fn, BERS,
+        cim_cfg=cim_lib.CIMConfig(n_group=8, index=2), n_trials=trials,
+        protects=("none", "per_weight", "one4n"))
+    us = (time.time() - t0) * 1e6 / max(len(results) * trials, 1)
+    by = {}
+    for r in results:
+        rows.append((f"fig6.lm.{r.protect}.ber{r.ber:.0e}", round(us),
+                     f"acc={r.mean:.4f};corrected={r.corrected:.0f};"
+                     f"uncorrectable={r.uncorrectable:.0f}"))
+        by[(r.protect, r.ber)] = r.mean
+    # headline: protection dominates at every damaging BER; One4N matches the
+    # 40x-more-expensive traditional scheme until multi-error rows appear
+    wins = sum(by[("one4n", b)] >= by[("none", b)] - 1e-9 for b in BERS)
+    rows.append(("fig6.lm.check.one4n_dominates", None,
+                 f"wins={wins}/{len(BERS)}"))
+    close = sum(by[("one4n", b)] >= by[("per_weight", b)] - 0.02
+                for b in BERS if b <= 1e-4)
+    rows.append(("fig6.lm.check.one4n_matches_traditional_low_ber", None,
+                 f"close={close}/{sum(1 for b in BERS if b <= 1e-4)} "
+                 f"(at 40x fewer check bits)"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

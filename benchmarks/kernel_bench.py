@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: bfp_matmul + fault_inject vs their jnp oracles.
+
+NOTE on semantics: this container executes Pallas in interpret mode on CPU, so
+``us_per_call`` here measures the *oracle-equivalence harness*, not TPU
+performance — TPU-side cost is assessed structurally in §Roofline (the kernel
+reduces HBM weight traffic to 11.6 bits/weight vs 16 for bf16; see
+EXPERIMENTS.md §Perf decode hillclimb)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import align
+from repro.kernels.bfp_matmul import ops as bfp_ops
+from repro.kernels.bfp_matmul import ref as bfp_ref
+from repro.kernels.fault_inject import ops as fi_ops
+from repro.kernels.fault_inject import ref as fi_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6, out
+
+
+def main():
+    rows = []
+    for m, k, n in ((128, 1024, 256), (256, 2048, 512)):
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
+        w_al, _ = align.align_matrix(w, align.AlignmentConfig(8, 2))
+        man, exp = bfp_ref.pack_bfp(w_al, 8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+        us_k, out_k = _time(lambda: bfp_ops.bfp_matmul(x, man, exp))
+        us_r, out_r = _time(lambda: jax.jit(bfp_ref.bfp_matmul_ref)(x, man, exp))
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        bits_per_weight = 10 + 1 + 5 / 8.0
+        rows.append((f"kernel.bfp_matmul.{m}x{k}x{n}", round(us_k),
+                     f"ref_us={us_r:.0f};max_err={err:.1e};"
+                     f"weight_bits={bits_per_weight:.1f}vs16"))
+    for shape in ((512, 512), (2048, 1024)):
+        bits = jnp.zeros(shape, jnp.uint16)
+        pos = tuple(range(10, 16))
+        us_k, out_k = _time(lambda: fi_ops.fault_inject_bits(
+            bits, seed=3, ber=1e-3, positions=pos))
+        us_r, out_r = _time(lambda: jax.jit(
+            lambda b: fi_ref.fault_inject_ref(b, seed=3, ber=1e-3,
+                                              positions=pos))(bits))
+        exact = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+        rows.append((f"kernel.fault_inject.{shape[0]}x{shape[1]}", round(us_k),
+                     f"ref_us={us_r:.0f};bit_exact={exact}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_experiments
+Writes artifacts/roofline_table.md + artifacts/dryrun_table.md (included into
+EXPERIMENTS.md by the final assembly step).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt(x):
+    return f"{x:.4f}" if x >= 1e-3 else f"{x:.2e}"
+
+
+def roofline_table(tag: str = "opt") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO flops |",
+            "|---|---|---|---|---|---|---|"]
+    files = sorted(glob.glob(f"artifacts/dryrun/*__roofline__{tag}.json")) if tag \
+        else sorted(glob.glob("artifacts/dryrun/*__roofline.json"))
+    for f in files:
+        r = json.load(open(f))
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                        f"(full attention @500k) | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | |")
+            continue
+        ro = r["roofline"]
+        mf = r["model_flops"] / max(r["per_device"]["flops"] * 256, 1)
+        rows.append(f"| {r['arch']} | {r['shape']} | {_fmt(ro['compute_s'])} | "
+                    f"{_fmt(ro['memory_s'])} | {_fmt(ro['collective_s'])} | "
+                    f"{ro['dominant']} | {mf:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile s | args GB/dev | HLO flops/dev | coll GB/dev |",
+            "|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob("artifacts/dryrun/*__single.json")) + \
+            sorted(glob.glob("artifacts/dryrun/*__multi.json")):
+        if "__single__" in f or "__multi__" in f:   # tagged variants
+            continue
+        r = json.load(open(f))
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | skipped | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | |")
+            continue
+        mem = r.get("memory_analysis", {})
+        args = mem.get("argument_size_in_bytes", 0) / 1e9
+        coll = sum(v for k, v in r["collectives"].items() if k != "count") / 1e9
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{r.get('compile_s', 0)} | {args:.2f} | "
+                    f"{r['cost_analysis']['flops']:.2e} | {coll:.2f} |")
+    return "\n".join(rows)
+
+
+def pass_summary() -> str:
+    ok = fails = skips = 0
+    for f in glob.glob("artifacts/dryrun/*__single.json") + \
+            glob.glob("artifacts/dryrun/*__multi.json"):
+        if "__single__" in f or "__multi__" in f:
+            continue
+        r = json.load(open(f))
+        if "error" in r:
+            fails += 1
+        elif "skipped" in r:
+            skips += 1
+        else:
+            ok += 1
+    return (f"**{ok} compiled, {fails} failed, {skips} skipped** "
+            f"(skips = long_500k on the 8 full-attention archs, by assignment)")
+
+
+def main():
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline_table.md", "w") as f:
+        f.write(roofline_table("opt"))
+    with open("artifacts/roofline_table_baseline.md", "w") as f:
+        f.write(roofline_table(""))
+    with open("artifacts/dryrun_table.md", "w") as f:
+        f.write(pass_summary() + "\n\n" + dryrun_table())
+    print(pass_summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (40 cells)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load(pattern="artifacts/dryrun/*__roofline*.json"):
+    recs = []
+    for f in sorted(glob.glob(pattern)):
+        r = json.load(open(f))
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def main():
+    rows = []
+    for r in load():
+        name = f"roofline.{r['arch']}.{r['shape']}"
+        if r.get("tag"):
+            name += f".{r['tag']}"
+        if "skipped" in r:
+            rows.append((name, None, "skipped=sub-quadratic-only"))
+            continue
+        if "error" in r:
+            rows.append((name, None, f"ERROR={r['error'][:60]}"))
+            continue
+        ro = r["roofline"]
+        mf = r["model_flops"] / max(r["per_device"]["flops"] * 256, 1)
+        rows.append((name, None,
+                     f"compute_s={ro['compute_s']:.4f};memory_s={ro['memory_s']:.4f};"
+                     f"collective_s={ro['collective_s']:.4f};dominant={ro['dominant']};"
+                     f"model/hlo_flops={mf:.3f}"))
+    # compile-pass summary over the required single/multi cells
+    ok = fails = skips = 0
+    for f in glob.glob("artifacts/dryrun/*__single.json") + \
+            glob.glob("artifacts/dryrun/*__multi.json"):
+        r = json.load(open(f))
+        if "error" in r:
+            fails += 1
+        elif "skipped" in r:
+            skips += 1
+        else:
+            ok += 1
+    rows.append(("roofline.dryrun_pass", None,
+                 f"compiled={ok};failed={fails};skipped={skips}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

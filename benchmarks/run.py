@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``BENCH_QUICK=1`` shrinks trial
+counts (used by CI-style smoke runs); the default settings are what
+EXPERIMENTS.md reports.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_characterization, fig6_protection,
+                            fig7_training, fp8_future, kernel_bench,
+                            roofline_report, table1_alignment,
+                            table3_overhead)
+    modules = [
+        ("table3", table3_overhead),        # pure arithmetic first (fast)
+        ("roofline", roofline_report),
+        ("kernels", kernel_bench),
+        ("fig2", fig2_characterization),
+        ("fig6", fig6_protection),
+        ("table1", table1_alignment),
+        ("fig7", fig7_training),
+        ("fp8", fp8_future),                # beyond-paper: the stated future work
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"suite.{name},,wall_s={time.time() - t0:.1f}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"suite.{name},,FAILED={type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Table I: fine-tuning accuracy ratio vs retrained baseline, over
+N in {4, 8, 16} x exponent index in {1..4} (paper's grid, CNN family)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import QUICK, cnn_setup, emit, finetune_cnn
+from repro.core.align import AlignmentConfig
+
+GRID_N = (4, 8, 16)
+GRID_INDEX = (1, 2, 3, 4)
+
+
+def main():
+    params, eval_fn, task = cnn_setup()
+    baseline = float(eval_fn(params))
+    rows = [("table1.cnn.baseline", None, f"acc={baseline:.4f}")]
+    ratios = {}
+    from repro.core import align as align_lib
+    for n in GRID_N:
+        for idx in GRID_INDEX:
+            t0 = time.time()
+            acfg = AlignmentConfig(n_group=n, index=idx)
+            aligned, _ = align_lib.align_pytree(params, acfg)
+            pre = float(eval_fn(aligned))
+            tuned = finetune_cnn(params, task, acfg)
+            acc = float(eval_fn(tuned))
+            ratio = acc / max(baseline, 1e-9)
+            ratios[(n, idx)] = ratio
+            rows.append((f"table1.N{n}.idx{idx}",
+                         round((time.time() - t0) * 1e6),
+                         f"acc={acc:.4f};ratio={ratio:.4f};pre_ft={pre:.4f}"))
+    # paper's findings as derived checks: N=8 best trade-off; middle indices
+    # (2,3) >= extreme indices (1,4) on average
+    n8 = sum(ratios[(8, i)] for i in GRID_INDEX) / 4
+    n4 = sum(ratios[(4, i)] for i in GRID_INDEX) / 4
+    mid = sum(ratios[(n, i)] for n in GRID_N for i in (2, 3)) / 6
+    ext = sum(ratios[(n, i)] for n in GRID_N for i in (1, 4)) / 6
+    rows.append(("table1.check.n8_beats_n4", None,
+                 f"n8={n8:.4f};n4={n4:.4f};{n8 >= n4 - 0.02}"))
+    rows.append(("table1.check.mid_indices_best", None,
+                 f"mid={mid:.4f};ext={ext:.4f};{mid >= ext - 0.02}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

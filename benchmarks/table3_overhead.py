@@ -1,0 +1,85 @@
+"""Table III: hardware-efficiency comparison for a 256x256 SRAM array.
+
+Redundant-bit and SRAM-bit-cell columns are exact arithmetic reproduced from
+the SECDED structure (every count matches the paper's numbers). The logic
+column requires the paper's TSMC N16 synthesis flow; we model it with an
+XOR-tree gate-count estimate, normalized so the traditional full-FP scheme
+matches the paper's 74.44%, and report our scheme's modeled overhead next to
+the paper's measured 8.98% (DESIGN.md §1 fidelity notes).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.ecc import One4NRowCodec, secded_redundant_bits
+
+ROWS, ROW_BITS, WPR = 256, 256, 16          # 256x256 array, 16 fp16 weights/row
+N_WEIGHTS = ROWS * WPR                       # 4096
+EXP_BITS, SIGN_BITS, MAN_BITS = 5, 1, 10
+
+
+def xor_gates_secded(d: int) -> int:
+    """Gate-count model: encode + syndrome XOR trees ~ 2 * d * r XOR2 gates."""
+    r = secded_redundant_bits(d)
+    return 2 * d * r
+
+
+def main():
+    rows = []
+
+    # -- scheme 1: traditional per-weight ECC over the ENTIRE FP number ------
+    # separate encoding for (sign+exp) and mantissa (different macro modules)
+    bits_1 = N_WEIGHTS * (secded_redundant_bits(EXP_BITS + SIGN_BITS)
+                          + secded_redundant_bits(MAN_BITS))
+    gates_1 = N_WEIGHTS * (xor_gates_secded(6) + xor_gates_secded(10))
+
+    # -- scheme 2: traditional per-weight ECC, exponent+sign only ------------
+    bits_2 = N_WEIGHTS * secded_redundant_bits(EXP_BITS + SIGN_BITS)
+    gates_2 = N_WEIGHTS * xor_gates_secded(6)
+
+    # -- scheme 3: row-based ECC over the entire FP number -------------------
+    # per 256-bit row: one SECDED over 96 sign+exp bits + one over 160 mantissa
+    bits_3 = ROWS * (secded_redundant_bits(96) + secded_redundant_bits(160))
+    gates_3 = ROWS * (xor_gates_secded(96) + xor_gates_secded(160))
+
+    # -- ours: One4N (N=8) ----------------------------------------------------
+    codec = One4NRowCodec(n_group=8)
+    n_blocks = ROWS // 8
+    bits_ours = n_blocks * codec.redundant_bits_per_block
+    gates_ours = n_blocks * codec.n_segments * xor_gates_secded(codec.segment_bits)
+
+    # SRAM bit cells for exponents
+    cells_trad = N_WEIGHTS * EXP_BITS
+    cells_ours = n_blocks * WPR * EXP_BITS
+
+    # logic overhead normalized so scheme 1 == paper's 74.44%
+    paper_full = 74.44
+    scale = paper_full / gates_1
+    logic = {k: g * scale for k, g in
+             (("full", gates_1), ("expsign", gates_2), ("rowfull", gates_3),
+              ("ours", gates_ours))}
+
+    expect = {"full": 40960, "expsign": 20480, "rowfull": 4352, "ours": 512}
+    got = {"full": bits_1, "expsign": bits_2, "rowfull": bits_3, "ours": bits_ours}
+    for k in expect:
+        rows.append((f"table3.redundant_bits.{k}", None,
+                     f"bits={got[k]};paper={expect[k]};match={got[k] == expect[k]}"))
+    rows.append(("table3.sram_cells.traditional", None,
+                 f"cells={cells_trad};paper=20480;match={cells_trad == 20480}"))
+    rows.append(("table3.sram_cells.ours", None,
+                 f"cells={cells_ours};paper=2560;match={cells_ours == 2560};"
+                 f"reduction={cells_trad // cells_ours}x"))
+    for k, v in logic.items():
+        rows.append((f"table3.logic_overhead_model.{k}", None,
+                     f"modeled={v:.2f}%"))
+    rows.append(("table3.logic_overhead.paper_ours", None,
+                 "paper_measured=8.98% (TSMC N16 synthesis; not reproducible "
+                 f"offline — model gives {logic['ours']:.2f}%)"))
+    rows.append(("table3.improvements", None,
+                 f"bits_vs_full={bits_1 // bits_ours}x(paper 80x);"
+                 f"bits_vs_expsign={bits_2 // bits_ours}x(paper 40x)"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

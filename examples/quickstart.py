@@ -1,0 +1,70 @@
+"""Quickstart: the Unicorn-CIM reliability pipeline in ~60 seconds.
+
+1. Train a small LM on a learnable synthetic task.
+2. Exponent-align its weights (paper §III-C) and fine-tune with frozen
+   exponents (mantissa-only updates).
+3. Deploy onto the emulated CIM macro (pack -> SECDED-encode).
+4. Inject soft errors at the paper's "standard operating voltage" BER (1e-6
+   .. 1e-3) and compare protected vs unprotected accuracy (Fig. 6 in small).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config
+from repro.core import cim as cim_lib
+from repro.core.api import ReliabilityConfig
+from repro.data.synthetic import MarkovLM
+from repro.models import lm
+from repro.models.losses import lm_loss
+from repro.training.loop import run_training
+
+
+def evaluate(params, cfg, data, n_batches=4):
+    accs = []
+    for i in range(n_batches):
+        batch = data.batch(1000 + i)
+        logits, _, _ = lm.forward(params, cfg, batch, remat=False)
+        _, metrics = lm_loss(logits, batch["labels"])
+        accs.append(float(metrics["accuracy"]))
+    return sum(accs) / len(accs)
+
+
+def main():
+    cfg = get_config("olmo-1b").reduced()
+    data = MarkovLM(cfg.vocab_size, 64, 16, seed=0)
+
+    # --- 1+2: train with exponent alignment active from the start ----------
+    rel = ReliabilityConfig(mode="align", n_group=8, index=2)
+    run = RunConfig(arch="olmo-1b", steps=150, checkpoint_dir="",
+                    reliability=rel, remat=False, learning_rate=1e-3)
+    print("training 150 steps with frozen-exponent alignment (N=8, index=2)…")
+    state, hist, _ = run_training(cfg, run, iter(data))
+    print(f"  final loss {hist[-1]['loss']:.3f}  train acc {hist[-1]['accuracy']:.3f}")
+
+    base_acc = evaluate(state.params, cfg, data)
+    print(f"  clean eval accuracy: {base_acc:.3f}")
+
+    # --- 3+4: CIM deployment under soft errors -----------------------------
+    key = jax.random.PRNGKey(42)
+    for ber in (1e-6, 1e-4, 1e-3):
+        row = [f"BER {ber:.0e}:"]
+        for protect in ("one4n", "none"):
+            ccfg = cim_lib.CIMConfig(n_group=8, index=2, protect=protect)
+            stores, _ = cim_lib.deploy_pytree(state.params, ccfg)
+            faulty = cim_lib.inject_pytree(key, stores, ber)
+            restored, stats = cim_lib.read_pytree(faulty)
+            acc = evaluate(restored, cfg, data)
+            row.append(f"{protect}: acc {acc:.3f} "
+                       f"(corrected {int(stats['corrected'])}, "
+                       f"uncorrectable {int(stats['uncorrectable'])})")
+        print("  " + "  |  ".join(row))
+    print("One4N keeps accuracy at BERs where unprotected weights degrade — "
+          "the paper's Fig. 6 at container scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving on emulated CIM macros with the BFP Pallas weight path.
+
+Shows the paper's deployment story end to end:
+  * weights exponent-aligned and packed into the macro SRAM image,
+  * static soft-error injection at a configurable BER,
+  * One4N SECDED decode on the read path,
+  * the block-shared-exponent matmul kernel (``kernels/bfp_matmul``)
+    consuming the mantissa plane + shared exponents directly — the dequant
+    happens in VMEM, exactly like the macro's exponent/mantissa split.
+
+Run:  PYTHONPATH=src python examples/serve_cim.py --ber 1e-4
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import align as align_lib
+from repro.core import cim as cim_lib
+from repro.kernels.bfp_matmul import ops as bfp_ops
+from repro.kernels.bfp_matmul import ref as bfp_ref
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ber", type=float, default=1e-4)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--d-in", type=int, default=1024)
+    ap.add_argument("--d-out", type=int, default=512)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (args.d_in, args.d_out)) * 0.05
+    w_al, _ = align_lib.align_matrix(w, align_lib.AlignmentConfig(8, 2))
+
+    # pack the SRAM image two ways: protected and not
+    x = jax.random.normal(jax.random.PRNGKey(1), (args.requests, args.d_in))
+    clean = x @ jnp.asarray(w_al, jnp.float32)
+
+    for protect in ("one4n", "none"):
+        store = cim_lib.pack(w_al, cim_lib.CIMConfig(protect=protect))
+        faulty = cim_lib.inject(jax.random.PRNGKey(2), store, args.ber,
+                                "exponent_sign")
+        w_read, stats = cim_lib.read(faulty)
+        man, exp = bfp_ref.pack_bfp(w_read, 8)
+        out = bfp_ops.bfp_matmul(x, man, exp)   # Pallas kernel (interpret on CPU)
+        err = float(jnp.max(jnp.abs(out - clean)))
+        rel = err / float(jnp.max(jnp.abs(clean)))
+        print(f"protect={protect:6s} ber={args.ber:.0e}  corrected={int(stats['corrected'])} "
+              f"uncorrectable={int(stats['uncorrectable'])}  "
+              f"max output err {err:.3e} (rel {rel:.2e})")
+
+    print("\nKernel sanity: bfp_matmul == x @ dequant(ref) on clean weights:",
+          bool(np.allclose(
+              np.asarray(bfp_ops.bfp_matmul(x, *bfp_ref.pack_bfp(w_al, 8))),
+              np.asarray(clean), rtol=1e-5, atol=1e-5)))
+
+
+if __name__ == "__main__":
+    main()

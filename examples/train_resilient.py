@@ -1,0 +1,97 @@
+"""End-to-end resilient-training driver (paper Fig. 7 scenario).
+
+Trains a decoder LM with the FULL production loop — async checkpointing,
+auto-resume, straggler watchdog — under dynamic soft-error injection
+(fresh bit flips into the stored weights every step), in three arms:
+
+  clean        no faults
+  unprotected  BER on exponent/sign + mantissa (training typically NaNs)
+  one4n        exponent/sign behind One4N SECDED (residual rate), aligned
+               weights + frozen-exponent updates
+
+Presets: --preset demo (default, ~11M params, 60 steps, minutes on CPU)
+         --preset 100m (d_model 768 x 12L ≈ 100M params, 300 steps — the
+         full-scale run for real hardware; identical code path).
+
+Run:  PYTHONPATH=src python examples/train_resilient.py [--preset demo]
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+
+import numpy as np
+
+from repro.configs import RunConfig, get_config
+from repro.core.api import ReliabilityConfig
+from repro.data.synthetic import MarkovLM
+from repro.models import lm
+from repro.training.loop import run_training
+
+PRESETS = {
+    "demo": dict(d_model=256, n_layers=4, d_ff=1024, n_heads=4, n_kv_heads=4,
+                 head_dim=64, vocab_size=512, steps=60, batch=8, seq=128),
+    "100m": dict(d_model=768, n_layers=12, d_ff=3072, n_heads=12,
+                 n_kv_heads=12, head_dim=64, vocab_size=32768, steps=300,
+                 batch=32, seq=512),
+}
+
+
+def arm_config(preset, mode, ber):
+    if mode == "clean":
+        return ReliabilityConfig(mode="align")
+    protect = "one4n" if mode == "one4n" else "none"
+    return ReliabilityConfig(mode="cim", ber=ber, protect=protect,
+                             inject="dynamic",
+                             **({} if mode == "none" else
+                                dict(n_group=8, index=2)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=list(PRESETS))
+    ap.add_argument("--ber", type=float, default=1e-4)
+    ap.add_argument("--ckpt-root", default="/tmp/unicorn_resilient")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    base = get_config("olmo-1b")
+    cfg = dataclasses.replace(
+        base, d_model=p["d_model"], n_layers=p["n_layers"], d_ff=p["d_ff"],
+        n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+        head_dim=p["head_dim"], vocab_size=p["vocab_size"],
+        attn_chunk_threshold=10 ** 9)
+    data = MarkovLM(cfg.vocab_size, p["seq"], p["batch"], seed=0)
+
+    curves = {}
+    for mode in ("clean", "none", "one4n"):
+        ckdir = os.path.join(args.ckpt_root, mode)
+        shutil.rmtree(ckdir, ignore_errors=True)
+        rel = arm_config(p, mode, args.ber)
+        run = RunConfig(arch="olmo-1b", steps=p["steps"], remat=False,
+                        learning_rate=1e-3, checkpoint_dir=ckdir,
+                        checkpoint_every=max(p["steps"] // 4, 10),
+                        reliability=rel)
+        print(f"\n=== arm: {mode} (ber={0 if mode=='clean' else args.ber:.0e}) ===")
+        every = max(p["steps"] // 6, 1)
+
+        def log(s, m, every=every):
+            if s % every == 0 or s == p["steps"] - 1:
+                print(f"  step {s:4d} loss {m['loss']:.4f} acc {m['accuracy']:.3f}")
+
+        state, hist, info = run_training(cfg, run, iter(data), log_fn=log)
+        curves[mode] = [h["loss"] for h in hist]
+        n = lm.param_count(state.params)
+        print(f"  {n/1e6:.1f}M params; stragglers={info['stragglers_flagged']}; "
+              f"checkpoints in {ckdir}")
+
+    print("\n=== summary (final-10-step mean loss) ===")
+    for mode, losses in curves.items():
+        tail = np.asarray(losses[-10:], dtype=np.float64)
+        status = "NaN/diverged" if not np.isfinite(tail).all() else f"{tail.mean():.4f}"
+        print(f"  {mode:12s} {status}")
+    print("Expected (paper Fig. 7): clean ≈ one4n, unprotected diverges/NaNs.")
+
+
+if __name__ == "__main__":
+    main()

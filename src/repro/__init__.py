@@ -1,0 +1,2 @@
+"""repro — Unicorn-CIM reliability framework for JAX (multi-pod)."""
+__version__ = "0.1.0"

@@ -1,0 +1,169 @@
+"""Config system: architecture + shape + reliability + run configs.
+
+Every assigned architecture registers a :class:`ModelConfig` under its id
+(``--arch <id>`` in the launchers). ``reduced()`` derives the same-family
+smoke-test config (small widths/layers/experts) used by the per-arch CPU
+tests; the full config is exercised only via the dry-run (ShapeDtypeStruct,
+no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.api import ReliabilityConfig
+
+# ---------------------------------------------------------------- shapes
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------- model
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # blocks
+    mlp_type: str = "swiglu"         # swiglu | gelu | rwkv_cmix
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm | nonparametric_ln
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_dispatch: str = "a2a"        # a2a: shard_map all-to-all EP (falls back
+                                     #   to "sort" without a mesh/model axis)
+                                     # sort | cumsum: GSPMD dense dispatch
+    attn_impl: str = "cp"            # cp: q stays seq-sharded, gather K/V only
+                                     # tp: heads on "model" (full-seq gather; baseline)
+    mlp_impl: str = "fsdp"           # fsdp: weights gathered, tokens stay sharded
+                                     # tp: Megatron (ff on "model"; baseline)
+    kv_cache_dtype: str = "compute"  # compute | int8 (per-token-head scales)
+    # hybrid / recurrent
+    block_pattern: Tuple[str, ...] = ("attn",)   # cycled over layers
+    d_rnn: int = 0
+    local_window: int = 0            # 0 -> full attention
+    conv_width: int = 4
+    # modality stub
+    modality: str = "text"           # text | vision_stub | audio_stub
+    n_prefix_embeds: int = 0         # vision_stub: # of patch embeddings
+    # numerics
+    rope_theta: float = 1e4
+    compute_dtype: str = "float32"   # smoke default; launcher overrides bf16
+    param_dtype: str = "float32"
+    # attention chunking threshold (q-chunked attention above this seq len)
+    attn_chunk_q: int = 1024
+    attn_chunk_threshold: int = 8192
+    # which shapes this arch supports (long_500k only for sub-quadratic)
+    sub_quadratic: bool = False
+    tag: str = ""                    # provenance note [source; tier]
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def supports_shape(self, shape: ShapeConfig) -> bool:
+        if shape.name == "long_500k" and not self.sub_quadratic:
+            return False
+        return True
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def reduced(self) -> "ModelConfig":
+        """Same-family tiny config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2 if len(self.block_pattern) < 2
+                         else len(self.block_pattern)),
+            d_model=128,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, max(1, min(self.n_heads, 4) // 2))
+            if self.n_heads else 0,
+            head_dim=32 if self.n_heads else 0,
+            d_ff=256,
+            d_ff_expert=64 if self.n_experts else 0,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            vocab_size=256,
+            d_rnn=128 if self.d_rnn else 0,
+            local_window=min(self.local_window, 64) if self.local_window else 0,
+            n_prefix_embeds=min(self.n_prefix_embeds, 4),
+            attn_chunk_threshold=10 ** 9,
+        )
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    from repro import configs as _  # noqa: F401  (triggers registration)
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs():
+    from repro import configs as _  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------- run config
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    arch: str = "olmo-1b"
+    shape: str = "train_4k"
+    steps: int = 100
+    learning_rate: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+    multi_pod: bool = False
+    seq_shard: bool = True
+    remat: bool = True
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    reliability: ReliabilityConfig = ReliabilityConfig()
+    grad_compression: bool = False
+    straggler_factor: float = 3.0

@@ -1,0 +1,189 @@
+"""Exponent alignment — the algorithm half of the co-design (paper §III-C).
+
+Every block of ``N`` weights along the *input channel* (contracting dimension)
+is forced to share one biased exponent ``E_index``:
+
+1. extract the biased exponents of all N weights, sort descending, take the
+   ``index``-th largest (1-based; the paper sweeps index ∈ {1..4}, N ∈ {4,8,16}
+   and finds N=8 with index 2–3 optimal);
+2. the representable range for that exponent is ``(LL, UL) =
+   (2^(E-bias)·M_min, 2^(E-bias)·M_max)`` (Fig. 5);
+3. rescale positive and negative weights of the block *separately* into
+   ``[LL, UL]`` / ``[-UL, -LL]`` via the min–max map of Eq. 4;
+4. round to the FP16 grid — every weight in the block now has exponent E.
+
+Fine-tuning then freezes exponent and sign and updates only mantissas; we
+implement that as a projection (``project_to_block_exponent``) applied after
+each optimizer step, which is mathematically the paper's "update mantissa only"
+scheme (projected gradient descent onto the fixed-exponent manifold).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.bitops import FP16, FloatFormat
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignmentConfig:
+    n_group: int = 8        # N
+    index: int = 2          # 1-based rank of the chosen exponent (paper: 2 or 3)
+    fmt: FloatFormat = FP16
+    group_axis: int = 0     # input-channel axis of 2-D [in, out] weights
+
+
+def _block_view(w: jnp.ndarray, n: int, axis: int) -> jnp.ndarray:
+    """[K, J] -> [K//n (blocks), n, J] (pad K up to a multiple of n).
+
+    The paper groups along the input channel; remaining (<N) weights form an
+    extra block (footnote 2) — we realize that by edge-padding with the last
+    row so padding never changes a real block's exponent choice.
+    """
+    if axis != 0:
+        w = jnp.moveaxis(w, axis, 0)
+    k = w.shape[0]
+    rem = (-k) % n
+    if rem:
+        w = jnp.concatenate([w, jnp.broadcast_to(w[-1:], (rem,) + w.shape[1:])], 0)
+    return w.reshape(-1, n, *w.shape[1:]), k
+
+
+def _block_exponent_moved(w: jnp.ndarray, cfg: AlignmentConfig) -> jnp.ndarray:
+    """E_index per block in moved layout [B, ...other dims]."""
+    blocks, _ = _block_view(w, cfg.n_group, cfg.group_axis)
+    exps = bitops.biased_exponent(blocks, cfg.fmt)           # [B, n, ...]
+    order = jnp.sort(exps.astype(jnp.int32), axis=1)         # ascending
+    idx = jnp.clip(cfg.n_group - cfg.index, 0, cfg.n_group - 1)
+    return order[:, idx]                                      # [B, ...]
+
+
+def block_exponent(w: jnp.ndarray, cfg: AlignmentConfig) -> jnp.ndarray:
+    """Select E_index per block; the block axis sits at ``cfg.group_axis``
+    (i.e. exponents of a [*, K, J] weight are [*, K/N, J]) so exponent planes
+    inherit their weight's sharding layout."""
+    return jnp.moveaxis(_block_exponent_moved(w, cfg), 0, cfg.group_axis)
+
+
+def _rescale_signed(mag: jnp.ndarray, mask: jnp.ndarray, ll: jnp.ndarray,
+                    ul: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 4 min–max rescale of the magnitudes selected by ``mask`` into [LL,UL].
+
+    Degenerate blocks (0 or 1 member of the sign class) map to the midpoint of
+    the range, keeping the block on the shared-exponent grid.
+    """
+    big = jnp.where(mask, mag, -jnp.inf)
+    small = jnp.where(mask, mag, jnp.inf)
+    wmax = jnp.max(big, axis=1, keepdims=True)
+    wmin = jnp.min(small, axis=1, keepdims=True)
+    span = wmax - wmin
+    ok = jnp.isfinite(span) & (span > 0)
+    t = jnp.where(ok, (mag - wmin) / jnp.where(ok, span, 1.0), 0.5)
+    return t * (ul - ll) + ll
+
+
+def align_matrix(w: jnp.ndarray, cfg: AlignmentConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exponent-align one weight matrix.
+
+    Returns (aligned weights, shared biased exponents [K/N-blocks, ...]).
+    Aligned weights are on the fmt grid with |w| ∈ [LL, UL] per block.
+    """
+    orig_dtype = w.dtype
+    blocks, k = _block_view(w, cfg.n_group, cfg.group_axis)   # [B, n, ...]
+    e_moved = _block_exponent_moved(w, cfg)                   # [B, ...]
+    ll, ul = bitops.exponent_range(e_moved, cfg.fmt)
+    ll = ll[:, None]
+    ul = ul[:, None]
+
+    mag = jnp.abs(blocks.astype(jnp.float32))
+    pos = blocks >= 0            # paper: zeros rescale with the positive class
+    neg = ~pos
+    y_pos = _rescale_signed(mag, pos, ll, ul)
+    y_neg = _rescale_signed(mag, neg, ll, ul)
+    y = jnp.where(pos, y_pos, -y_neg)
+    # Round to the storage grid; values stay in [LL, UL] so the exponent holds.
+    y = bitops.quantize_to_format(jnp.clip(jnp.abs(y), ll, ul), cfg.fmt) * jnp.sign(y)
+
+    y = y.reshape(-1, *y.shape[2:])[:k]
+    if cfg.group_axis != 0:
+        y = jnp.moveaxis(y, 0, cfg.group_axis)
+    return y.astype(orig_dtype), jnp.moveaxis(e_moved, 0, cfg.group_axis)
+
+
+def project_to_block_exponent(w: jnp.ndarray, e_shared: jnp.ndarray,
+                              sign0: Optional[jnp.ndarray], cfg: AlignmentConfig) -> jnp.ndarray:
+    """Project weights back onto the frozen (exponent, sign) manifold.
+
+    Applied after every optimizer update during fine-tuning: magnitude clamped
+    into the block's [LL, UL]; sign frozen to ``sign0`` (the paper updates the
+    mantissa only). ``sign0=None`` lets signs float (ablation).
+    ``e_shared`` uses the block-at-group-axis layout of ``block_exponent``.
+    """
+    orig_dtype = w.dtype
+    blocks, k = _block_view(w, cfg.n_group, cfg.group_axis)
+    e_moved = jnp.moveaxis(e_shared, cfg.group_axis, 0)
+    ll, ul = bitops.exponent_range(e_moved, cfg.fmt)
+    mag = jnp.clip(jnp.abs(blocks.astype(jnp.float32)), ll[:, None], ul[:, None])
+    if sign0 is not None:
+        sblocks, _ = _block_view(sign0, cfg.n_group, cfg.group_axis)
+        sgn = jnp.where(sblocks > 0, 1.0, -1.0)
+    else:
+        sgn = jnp.where(blocks >= 0, 1.0, -1.0)
+    y = bitops.quantize_to_format(mag, cfg.fmt) * sgn
+    y = y.reshape(-1, *y.shape[2:])[:k]
+    if cfg.group_axis != 0:
+        y = jnp.moveaxis(y, 0, cfg.group_axis)
+    return y.astype(orig_dtype)
+
+
+def is_alignable(path: tuple, leaf) -> bool:
+    """Leaves the technique applies to: >=2-D float weights (DESIGN.md §4)."""
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+        jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def _leaf_group_axis(leaf: jnp.ndarray) -> int:
+    """Input-channel axis convention: axis -2 for [in, out]-style matrices
+    (stacked-layer params [L, in, out] included); conv kernels are reshaped by
+    callers."""
+    return leaf.ndim - 2
+
+
+def align_pytree(params, cfg: AlignmentConfig, predicate=is_alignable):
+    """Align every eligible leaf; returns (aligned params, exponents pytree)."""
+    def _align(path, leaf):
+        if not predicate(path, leaf):
+            return leaf, None
+        lcfg = dataclasses.replace(cfg, group_axis=_leaf_group_axis(leaf))
+        return align_matrix(leaf, lcfg)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    out_w, out_e = [], []
+    for (path, _), leaf in zip(paths_leaves[0], flat):
+        w, e = _align(path, leaf)
+        out_w.append(w)
+        out_e.append(e)
+    aligned = jax.tree_util.tree_unflatten(treedef, out_w)
+    exps = jax.tree_util.tree_unflatten(treedef, out_e)
+    return aligned, exps
+
+
+def project_pytree(params, exps, signs, cfg: AlignmentConfig, predicate=is_alignable):
+    """Post-update projection over a pytree (see project_to_block_exponent)."""
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    flat_w, treedef = jax.tree_util.tree_flatten(params)
+    flat_e = jax.tree_util.tree_flatten(exps, is_leaf=lambda x: x is None)[0]
+    flat_s = jax.tree_util.tree_flatten(signs, is_leaf=lambda x: x is None)[0]
+    out = []
+    for path, w, e, s in zip(paths, flat_w, flat_e, flat_s):
+        if e is None or not predicate(path, w):
+            out.append(w)
+        else:
+            lcfg = dataclasses.replace(cfg, group_axis=_leaf_group_axis(w))
+            out.append(project_to_block_exponent(w, e, s, lcfg))
+    return jax.tree_util.tree_unflatten(treedef, out)

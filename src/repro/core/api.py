@@ -1,0 +1,56 @@
+"""Framework-level reliability configuration (first-class feature surface).
+
+``ReliabilityConfig`` is carried by every training/serving config in the
+framework; the launcher wires it into the optimizer (frozen-exponent
+projection), the weight path (CIM emulation + ECC) and the fault scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.align import AlignmentConfig
+from repro.core.bitops import FORMATS, FP16
+from repro.core.cim import CIMConfig
+from repro.core.fault import FaultModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityConfig:
+    """mode:
+         'off'   — vanilla training/serving;
+         'align' — exponent-aligned weights + frozen-exponent fine-tuning
+                   (paper §III-C algorithm side; used at dry-run scale);
+         'cim'   — 'align' + bit-accurate CIM store emulation with fault
+                   injection and (optional) One4N ECC on every weight read.
+    """
+
+    mode: str = "off"                 # off | align | cim
+    n_group: int = 8                  # N
+    index: int = 2                    # exponent rank (1-based)
+    protect: str = "one4n"            # one4n | none  (cim mode)
+    ber: float = 0.0                  # bit error rate of the emulated SRAM
+    field: str = "full"               # fault target field
+    inject: str = "dynamic"           # static | dynamic
+    fmt_name: str = "fp16"
+
+    @property
+    def fmt(self):
+        return FORMATS[self.fmt_name]
+
+    @property
+    def align_cfg(self) -> AlignmentConfig:
+        return AlignmentConfig(n_group=self.n_group, index=self.index, fmt=self.fmt)
+
+    @property
+    def cim_cfg(self) -> CIMConfig:
+        return CIMConfig(n_group=self.n_group, index=self.index,
+                         protect=self.protect, fmt=self.fmt)
+
+    @property
+    def fault_model(self) -> FaultModel:
+        return FaultModel(ber=self.ber, field=self.field, fmt=self.fmt,
+                          mode=self.inject)
+
+    def enabled(self) -> bool:
+        return self.mode != "off"

@@ -1,0 +1,202 @@
+"""Bit-level views of IEEE floating point numbers.
+
+The paper's fault model operates on the *stored binary representation* of FP
+weights (sign / exponent / mantissa fields of FP16 in the SRAM CIM macro).
+Everything here is a pure, jit-able bit manipulation on unsigned integer views.
+
+Supported formats: fp16 (paper's), bf16, fp32, fp8_e4m3 / fp8_e5m2 (the paper's
+stated future work).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """Static description of an IEEE-like binary float format."""
+
+    name: str
+    total_bits: int
+    exp_bits: int
+    man_bits: int
+    float_dtype: object  # jnp dtype used for computation
+    uint_dtype: object   # matching-width unsigned integer dtype
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def sign_shift(self) -> int:
+        return self.total_bits - 1
+
+    @property
+    def exp_shift(self) -> int:
+        return self.man_bits
+
+    @property
+    def exp_mask(self) -> int:
+        return ((1 << self.exp_bits) - 1) << self.man_bits
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    @property
+    def sign_mask(self) -> int:
+        return 1 << self.sign_shift
+
+    @property
+    def max_mantissa_value(self) -> float:
+        """M_max in the paper's Fig. 5: largest 1.M value, i.e. 2 - 2^-man_bits."""
+        return 2.0 - 2.0 ** (-self.man_bits)
+
+    def field_bit_positions(self, field: str) -> np.ndarray:
+        """Bit indices (LSB=0) belonging to ``field``."""
+        if field == "sign":
+            return np.array([self.sign_shift], dtype=np.int32)
+        if field == "exponent":
+            return np.arange(self.man_bits, self.man_bits + self.exp_bits, dtype=np.int32)
+        if field == "mantissa":
+            return np.arange(0, self.man_bits, dtype=np.int32)
+        if field == "full":
+            return np.arange(0, self.total_bits, dtype=np.int32)
+        if field == "exponent_sign":  # the One4N-protected payload
+            return np.arange(self.man_bits, self.total_bits, dtype=np.int32)
+        raise ValueError(f"unknown field {field!r}")
+
+
+FP16 = FloatFormat("fp16", 16, 5, 10, jnp.float16, jnp.uint16)
+BF16 = FloatFormat("bf16", 16, 8, 7, jnp.bfloat16, jnp.uint16)
+FP32 = FloatFormat("fp32", 32, 8, 23, jnp.float32, jnp.uint32)
+# fp8 formats (no native jnp dtype guaranteed on CPU -> emulate via fp32 rounding)
+FP8_E4M3 = FloatFormat("fp8_e4m3", 8, 4, 3, jnp.float32, jnp.uint8)
+FP8_E5M2 = FloatFormat("fp8_e5m2", 8, 5, 2, jnp.float32, jnp.uint8)
+
+FORMATS = {f.name: f for f in (FP16, BF16, FP32, FP8_E4M3, FP8_E5M2)}
+
+
+def to_bits(x: jnp.ndarray, fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Bitcast float array -> unsigned integer array of the format's width.
+
+    ``x`` may be stored at higher precision (e.g. fp32 holding exact fp16
+    values); it is rounded to the format's dtype first, which is exact when the
+    values already lie on the format grid. fp8 formats (the paper's stated
+    future work) are packed via field extraction from the fp32 emulation.
+    """
+    if fmt.name.startswith("fp8"):
+        return _pack_fp8(x, fmt)
+    return jnp.asarray(x, fmt.float_dtype).view(fmt.uint_dtype)
+
+
+def from_bits(bits: jnp.ndarray, fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Bitcast unsigned integer array -> float array (in fmt's float dtype)."""
+    if fmt.name.startswith("fp8"):
+        return _unpack_fp8(bits, fmt)
+    return jnp.asarray(bits, fmt.uint_dtype).view(fmt.float_dtype)
+
+
+def _pack_fp8(x: jnp.ndarray, fmt: FloatFormat) -> jnp.ndarray:
+    """fp32 values on the fp8 grid -> uint8 (sign|exp|mantissa). Subnormals
+    flush to zero (matching `_round_to_fp8`); e4m3 uses the extended exponent."""
+    x32 = jnp.asarray(_round_to_fp8(x, fmt), jnp.float32)
+    b32 = x32.view(jnp.uint32)
+    sign = (b32 >> 31) & 1
+    exp32 = ((b32 >> 23) & 0xFF).astype(jnp.int32) - 127          # unbiased
+    man32 = (b32 >> (23 - fmt.man_bits)) & ((1 << fmt.man_bits) - 1)
+    exp8 = jnp.clip(exp32 + fmt.bias, 0, (1 << fmt.exp_bits) - 1)
+    word = (sign << fmt.sign_shift) | (exp8.astype(jnp.uint32) << fmt.man_bits) \
+        | man32
+    return jnp.where(x32 == 0.0, sign << fmt.sign_shift, word).astype(jnp.uint8)
+
+
+def _unpack_fp8(bits: jnp.ndarray, fmt: FloatFormat) -> jnp.ndarray:
+    b = bits.astype(jnp.uint32)
+    sign = jnp.where((b >> fmt.sign_shift) & 1 == 1, -1.0, 1.0)
+    exp = ((b >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)).astype(jnp.float32)
+    man = (b & ((1 << fmt.man_bits) - 1)).astype(jnp.float32)
+    frac = 1.0 + man / (1 << fmt.man_bits)
+    val = sign * jnp.exp2(exp - fmt.bias) * frac
+    return jnp.where(exp == 0, 0.0, val).astype(jnp.float32)  # subnormals -> 0
+
+
+def split_fields(x: jnp.ndarray, fmt: FloatFormat = FP16) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (sign, biased_exponent, mantissa) integer fields."""
+    b = to_bits(x, fmt).astype(jnp.uint32)
+    sign = (b >> fmt.sign_shift) & 1
+    exp = (b >> fmt.exp_shift) & ((1 << fmt.exp_bits) - 1)
+    man = b & fmt.man_mask
+    return sign, exp, man
+
+
+def combine_fields(sign: jnp.ndarray, exp: jnp.ndarray, man: jnp.ndarray,
+                   fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Assemble float values from integer (sign, biased_exponent, mantissa)."""
+    b = ((sign.astype(jnp.uint32) & 1) << fmt.sign_shift) \
+        | ((exp.astype(jnp.uint32) & ((1 << fmt.exp_bits) - 1)) << fmt.exp_shift) \
+        | (man.astype(jnp.uint32) & fmt.man_mask)
+    return from_bits(b.astype(fmt.uint_dtype), fmt)
+
+
+def biased_exponent(x: jnp.ndarray, fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Biased exponent field of each value (0 for zeros/subnormals)."""
+    return split_fields(x, fmt)[1]
+
+
+def exponent_range(biased_exp: jnp.ndarray, fmt: FloatFormat = FP16):
+    """(LL, UL) representable with a fixed biased exponent (paper Fig. 5).
+
+    LL = 2^(E-bias) * 1.0       (mantissa all zeros, M_min)
+    UL = 2^(E-bias) * (2-2^-m)  (mantissa all ones,  M_max)
+    """
+    e = biased_exp.astype(jnp.float32) - fmt.bias
+    scale = jnp.exp2(e)
+    return scale, scale * fmt.max_mantissa_value
+
+
+def quantize_to_format(x: jnp.ndarray, fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Round values to the format grid, returned in float32."""
+    if fmt.name.startswith("fp8"):
+        # Emulated round-to-nearest-even for fp8: clamp exponent+mantissa width.
+        return _round_to_fp8(x, fmt)
+    return jnp.asarray(jnp.asarray(x, fmt.float_dtype), jnp.float32)
+
+
+def _round_to_fp8(x: jnp.ndarray, fmt: FloatFormat) -> jnp.ndarray:
+    x32 = jnp.asarray(x, jnp.float32)
+    # Scale so mantissa width matches, round via float32->bf16-style trick:
+    man_drop = 23 - fmt.man_bits
+    b = x32.view(jnp.uint32)
+    # round-to-nearest-even on the dropped mantissa bits
+    round_bit = jnp.uint32(1) << (man_drop - 1)
+    lsb = (b >> man_drop) & 1
+    b = b + round_bit - 1 + lsb
+    b = b & ~jnp.uint32((1 << man_drop) - 1)
+    y = b.view(jnp.float32)
+    # clamp exponent range; e4m3 reclaims the all-ones exponent (max = 448)
+    max_e = (1 << fmt.exp_bits) - 2 - fmt.bias
+    min_e = 1 - fmt.bias
+    lim_hi = 448.0 if fmt.name == "fp8_e4m3" else 2.0 ** max_e * fmt.max_mantissa_value
+    lim_lo = 2.0 ** min_e
+    y = jnp.clip(y, -lim_hi, lim_hi)
+    y = jnp.where(jnp.abs(y) < lim_lo, 0.0, y)
+    return jnp.where(x32 == 0, 0.0, y)
+
+
+def unpack_bits(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """uint array [...,] -> bit array [..., n_bits] (LSB first), uint8 in {0,1}."""
+    words = words.astype(jnp.uint32)
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    return ((words[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def pack_bits(bits: jnp.ndarray, dtype=jnp.uint32) -> jnp.ndarray:
+    """bit array [..., n_bits] (LSB first) -> uint array [...]."""
+    n_bits = bits.shape[-1]
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) << shifts, axis=-1).astype(dtype)

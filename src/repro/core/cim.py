@@ -1,0 +1,270 @@
+"""Bit-accurate emulation of the Unicorn-CIM weight memory (paper Fig. 3/4).
+
+A :class:`CIMStore` holds one weight matrix the way the macro's SRAM does:
+
+* a mantissa plane (10 bits per weight) — the Mantissa Multiplication Array;
+* ONE shared exponent per ``N x 16-weight`` block — the reduced Exponent
+  Summation Array (8x fewer exponent bit cells for N=8, Table III);
+* per-weight sign bits;
+* for ``protect='one4n'``: the exponent row + sign bits of each block packed
+  into SECDED codewords (:class:`~repro.core.ecc.One4NRowCodec`) — check bits
+  live in SRAM next to the payload, exactly as in Fig. 4 ①;
+* for ``protect='none'``: raw exponent/sign bit cells (the unprotected
+  baseline of Fig. 6).
+
+``inject`` flips stored bits (including check bits — they are SRAM cells too)
+at a given BER; ``read`` runs the ECC decode path (Fig. 4 ②③) and
+reconstructs FP16 weights. Static injection = inject once then read many;
+dynamic injection = fresh inject before every read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import align as align_lib
+from repro.core import bitops
+from repro.core.bitops import FP16, FloatFormat
+from repro.core.ecc import One4NRowCodec
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    n_group: int = 8            # N
+    index: int = 2              # exponent rank used at alignment time
+    protect: str = "one4n"      # 'one4n' | 'per_weight' | 'none'
+                                # per_weight = Table III "traditional ECC for
+                                # exponent & sign": SECDED(6) per weight,
+                                # 5 redundant bits each (83.3% SRAM overhead)
+    fmt: FloatFormat = FP16
+    row_weights: int = 16       # weights per SRAM row (256-bit rows of FP16)
+
+    @property
+    def codec(self) -> One4NRowCodec:
+        return One4NRowCodec(n_group=self.n_group, row_weights=self.row_weights,
+                             exp_bits=self.fmt.exp_bits,
+                             sign_bits_per_row=self.row_weights)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CIMStore:
+    """Packed SRAM image of one [K, J] weight matrix."""
+
+    man: jnp.ndarray                      # uint16 [K_pad, J_pad], 10-bit mantissas
+    sign: jnp.ndarray                     # uint8  [K_pad, J_pad] (authoritative when protect='none')
+    exp: jnp.ndarray                      # uint8  [B, J_pad]     (authoritative when protect='none')
+    codewords: Optional[jnp.ndarray]      # uint8 bits [B, G, n_seg, n_code] or None
+    shape: Tuple[int, int]                # logical (K, J)
+    cfg: CIMConfig
+
+    def tree_flatten(self):
+        children = (self.man, self.sign, self.exp, self.codewords)
+        return children, (self.shape, self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        man, sign, exp, codewords = children
+        shape, cfg = aux
+        return cls(man, sign, exp, codewords, shape, cfg)
+
+    @property
+    def stored_bits(self) -> int:
+        """Total SRAM bits of this image (for the overhead accounting)."""
+        n = int(self.man.size) * self.cfg.fmt.man_bits + int(self.sign.size)
+        if self.codewords is not None:
+            n += int(self.codewords.size)          # payload+check bits
+        else:
+            n += int(self.exp.size) * self.cfg.fmt.exp_bits
+        return n
+
+
+def _pad_to(x: jnp.ndarray, k: int, j: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, k - x.shape[0]), (0, j - x.shape[1])))
+
+
+def pack(w: jnp.ndarray, cfg: CIMConfig) -> CIMStore:
+    """Pack an exponent-aligned [K, J] weight matrix into its SRAM image.
+
+    Weights must already be aligned (``align_matrix``): every N-block along K
+    shares a biased exponent. The shared exponent is taken as the block max —
+    exact for aligned input.
+    """
+    assert w.ndim == 2, "pack() operates on 2-D [in, out] matrices"
+    k, j = w.shape
+    n, rw = cfg.n_group, cfg.row_weights
+    k_pad = math.ceil(k / n) * n
+    j_pad = math.ceil(j / rw) * rw
+    b = k_pad // n
+    g = j_pad // rw
+
+    s, e, m = bitops.split_fields(w.astype(jnp.float32), cfg.fmt)
+    s = _pad_to(s.astype(jnp.uint8), k_pad, j_pad)
+    e = _pad_to(e.astype(jnp.uint8), k_pad, j_pad)
+    m = _pad_to(m.astype(jnp.uint16), k_pad, j_pad)
+
+    e_block = jnp.max(e.reshape(b, n, j_pad), axis=1)          # [B, J_pad]
+    codewords = None
+    if cfg.protect == "one4n":
+        codec = cfg.codec
+        exp_rows = e_block.reshape(b, g, rw)                    # [B, G, 16]
+        signs = s.reshape(b, n, g, rw).transpose(0, 2, 1, 3)    # [B, G, N, 16]
+        codewords = codec.encode(exp_rows, signs)               # [B, G, seg, n]
+    elif cfg.protect == "per_weight":
+        # traditional scheme: one SECDED word per weight over its 6
+        # sign+exponent bits (per-weight exponents — no alignment assumed)
+        from repro.core.bitops import unpack_bits
+        from repro.core.ecc import SecdedCode
+        payload = jnp.concatenate(
+            [unpack_bits(e, cfg.fmt.exp_bits),
+             s[..., None].astype(jnp.uint8)], axis=-1)          # [K, J, 6]
+        codewords = SecdedCode(cfg.fmt.exp_bits + 1).encode(payload)
+    return CIMStore(man=m, sign=s, exp=e_block, codewords=codewords,
+                    shape=(k, j), cfg=cfg)
+
+
+def inject(key: jax.Array, store: CIMStore, ber: float,
+           field: str = "full") -> CIMStore:
+    """Flip stored bits at rate ``ber``; ``field`` restricts the target cells.
+
+    field ∈ {'full', 'mantissa', 'exponent_sign'}: the macro stores mantissas,
+    and (exponent+sign [+check]) rows — the paper's protected path.
+    """
+    if isinstance(ber, (int, float)) and ber <= 0.0:
+        return store
+    k_man, k_meta, k_cw = jax.random.split(key, 3)
+    man, sign, exp, cw = store.man, store.sign, store.exp, store.codewords
+    mb = store.cfg.fmt.man_bits
+
+    if field in ("full", "mantissa"):
+        flips = jax.random.bernoulli(k_man, ber, man.shape + (mb,))
+        mask = jnp.sum(flips.astype(jnp.uint32) << jnp.arange(mb, dtype=jnp.uint32),
+                       axis=-1).astype(jnp.uint16)
+        man = man ^ mask
+
+    if field in ("full", "exponent_sign"):
+        if cw is not None:
+            # Protected mode: exponent+sign live ONLY inside the codewords
+            # (payload and check bits alike are SRAM cells).
+            flips = jax.random.bernoulli(k_cw, ber, cw.shape)
+            cw = cw ^ flips.astype(jnp.uint8)
+        else:
+            eb = store.cfg.fmt.exp_bits
+            eflips = jax.random.bernoulli(k_meta, ber, exp.shape + (eb,))
+            emask = jnp.sum(eflips.astype(jnp.uint32) << jnp.arange(eb, dtype=jnp.uint32),
+                            axis=-1).astype(jnp.uint8)
+            exp = exp ^ emask
+            sflips = jax.random.bernoulli(k_cw, ber, sign.shape)
+            sign = sign ^ sflips.astype(jnp.uint8)
+
+    return CIMStore(man=man, sign=sign, exp=exp, codewords=cw,
+                    shape=store.shape, cfg=store.cfg)
+
+
+def read(store: CIMStore):
+    """ECC decode (if protected) + FP reconstruction.
+
+    Returns (weights float32 [K, J], stats) with
+    stats = {'corrected': #rows fixed, 'uncorrectable': #rows with >=2 errors}.
+    """
+    cfg = store.cfg
+    n, rw = cfg.n_group, cfg.row_weights
+    k_pad, j_pad = store.man.shape
+    b, g = k_pad // n, j_pad // rw
+
+    if store.codewords is not None and cfg.protect == "per_weight":
+        from repro.core.bitops import pack_bits
+        from repro.core.ecc import SecdedCode
+        data, status = SecdedCode(cfg.fmt.exp_bits + 1).decode(store.codewords)
+        e_full = pack_bits(data[..., :cfg.fmt.exp_bits], jnp.uint8)
+        sign = data[..., cfg.fmt.exp_bits]
+        w = bitops.combine_fields(sign.astype(jnp.uint32),
+                                  e_full.astype(jnp.uint32),
+                                  store.man.astype(jnp.uint32), cfg.fmt)
+        k, j = store.shape
+        return jnp.asarray(w[:k, :j], jnp.float32), \
+            {"corrected": jnp.sum(status == 1),
+             "uncorrectable": jnp.sum(status == 2)}
+    if store.codewords is not None:
+        exp_rows, signs, status = cfg.codec.decode(store.codewords)
+        e_block = exp_rows.reshape(b, j_pad)
+        sign = signs.transpose(0, 2, 1, 3).reshape(k_pad, j_pad)
+        stats = {"corrected": jnp.sum(status == 1),
+                 "uncorrectable": jnp.sum(status == 2)}
+    else:
+        e_block = store.exp
+        sign = store.sign
+        stats = {"corrected": jnp.zeros((), jnp.int32),
+                 "uncorrectable": jnp.zeros((), jnp.int32)}
+
+    e_full = jnp.repeat(e_block, n, axis=0)                     # [K_pad, J_pad]
+    w = bitops.combine_fields(sign.astype(jnp.uint32), e_full.astype(jnp.uint32),
+                              store.man.astype(jnp.uint32), cfg.fmt)
+    k, j = store.shape
+    return jnp.asarray(w[:k, :j], jnp.float32), stats
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level API: deploy a whole model onto emulated CIM macros.
+# ---------------------------------------------------------------------------
+
+def _deployable(path, leaf) -> bool:
+    return hasattr(leaf, "ndim") and leaf.ndim == 2 and \
+        jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def deploy_pytree(params, cfg: CIMConfig, align_cfg=None, predicate=_deployable):
+    """Align (optionally) + pack every 2-D weight; other leaves pass through.
+
+    Returns (stores_pytree, aligned_params). Leaves >2-D are reshaped to 2-D
+    by callers (conv kernels etc.) before deployment.
+    """
+    if align_cfg is None:
+        align_cfg = align_lib.AlignmentConfig(n_group=cfg.n_group, index=cfg.index,
+                                              fmt=cfg.fmt)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    stores, aligned = [], []
+    for path, leaf in zip(paths, flat):
+        if predicate(path, leaf):
+            w_al, _ = align_lib.align_matrix(leaf, align_cfg)
+            stores.append(pack(w_al, cfg))
+            aligned.append(w_al)
+        else:
+            stores.append(leaf)
+            aligned.append(leaf)
+    return (jax.tree_util.tree_unflatten(treedef, stores),
+            jax.tree_util.tree_unflatten(treedef, aligned))
+
+
+def _is_store(x) -> bool:
+    return isinstance(x, CIMStore)
+
+
+def inject_pytree(key, stores, ber: float, field: str = "full"):
+    """Fresh faults into every store of a deployed model."""
+    flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=_is_store)
+    keys = jax.random.split(key, len(flat))
+    out = [inject(k, s, ber, field) if _is_store(s) else s
+           for k, s in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def read_pytree(stores):
+    """Decode every store -> (params, aggregated stats)."""
+    flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=_is_store)
+    out, corrected, uncorrectable = [], 0, 0
+    for s in flat:
+        if _is_store(s):
+            w, st = read(s)
+            out.append(w)
+            corrected = corrected + st["corrected"]
+            uncorrectable = uncorrectable + st["uncorrectable"]
+        else:
+            out.append(s)
+    params = jax.tree_util.tree_unflatten(treedef, out)
+    return params, {"corrected": corrected, "uncorrectable": uncorrectable}

@@ -1,0 +1,224 @@
+"""Error-correcting codes for the One4N scheme (paper §III-B, Fig. 4).
+
+Two layers:
+
+* :class:`SecdedCode` — a single-error-correct / double-error-detect extended
+  Hamming code over ``d`` data bits, vectorized over leading axes.  The decode
+  syndrome follows the paper's Fig. 4 ③ semantics exactly:
+
+    - ``R == 0``                      → no error,
+    - parity bit of R set (R[7])      → single-bit error at position R[6:0],
+      corrected by flipping that bit,
+    - R[7] == 0 but R[6:0] != 0       → ≥2-bit error, uncorrectable (detected).
+
+* :class:`One4NRowCodec` — the paper's row-based payload layout: for each
+  ``N×(16 weights)`` block, the protected payload is the shared-exponent row
+  (16 × exp_bits) followed by the N×16 sign bits (Eq. 3:
+  ``TB = exp_bits·16 + N·16``).  The payload is split into
+  ``ceil(TB/104)`` rows ("divided into two rows for encoding" for N=8), each
+  SECDED-encoded with an 8-bit redundancy (7 Hamming + 1 overall parity).
+
+Everything is implemented as jit-able jnp bit arithmetic; generator/parity-check
+structure is precomputed with numpy at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Max data bits covered by one SECDED row with a 7-bit Hamming syndrome
+# (2^7 = 128 >= 104 + 7 + 1). The paper's N=8 block (208 payload bits) splits
+# into exactly two 104-bit rows with 8 redundant bits each.
+MAX_SEGMENT_DATA_BITS = 104
+
+
+def _hamming_r(d: int) -> int:
+    r = 1
+    while (1 << r) < d + r + 1:
+        r += 1
+    return r
+
+
+@functools.lru_cache(maxsize=None)
+def _secded_tables(d: int):
+    """Precompute position layout + parity-check matrix for d data bits."""
+    r = _hamming_r(d)
+    n = d + r                      # codeword length before overall parity
+    positions = np.arange(1, n + 1)
+    is_parity = (positions & (positions - 1)) == 0  # powers of two
+    data_pos = positions[~is_parity]                # length d
+    parity_pos = positions[is_parity]               # length r
+    # H[j, i] = bit j of position (i+1): syndrome bit j = XOR of bits whose
+    # position has bit j set.
+    H = ((positions[None, :] >> np.arange(r)[:, None]) & 1).astype(np.int32)
+    # encode matrix: parity bit at position 2^j = XOR of *data* bits whose
+    # position has bit j set (parity positions excluded from their own sum).
+    enc = H[:, ~is_parity]                          # [r, d]
+    # scatter indices: codeword[pos-1]
+    return r, n, data_pos - 1, parity_pos - 1, H, enc
+
+
+@dataclasses.dataclass(frozen=True)
+class SecdedCode:
+    """Extended Hamming SECDED over ``data_bits`` bits (vectorized)."""
+
+    data_bits: int
+
+    @property
+    def r(self) -> int:
+        return _secded_tables(self.data_bits)[0]
+
+    @property
+    def n(self) -> int:
+        """Codeword length including the overall parity bit."""
+        return _secded_tables(self.data_bits)[1] + 1
+
+    @property
+    def redundant_bits(self) -> int:
+        return self.r + 1
+
+    def encode(self, data: jnp.ndarray) -> jnp.ndarray:
+        """data [..., d] bits in {0,1} -> codeword [..., n] (overall parity last)."""
+        r, n, data_idx, parity_idx, _, enc = _secded_tables(self.data_bits)
+        data = data.astype(jnp.uint8)
+        parity = (data.astype(jnp.int32) @ jnp.asarray(enc.T)) & 1  # [..., r]
+        code = jnp.zeros(data.shape[:-1] + (n,), jnp.uint8)
+        code = code.at[..., jnp.asarray(data_idx)].set(data)
+        code = code.at[..., jnp.asarray(parity_idx)].set(parity.astype(jnp.uint8))
+        overall = jnp.sum(code, axis=-1, dtype=jnp.int32) & 1
+        return jnp.concatenate([code, overall[..., None].astype(jnp.uint8)], axis=-1)
+
+    def decode(self, code: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """codeword [..., n] -> (data [..., d], status [...]).
+
+        status: 0 = clean, 1 = corrected single error, 2 = uncorrectable (>=2).
+        """
+        r, n, data_idx, _, H, _ = _secded_tables(self.data_bits)
+        body = code[..., :n].astype(jnp.int32)
+        overall_bit = code[..., n].astype(jnp.int32)
+        syndrome_bits = (body @ jnp.asarray(H.T)) & 1            # [..., r]
+        pos = jnp.sum(syndrome_bits << jnp.arange(r), axis=-1)   # R[6:0], 1-based
+        parity = (jnp.sum(body, axis=-1) + overall_bit) & 1      # R[7]
+
+        clean = (pos == 0) & (parity == 0)
+        single = parity == 1          # odd number of flips -> assume 1, correctable
+        double = (parity == 0) & (pos > 0)
+
+        # Correct: flip bit at position ``pos`` (1-based). pos==0 with parity==1
+        # means the overall parity bit itself flipped — body untouched.
+        flip = (jnp.arange(1, n + 1) == pos[..., None]) & single[..., None]
+        corrected = body ^ flip.astype(jnp.int32)
+        data = corrected[..., jnp.asarray(data_idx)].astype(jnp.uint8)
+        status = jnp.where(clean, 0, jnp.where(double, 2, 1)).astype(jnp.int32)
+        return data, status
+
+
+@dataclasses.dataclass(frozen=True)
+class One4NRowCodec:
+    """Row-based One4N payload codec for an ``N x (row_weights)`` weight block.
+
+    Payload per block & 16-weight row group (paper Eq. 3):
+      ``[exp_0 .. exp_15] (exp_bits each)  ||  sign bits (N x row_weights)``.
+    """
+
+    n_group: int = 8          # N — weights sharing one exponent (input channel)
+    row_weights: int = 16     # FP16 weights per 256-bit SRAM row
+    exp_bits: int = 5
+    sign_bits_per_row: int = 16
+
+    @property
+    def payload_bits(self) -> int:
+        # TB = exp_bits * row_weights + N * row_weights (Eq. 3 with 16 weights/row)
+        return self.exp_bits * self.row_weights + self.n_group * self.sign_bits_per_row
+
+    @property
+    def n_segments(self) -> int:
+        return math.ceil(self.payload_bits / MAX_SEGMENT_DATA_BITS)
+
+    @property
+    def segment_bits(self) -> int:
+        return math.ceil(self.payload_bits / self.n_segments)
+
+    @property
+    def code(self) -> SecdedCode:
+        return SecdedCode(self.segment_bits)
+
+    @property
+    def redundant_bits_per_block(self) -> int:
+        return self.n_segments * self.code.redundant_bits
+
+    @property
+    def padded_bits(self) -> int:
+        return self.n_segments * self.segment_bits
+
+    def build_payload(self, exp_row: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+        """exp_row [..., 16] ints, signs [..., N, 16] bits -> payload bits."""
+        from repro.core.bitops import unpack_bits
+        exp_bits = unpack_bits(exp_row, self.exp_bits)                  # [...,16,5]
+        exp_flat = exp_bits.reshape(exp_bits.shape[:-2] + (-1,))
+        sign_flat = signs.astype(jnp.uint8).reshape(signs.shape[:-2] + (-1,))
+        payload = jnp.concatenate([exp_flat, sign_flat], axis=-1)
+        pad = self.padded_bits - self.payload_bits
+        if pad:
+            payload = jnp.concatenate(
+                [payload, jnp.zeros(payload.shape[:-1] + (pad,), jnp.uint8)], axis=-1)
+        return payload
+
+    def split_payload(self, payload: jnp.ndarray):
+        """Inverse of build_payload -> (exp_row [...,16], signs [..., N, 16])."""
+        from repro.core.bitops import pack_bits
+        eb = self.exp_bits * self.row_weights
+        exp_flat = payload[..., :eb].reshape(payload.shape[:-1] + (self.row_weights, self.exp_bits))
+        exp_row = pack_bits(exp_flat, jnp.uint8)
+        sb = self.n_group * self.sign_bits_per_row
+        signs = payload[..., eb:eb + sb].reshape(
+            payload.shape[:-1] + (self.n_group, self.sign_bits_per_row)).astype(jnp.uint8)
+        return exp_row, signs
+
+    def encode(self, exp_row: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+        """-> codewords [..., n_segments, code.n] bits."""
+        payload = self.build_payload(exp_row, signs)
+        segs = payload.reshape(payload.shape[:-1] + (self.n_segments, self.segment_bits))
+        return self.code.encode(segs)
+
+    def decode(self, codewords: jnp.ndarray):
+        """-> (exp_row [...,16], signs [...,N,16], status [..., n_segments])."""
+        data, status = self.code.decode(codewords)
+        payload = data.reshape(data.shape[:-2] + (self.padded_bits,))
+        payload = payload[..., :self.payload_bits] if self.padded_bits != self.payload_bits \
+            else payload
+        exp_row, signs = self.split_payload(payload)
+        return exp_row, signs, status
+
+
+def residual_ber_after_secded(ber: float, codeword_bits: int = 112) -> float:
+    """Post-ECC residual error rate per protected bit.
+
+    SECDED corrects one flip per codeword; a bit stays wrong only when its
+    codeword took >=2 flips. With n-bit codewords and i.i.d. flips at ``ber``:
+        P(>=2 flips) = 1 - (1-p)^n - n p (1-p)^(n-1)
+    and conditional on that, ~2 of n bits are wrong. Used for closed-form
+    injection at scales where bit-plane emulation is impractical (launcher
+    dynamic mode); the bit-accurate path is ``repro.core.cim``.
+    """
+    import math as _math
+    n, p = codeword_bits, ber
+    if p <= 0:
+        return 0.0
+    p_ge2 = 1.0 - (1.0 - p) ** n - n * p * (1.0 - p) ** (n - 1)
+    return p_ge2 * 2.0 / n
+
+
+def secded_redundant_bits(protected_bits: int) -> int:
+    """SECDED redundancy (Hamming r + overall parity) for a payload.
+
+    Matches every count in the paper: 6-bit sign+exponent -> 5 (§III-A2),
+    10-bit mantissa -> 5, 96-bit unified row -> 8 (§III-B1), 104-bit One4N
+    segment -> 8, 160-bit mantissa row -> 9 (Table III row-based full-num).
+    """
+    return _hamming_r(protected_bits) + 1

@@ -1,0 +1,103 @@
+"""Fault-injection framework for FP DNN weights (paper §III-A).
+
+Implements the paper's two injection modes on arbitrary weight pytrees:
+
+* **static injection** — flip bits once in the deployed weights (inference on a
+  CIM macro whose SRAM cells hold the model).
+* **dynamic injection** — flip fresh bits on *every access* (training, where
+  weights are re-read each step and soft errors recur).
+
+Faults are i.i.d. Bernoulli(BER) per *stored bit*, restricted to a field of the
+FP representation: ``sign`` / ``exponent`` / ``mantissa`` / ``full`` (and
+``exponent_sign``, the One4N-protected payload). This mirrors Fig. 2's
+per-field characterization axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.bitops import FP16, FloatFormat
+
+
+def field_flip_mask(key: jax.Array, shape, ber: float, field: str,
+                    fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """XOR mask (uint) with each bit of ``field`` set i.i.d. w.p. ``ber``."""
+    positions = fmt.field_bit_positions(field)
+    flips = jax.random.bernoulli(key, ber, tuple(shape) + (len(positions),))
+    weights = jnp.asarray((1 << positions.astype(np.int64)), jnp.uint32)
+    mask = jnp.sum(flips.astype(jnp.uint32) * weights, axis=-1)
+    return mask.astype(fmt.uint_dtype)
+
+
+def inject(key: jax.Array, x: jnp.ndarray, ber: float, field: str = "full",
+           fmt: FloatFormat = FP16) -> jnp.ndarray:
+    """Flip bits of ``x``'s ``fmt`` representation at rate ``ber`` in ``field``.
+
+    ``x`` may be float32 storage of fp16-grid values; the result is returned in
+    ``x``'s original dtype (values exactly on the fmt grid).
+    """
+    if isinstance(ber, (int, float)) and ber <= 0.0:
+        return x
+    bits = bitops.to_bits(x, fmt)
+    mask = field_flip_mask(key, x.shape, ber, field, fmt)
+    corrupted = bitops.from_bits(bits ^ mask, fmt)
+    return jnp.asarray(corrupted, x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Configuration of the memory-error model.
+
+    ber:     bit error rate (probability of a stored bit flipping per access).
+    field:   which FP field faults land in (characterization axis).
+    fmt:     stored number format (paper: fp16).
+    mode:    'static' (inject once into deployed weights) or
+             'dynamic' (fresh faults every weight access / train step).
+    """
+
+    ber: float = 0.0
+    field: str = "full"
+    fmt: FloatFormat = FP16
+    mode: str = "static"
+
+    def is_active(self) -> bool:
+        return self.ber > 0.0
+
+
+def _is_injectable(path: tuple, leaf) -> bool:
+    """Weights (>=2-D float leaves) live in the CIM macro; vectors (norm scales,
+    biases, decay parameters) live in protected register files per DESIGN.md."""
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def inject_pytree(key: jax.Array, params, model: FaultModel,
+                  predicate=_is_injectable, ber_override=None):
+    """Static/dynamic injection over every injectable leaf of a pytree.
+
+    ``ber_override`` may be a traced scalar (jit-able BER sweeps)."""
+    if ber_override is None and not model.is_active():
+        return params
+    ber = model.ber if ber_override is None else ber_override
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    keys = jax.random.split(key, len(leaves_with_paths))
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    paths = [p for p, _ in leaves_with_paths]
+    out = []
+    for k, path, leaf in zip(keys, paths, flat):
+        if predicate(path, leaf):
+            out.append(inject(k, leaf, ber, model.field, model.fmt))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def expected_flips(n_values: int, ber: float, field: str, fmt: FloatFormat = FP16) -> float:
+    """E[#flipped bits] — used by tests and the characterization report."""
+    return float(n_values) * len(fmt.field_bit_positions(field)) * ber

@@ -1,0 +1,41 @@
+"""Int8 error-feedback gradient compression (cross-pod DCN traffic reducer).
+
+Per-tensor symmetric int8 quantization with an error-feedback accumulator
+(EF-SGD): the quantization residual is added back into the next step's
+gradient, preserving convergence. On a real fleet the int8 payload is what
+crosses the pod-to-pod DCN all-reduce (4x fewer bytes than fp32); here the
+quantize->dequantize pair is applied in-graph so the numerics (and the tests)
+are identical to the deployed path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, ef_error):
+    """grads+EF -> int8 roundtrip -> (decompressed grads, new EF residual)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e

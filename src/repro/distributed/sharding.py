@@ -1,0 +1,182 @@
+"""Sharding rules: logical axes -> mesh axes (DP / FSDP / TP / SP / EP).
+
+The framework uses GSPMD via ``jax.jit`` + ``with_sharding_constraint``; this
+module is the single place where logical tensor axes are mapped onto the
+production mesh ``("pod", "data", "model")`` (multi-pod) / ``("data","model")``
+(single-pod):
+
+* ``batch``   -> ("pod", "data")   — data parallelism (pod = outer DP axis)
+* ``seq``     -> "model"           — sequence parallelism for the residual
+                                     stream between layers (activations of the
+                                     scanned layer stack are sharded both ways)
+* ``heads`` / ``ff`` / ``vocab`` / ``experts`` -> "model"  — tensor/expert par.
+* ``fsdp``    -> "data"            — parameters, Adam moments and master
+                                     weights are fully sharded (ZeRO-3 style)
+
+A module-level "current mesh" keeps model code mesh-agnostic: with no mesh set
+(CPU unit tests) every constraint is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: Optional[Mesh] = None
+_SEQ_SHARD: bool = True   # sequence parallelism on the residual stream
+
+
+def set_mesh(mesh: Optional[Mesh], seq_shard: bool = True) -> None:
+    global _CURRENT_MESH, _SEQ_SHARD
+    _CURRENT_MESH = mesh
+    _SEQ_SHARD = seq_shard
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], seq_shard: bool = True):
+    prev, prev_sp = _CURRENT_MESH, _SEQ_SHARD
+    set_mesh(mesh, seq_shard)
+    try:
+        yield
+    finally:
+        set_mesh(prev, prev_sp)
+
+
+def _axes() -> Tuple[str, ...]:
+    return tuple(_CURRENT_MESH.axis_names) if _CURRENT_MESH is not None else ()
+
+
+def batch_axes():
+    ax = _axes()
+    got = tuple(a for a in ("pod", "data") if a in ax)
+    return got if got else None
+
+
+def model_axis():
+    return "model" if "model" in _axes() else None
+
+
+def seq_axis():
+    return "model" if (_SEQ_SHARD and "model" in _axes()) else None
+
+
+def logical(*names) -> P:
+    """Build a PartitionSpec from logical axis names (None passes through)."""
+    table = {
+        "batch": batch_axes(),
+        "seq": seq_axis(),
+        "heads": model_axis(),
+        "kv_heads": model_axis(),
+        "kv_seq": model_axis(),   # flash-decoding: cache sharded over sequence
+        "ff": model_axis(),
+        "vocab": model_axis(),
+        "experts": model_axis(),
+        "fsdp": "data" if "data" in _axes() else None,
+        None: None,
+    }
+    return P(*[table[n] for n in names])
+
+
+def axis_size(name: str) -> int:
+    if _CURRENT_MESH is None or name not in _axes():
+        return 1
+    return _CURRENT_MESH.shape[name]
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop spec axes whose dimension is not divisible by the mesh extent.
+
+    jit in_shardings (unlike constraints) require exact divisibility — e.g. a
+    GQA cache with kv=8 cannot be head-sharded on a 16-way model axis, and
+    batch=1 (long_500k) cannot be data-sharded.
+    """
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def shard(x, *names):
+    """Apply a logical sharding constraint (identity when no mesh is set)."""
+    if _CURRENT_MESH is None:
+        return x
+    spec = logical(*names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CURRENT_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (name-based).
+#
+# Leaf path names follow the model zoo's conventions. ``tail`` is the spec of
+# the trailing dims; leading dims (e.g. the scan-stacked layer axis) get None.
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = [
+    # embeddings (order matters: "embed$" would also match "unembed")
+    (r"unembed$",          ("fsdp", "vocab")),
+    (r"(^|/)embed$",       ("vocab", "fsdp")),
+    # attention (merged-head 2-D layouts [D, H*hd] / [H*hd, D])
+    (r"(wq|wk|wv|wkv)$",   ("fsdp", "heads")),
+    (r"wo$",               ("heads", "fsdp")),
+    # dense mlp
+    (r"(w_gate|w_in|w_up)$", ("fsdp", "ff")),
+    (r"w_out$",            ("ff", "fsdp")),
+    # MoE: experts on "model" (EP); router replicated over model
+    (r"moe_win$",          ("experts", "fsdp", None)),
+    (r"moe_wgate$",        ("experts", "fsdp", None)),
+    (r"moe_wout$",         ("experts", None, "fsdp")),
+    (r"router$",           ("fsdp", None)),
+    # rwkv6 / rg-lru projections
+    (r"(w_r|w_k|w_v|w_g|w_x|w_gate_br)$", ("fsdp", "heads")),
+    (r"(w_o|w_down)$",     ("heads", "fsdp")),
+    # small lora/mix/decay/norm/bias params: replicated (negligible bytes)
+]
+
+
+def param_spec(path: str, ndim: int) -> P:
+    for pattern, tail in _PARAM_RULES:
+        if re.search(pattern, path):
+            tail_spec = logical(*tail)
+            if len(tail_spec) > ndim:   # e.g. 2-D rule on 1-D leaf
+                break
+            return P(*((None,) * (ndim - len(tail_spec)) + tuple(tail_spec)))
+    return P(*((None,) * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params) -> object:
+    """Pytree of PartitionSpecs matching ``params`` (by leaf path rules)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.ndim), params)
+
+
+def param_shardings(mesh: Mesh, params):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params),
+        is_leaf=lambda x: isinstance(x, P))

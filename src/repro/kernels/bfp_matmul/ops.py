@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the BFP matmul kernel.
+
+``interpret`` defaults to True off-TPU (this container validates the kernel
+body on CPU); on a TPU runtime pass ``interpret=False`` for the Mosaic path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfp_matmul.kernel import bfp_matmul_pallas
+from repro.kernels.bfp_matmul.ref import bfp_matmul_ref, dequant_ref, pack_bfp  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_group", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def bfp_matmul(x, man, exp, *, n_group: int = 8, block_m: int = 128,
+               block_n: int = 128, block_k: int = 512,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bfp_matmul_pallas(x, man, exp, n_group=n_group, block_m=block_m,
+                             block_n=block_n, block_k=block_k,
+                             interpret=interpret)
+
+
+def cim_linear(x, man, exp, *, n_group: int = 8, use_kernel: bool = True):
+    """Linear layer consuming the CIM SRAM image directly (no fp16
+    rematerialization in HBM) — the serving-path integration point."""
+    if use_kernel:
+        b_shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        m = x2.shape[0]
+        bm = 128 if m % 128 == 0 else (m if m <= 128 else None)
+        if bm is not None and man.shape[0] % 512 == 0 and man.shape[1] % 128 == 0:
+            out = bfp_matmul(x2, man, exp, n_group=n_group, block_m=bm)
+            return out.reshape(*b_shape, man.shape[1])
+    return x @ dequant_ref(man, exp, n_group)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the BFP (One4N) matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+
+def pack_bfp(w_aligned: jnp.ndarray, n_group: int = 8):
+    """Exponent-aligned fp16-grid weights [K, N] -> (man uint16, exp uint8).
+
+    man packs sign (bit 15) and the 10-bit mantissa; exp holds the shared
+    biased exponent per [n_group, :] block (block max — exact for aligned w).
+    """
+    k, n = w_aligned.shape
+    assert k % n_group == 0
+    s, e, m = bitops.split_fields(w_aligned, bitops.FP16)
+    man = ((s.astype(jnp.uint32) << 15) | m.astype(jnp.uint32)).astype(jnp.uint16)
+    exp = jnp.max(e.reshape(k // n_group, n_group, n), axis=1).astype(jnp.uint8)
+    return man, exp
+
+
+def dequant_ref(man: jnp.ndarray, exp: jnp.ndarray, n_group: int = 8):
+    """Inverse of pack_bfp (normal numbers; alignment never emits exp=0)."""
+    k, n = man.shape
+    sign = jnp.where((man >> 15) == 1, -1.0, 1.0).astype(jnp.float32)
+    frac = 1.0 + (man & 0x3FF).astype(jnp.float32) / 1024.0
+    scale = jnp.exp2(exp.astype(jnp.float32) - 15.0)
+    scale_full = jnp.repeat(scale, n_group, axis=0)
+    return sign * frac * scale_full
+
+
+def bfp_matmul_ref(x: jnp.ndarray, man: jnp.ndarray, exp: jnp.ndarray,
+                   n_group: int = 8) -> jnp.ndarray:
+    w = dequant_ref(man, exp, n_group)
+    return x.astype(jnp.float32) @ w

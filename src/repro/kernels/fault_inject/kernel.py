@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: tiled bit-flip fault injection into a stored-bit plane.
+
+Emulates soft errors in the CIM macro's SRAM cells (paper Fig. 1a) directly on
+the packed uint16 weight representation. Randomness is a counter-based hash
+PRNG (murmur3 finalizer) keyed by (seed, absolute element index, bit
+position) — pure integer ops, so the kernel (a) lowers on TPU without the
+Mosaic PRNG primitives, (b) runs bit-exactly in interpret mode on CPU, and
+(c) produces tiling-independent faults (the same (seed, element, bit) always
+flips the same way regardless of block shape).
+
+Per bit position p in the target field: flip iff hash(...) < ber * 2^32,
+i.e. i.i.d. Bernoulli(ber) per stored bit, matching `repro.core.fault`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def hash_u32(z: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (wrapping uint32 arithmetic)."""
+    z = z.astype(jnp.uint32)
+    z = z ^ (z >> 16)
+    z = z * jnp.uint32(0x85EBCA6B)
+    z = z ^ (z >> 13)
+    z = z * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    return z
+
+
+def _fault_kernel(bits_ref, o_ref, *, seed: int, threshold: int,
+                  positions: Tuple[int, ...], n_cols: int,
+                  block_r: int, block_c: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 0) \
+        + jnp.uint32(i * block_r)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 1) \
+        + jnp.uint32(j * block_c)
+    elem = rows * jnp.uint32(n_cols) + cols
+
+    mask = jnp.zeros((block_r, block_c), jnp.uint32)
+    for p in positions:
+        # distinct stream per (seed, element, bit position)
+        z = elem * jnp.uint32(16) + jnp.uint32(p)
+        z = z ^ (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+        r = hash_u32(z)
+        flip = (r < jnp.uint32(threshold)).astype(jnp.uint32)
+        mask = mask | (flip << p)
+
+    o_ref[...] = bits_ref[...] ^ mask.astype(bits_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``preferred``."""
+    for d in range(min(preferred, dim), 0, -1):
+        if dim % d == 0:
+            return d
+    return dim
+
+
+def fault_inject_pallas(bits: jnp.ndarray, *, seed: int, ber: float,
+                        positions: Sequence[int], block_r: int = 256,
+                        block_c: int = 256, interpret: bool = True):
+    """bits uint16 [R, C] -> bits with field positions flipped at rate ber."""
+    r, c = bits.shape
+    block_r = _pick_block(r, block_r)
+    block_c = _pick_block(c, block_c)
+    assert r % block_r == 0 and c % block_c == 0
+    threshold = min(int(round(ber * 2 ** 32)), 2 ** 32 - 1)
+    grid = (r // block_r, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_fault_kernel, seed=seed, threshold=threshold,
+                          positions=tuple(positions), n_cols=c,
+                          block_r=block_r, block_c=block_c),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(bits.shape, bits.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(bits)

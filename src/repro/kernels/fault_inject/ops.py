@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the fault-injection kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import FP16, FloatFormat
+from repro.kernels.fault_inject.kernel import fault_inject_pallas
+from repro.kernels.fault_inject.ref import fault_inject_ref  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "ber", "positions",
+                                             "interpret"))
+def fault_inject_bits(bits, *, seed: int, ber: float, positions,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fault_inject_pallas(bits, seed=seed, ber=ber,
+                               positions=tuple(positions), interpret=interpret)
+
+
+def fault_inject_fp16(w, *, seed: int, ber: float, field: str = "full",
+                      fmt: FloatFormat = FP16, interpret: bool | None = None):
+    """Field-targeted injection on an fp16-grid float tensor (kernel path)."""
+    from repro.core import bitops
+    shape = w.shape
+    bits = bitops.to_bits(w.reshape(-1, shape[-1]), fmt)
+    positions = tuple(int(p) for p in fmt.field_bit_positions(field))
+    out = fault_inject_bits(bits, seed=seed, ber=ber, positions=positions,
+                            interpret=interpret)
+    return jnp.asarray(bitops.from_bits(out, fmt), w.dtype).reshape(shape)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fault-injection kernel (same counter-based PRNG)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fault_inject.kernel import hash_u32
+
+
+def fault_inject_ref(bits: jnp.ndarray, *, seed: int, ber: float,
+                     positions: Sequence[int]) -> jnp.ndarray:
+    r, c = bits.shape
+    threshold = min(int(round(ber * 2 ** 32)), 2 ** 32 - 1)
+    rows = jnp.arange(r, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(c, dtype=jnp.uint32)[None, :]
+    elem = rows * jnp.uint32(c) + cols
+    mask = jnp.zeros((r, c), jnp.uint32)
+    for p in positions:
+        z = elem * jnp.uint32(16) + jnp.uint32(p)
+        z = z ^ (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+        flip = (hash_u32(z) < jnp.uint32(threshold)).astype(jnp.uint32)
+        mask = mask | (flip << p)
+    return bits ^ mask.astype(bits.dtype)

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " \
+    + os.environ.get("XLA_FLAGS", "")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent on the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) with zero allocation:
+inputs are ShapeDtypeStructs, parameters come from ``jax.eval_shape``.
+Outputs (memory analysis, cost analysis, collective bytes, compile time) are
+written to ``artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json`` and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, RunConfig, get_config, list_archs
+from repro.core.api import ReliabilityConfig
+from repro.distributed import sharding as shlib
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.training import steps
+
+
+def _mem_analysis(compiled):
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {"note": "memory_analysis unavailable on this backend"}
+        keys = ("temp_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes", "peak_memory_in_bytes")
+        out = {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+        return out or {"repr": str(m)}
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def _param_bytes_per_device(tree, shardings, n_devices):
+    total = 0
+    flat = jax.tree_util.tree_leaves(tree)
+    for leaf in flat:
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total, total / n_devices  # upper bound: fully sharded
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rel_mode: str = "align", seq_shard: bool = True,
+               extra_cfg: dict | None = None, unroll: bool = False,
+               serve_replicated: bool = False):
+    """Build + lower one cell; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, compute_dtype="bfloat16",
+                              **(extra_cfg or {}))
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return None, {"skipped": "full attention is quadratic at 500k; "
+                                 "run only for sub-quadratic archs (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shlib.set_mesh(mesh, seq_shard=seq_shard)
+
+    if shape.kind == "train":
+        run = RunConfig(arch=arch, shape=shape_name,
+                        reliability=ReliabilityConfig(mode=rel_mode))
+        abstract_state = jax.eval_shape(
+            functools.partial(steps.init_train_state, cfg=cfg, run=run),
+            jax.random.PRNGKey(0))
+        st_sh = specs.state_shardings(mesh, abstract_state)
+        bt = specs.batch_struct(cfg, shape, with_labels=True)
+        bt_sh = specs.batch_shardings(mesh, bt)
+        step_fn = steps.make_train_step(cfg, run, unroll=unroll)
+        jitted = jax.jit(step_fn, in_shardings=(st_sh, bt_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+        lowered = jitted.lower(abstract_state, bt)
+        n_params = lm.param_count(abstract_state.params)
+    elif shape.kind == "prefill":
+        params = specs.abstract_params(cfg)
+        p_sh = specs.param_shardings_sane(mesh, params)
+        bt = specs.batch_struct(cfg, shape, with_labels=False)
+        bt_sh = specs.batch_shardings(mesh, bt)
+        jitted = jax.jit(steps.make_prefill_step(cfg, unroll=unroll),
+                         in_shardings=(p_sh, bt_sh))
+        lowered = jitted.lower(params, bt)
+        n_params = lm.param_count(params)
+    else:  # decode
+        params = specs.abstract_params(cfg)
+        p_sh = specs.param_shardings_sane(mesh, params, serve_replicated)
+        caches = specs.abstract_caches(cfg, shape)
+        c_sh = specs.cache_shardings(mesh, cfg, caches)
+        toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_sh = specs._ns(mesh, shlib.logical("batch", None), toks.shape)
+        jitted = jax.jit(steps.make_serve_step(cfg, unroll=unroll),
+                         in_shardings=(p_sh, c_sh, t_sh), donate_argnums=(1,))
+        lowered = jitted.lower(params, caches, toks)
+        n_params = lm.param_count(params)
+
+    meta = {"n_params": int(n_params), "mesh": list(mesh.devices.shape),
+            "axes": list(mesh.axis_names)}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             rel_mode: str = "align", seq_shard: bool = True,
+             overwrite: bool = False, tag: str = ""):
+    mesh_name = "multi" if multi_pod else "single"
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if os.path.exists(path) and not overwrite:
+        print(f"[skip-cached] {path}")
+        return json.load(open(path))
+    os.makedirs(out_dir, exist_ok=True)
+
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "rel_mode": rel_mode, "seq_shard": seq_shard, "tag": tag}
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod, rel_mode,
+                                   seq_shard)
+        if lowered is None:
+            record.update(meta)
+            json.dump(record, open(path, "w"), indent=1)
+            print(f"[skipped ] {arch} x {shape_name} x {mesh_name}: {meta['skipped']}")
+            return record
+        record.update(meta)
+        record["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = _mem_analysis(compiled)
+        record["memory_analysis"] = mem
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        flops = float(cost.get("flops", 0.0))
+        bts = float(cost.get("bytes accessed", 0.0))
+        record["cost_analysis"] = {"flops": flops, "bytes_accessed": bts}
+
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        record["collectives"] = coll
+        chips = 512 if multi_pod else 256
+        coll_total = sum(v for k, v in coll.items() if k != "count")
+        record["roofline"] = hlo_analysis.roofline_terms(flops, bts, coll_total,
+                                                         chips)
+        shape = SHAPES[shape_name]
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+        record["model_flops"] = hlo_analysis.model_flops(
+            record["n_params"], tokens, shape.kind)
+        print(f"[ok      ] {arch} x {shape_name} x {mesh_name}: "
+              f"compile {record['compile_s']}s flops/dev {flops:.3e} "
+              f"bytes/dev {bts:.3e} coll/dev {coll_total:.3e} "
+              f"dominant {record['roofline']['dominant']}")
+        print(f"           memory_analysis: {mem}")
+    except Exception as e:
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAILED  ] {arch} x {shape_name} x {mesh_name}: {record['error']}")
+    json.dump(record, open(path, "w"), indent=1)
+    return record
+
+
+def _measure(lowered, multi_pod):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": {k: v for k, v in coll.items()}}
+
+
+def run_roofline_cell(arch: str, shape_name: str, out_dir: str,
+                      rel_mode: str = "align", seq_shard: bool = True,
+                      overwrite: bool = False, tag: str = "",
+                      extra_cfg: dict | None = None,
+                      serve_replicated: bool = False):
+    """Exact roofline terms via 1-group/2-group UNROLLED lowerings.
+
+    XLA cost analysis counts a scan body once, so the full-depth scan compile
+    undercounts per-layer flops/bytes/collectives. Layers are identical across
+    groups, so:  per_group = m(2g) - m(1g);  outer = m(1g) - per_group;
+    total = outer + G_full * per_group (+ tail scaled by its layer fraction).
+    Single-pod mesh only (the roofline table is single-pod by assignment).
+    """
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__roofline{suffix}.json")
+    if os.path.exists(path) and not overwrite:
+        print(f"[skip-cached] {path}")
+        return json.load(open(path))
+    os.makedirs(out_dir, exist_ok=True)
+    record = {"arch": arch, "shape": shape_name, "mesh": "single",
+              "rel_mode": rel_mode, "seq_shard": seq_shard, "tag": tag,
+              "method": "unrolled 1g/2g extrapolation"}
+    try:
+        cfg_full = get_config(arch)
+        pat_len = len(cfg_full.block_pattern)
+        n_groups_full = cfg_full.n_layers // pat_len
+        n_tail = cfg_full.n_layers % pat_len
+        shape = SHAPES[shape_name]
+        if not cfg_full.supports_shape(shape):
+            record["skipped"] = "sub-quadratic only (DESIGN.md §4)"
+            json.dump(record, open(path, "w"), indent=1)
+            return record
+
+        t0 = time.time()
+        measures = {}
+        # decode: extrapolate from (0, 1) groups — G>=2 unrolled decode makes
+        # GSPMD replicate sliced cache shards (~36 GB/layer of spurious bytes
+        # the real scan path never moves); train/prefill use (1, 2).
+        g_lo, g_hi = (0, 1) if shape.kind == "decode" else (1, 2)
+        for k_groups in (g_lo, g_hi):
+            lowered, meta = lower_cell(
+                arch, shape_name, multi_pod=False, rel_mode=rel_mode,
+                seq_shard=seq_shard, unroll=True,
+                extra_cfg=dict(extra_cfg or {}, n_layers=pat_len * k_groups),
+                serve_replicated=serve_replicated)
+            measures[k_groups] = _measure(lowered, multi_pod=False)
+        record["compile_s"] = round(time.time() - t0, 1)
+        record["extrapolation_groups"] = [g_lo, g_hi]
+
+        def extrapolate(f1, f2):
+            per_group = f2 - f1
+            outer = f1 - g_lo * per_group
+            total = outer + n_groups_full * per_group
+            if n_tail:
+                total += per_group * (n_tail / pat_len)
+            return total, per_group, outer
+
+        flops, flops_g, flops_o = extrapolate(measures[g_lo]["flops"],
+                                              measures[g_hi]["flops"])
+        byts, bytes_g, bytes_o = extrapolate(measures[g_lo]["bytes"],
+                                             measures[g_hi]["bytes"])
+        coll_kinds = {}
+        for kind in hlo_analysis.COLLECTIVES:
+            tot, _, _ = extrapolate(float(measures[g_lo]["coll"][kind]),
+                                    float(measures[g_hi]["coll"][kind]))
+            coll_kinds[kind] = max(tot, 0.0)
+        coll_total = sum(coll_kinds.values())
+
+        # full-model params for MODEL_FLOPS (active params for MoE)
+        cfg = dataclasses.replace(cfg_full, compute_dtype="bfloat16")
+        n_params = lm.param_count(specs.abstract_params(cfg))
+        n_active = n_params
+        if cfg.n_experts:
+            per_layer_expert = 3 * cfg.d_model * cfg.d_ff_expert
+            n_active = n_params - cfg.n_layers * cfg.n_experts * per_layer_expert \
+                + cfg.n_layers * cfg.top_k * per_layer_expert
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind in ("train", "prefill") else 1)
+        record.update({
+            "n_params": int(n_params), "n_active_params": int(n_active),
+            "per_device": {"flops": flops, "bytes": byts,
+                           "coll_bytes": coll_total,
+                           "flops_per_group": flops_g, "flops_outer": flops_o,
+                           "bytes_per_group": bytes_g},
+            "collectives": coll_kinds,
+            "roofline": hlo_analysis.roofline_terms(flops, byts, coll_total, 256),
+            "model_flops": hlo_analysis.model_flops(n_params, tokens, shape.kind,
+                                                    n_active),
+        })
+        r = record["roofline"]
+        print(f"[roofline] {arch} x {shape_name}: compute {r['compute_s']:.4f}s "
+              f"memory {r['memory_s']:.4f}s coll {r['collective_s']:.4f}s "
+              f"dominant {r['dominant']} "
+              f"(model_flops/HLO = {record['model_flops'] / max(flops * 256, 1):.3f})")
+    except Exception as e:
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAILED  ] roofline {arch} x {shape_name}: {record['error']}")
+    json.dump(record, open(path, "w"), indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rel-mode", default="align", choices=["off", "align"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--overwrite", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also produce unrolled-extrapolation roofline artifacts")
+    ap.add_argument("--roofline-only", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    assigned = [a for a in list_archs() if a != "tinyvit-paper"]
+    archs = [args.arch] if args.arch else assigned
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            if not args.roofline_only:
+                for mp in meshes:
+                    rec = run_cell(arch, shape, mp, args.out, args.rel_mode,
+                                   not args.no_seq_shard, args.overwrite, args.tag)
+                    failures += 1 if "error" in rec else 0
+            if args.roofline or args.roofline_only:
+                rec = run_roofline_cell(arch, shape, args.out, args.rel_mode,
+                                        not args.no_seq_shard, args.overwrite,
+                                        args.tag)
+                failures += 1 if "error" in rec else 0
+    print(f"dry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " \
+    + os.environ.get("XLA_FLAGS", "")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""HLO profiler: the dry-run-based "profile" used by the §Perf loop.
+
+Lowers one (arch x shape) cell (optionally unrolled to G groups) and prints:
+  * the largest collectives with their op_name provenance,
+  * result-shape bytes aggregated by op kind,
+  * the biggest individual tensors,
+  * cost-analysis totals + roofline terms.
+
+This is how every §Perf hypothesis in EXPERIMENTS.md was localized — e.g.
+the 13 GB fp32 logits all-gather (unembed grad), the kv x group involuntary
+rematerialization, and the Megatron-TP sequence gathers.
+
+Usage:
+  python -m repro.launch.profile --arch command-r-35b --shape train_4k \\
+      [--groups 1] [--multi-pod] [--top 15] [--attn-impl tp] ...
+"""
+import argparse
+import collections
+import re
+
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import lower_cell
+
+
+def profile_text(text: str, top: int = 15) -> str:
+    lines_out = []
+    colls = []
+    by_kind = collections.Counter()
+    tensors = []
+    for line in text.splitlines():
+        m = re.match(r"\s*%?\S+ = \(?([a-z0-9]+)\[([0-9,]*)\][^ ]* (\S+?)\(", line)
+        if m:
+            b = hlo_analysis._shape_bytes(m.group(1), m.group(2))
+            kind = m.group(3).split(".")[0]
+            by_kind[kind] += b
+            if b > 1e8:
+                op = re.search(r'op_name="([^"]*)"', line)
+                tensors.append((b, f"{m.group(1)}[{m.group(2)}]",
+                                (op.group(1) if op else "")[:80]))
+        for kind in hlo_analysis.COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                rhs = line.split("=", 1)[1] if "=" in line else line
+                shapes = hlo_analysis._SHAPE_RE.findall(rhs.split("(")[0])
+                b = sum(hlo_analysis._shape_bytes(d, s) for d, s in shapes)
+                op = re.search(r'op_name="([^"]*)"', line)
+                colls.append((b, kind, (op.group(1) if op else "")[:90]))
+                break
+
+    colls.sort(reverse=True)
+    lines_out.append(f"== collectives: total {sum(c[0] for c in colls)/1e9:.3f} "
+                     f"GB across {len(colls)} ops ==")
+    for b, kind, op in colls[:top]:
+        lines_out.append(f"  {b/1e9:9.3f} GB  {kind:18s} {op}")
+    lines_out.append("\n== result-shape bytes by op kind ==")
+    for k, v in by_kind.most_common(top):
+        lines_out.append(f"  {k:28s} {v/1e9:9.3f} GB")
+    tensors.sort(reverse=True)
+    lines_out.append("\n== biggest tensors ==")
+    for b, shape, op in tensors[:top]:
+        lines_out.append(f"  {b/1e9:9.3f} GB  {shape:36s} {op}")
+    return "\n".join(lines_out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="unrolled layer groups to lower (0 = embed/loss only)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--rel-mode", default="align")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--mlp-impl", default=None)
+    ap.add_argument("--moe-dispatch", default=None)
+    args = ap.parse_args()
+
+    pat_len = 1
+    from repro.configs import get_config
+    pat_len = len(get_config(args.arch).block_pattern)
+    extra = {"n_layers": pat_len * args.groups}
+    for k, v in (("attn_impl", args.attn_impl), ("mlp_impl", args.mlp_impl),
+                 ("moe_dispatch", args.moe_dispatch)):
+        if v:
+            extra[k] = v
+    lowered, meta = lower_cell(args.arch, args.shape, args.multi_pod,
+                               rel_mode=args.rel_mode, unroll=True,
+                               extra_cfg=extra)
+    if lowered is None:
+        print(f"cell skipped: {meta}")
+        return
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    print(f"{args.arch} x {args.shape} ({args.groups} unrolled groups, "
+          f"{'multi' if args.multi_pod else 'single'}-pod)")
+    print(f"per-device flops {float(cost.get('flops', 0)):.3e}  "
+          f"bytes {float(cost.get('bytes accessed', 0)):.3e}\n")
+    print(profile_text(compiled.as_text(), args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns stand-ins for every model input (the
+shannon/kernels pattern: weak-type-correct, shardable, zero allocation).
+Training/prefill cells feed token batches; decode cells feed (caches, token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.models import lm
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out = {}
+    if cfg.modality == "vision_stub":
+        p = cfg.n_prefix_embeds
+        out["tokens"] = sds((b, s - p), jnp.int32)
+        out["vision_embeds"] = sds((b, p, cfg.d_model), jnp.bfloat16)
+    elif cfg.modality == "audio_stub":
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                               prefilled=shape.seq_len - 1))
+
+
+# ---------------------------------------------------------------- shardings
+
+def _ns(mesh, spec: P, shape) -> NamedSharding:
+    return NamedSharding(mesh, shlib.sanitize_spec(mesh, spec, shape))
+
+
+def batch_shardings(mesh: Mesh, tree) -> object:
+    def spec(path, leaf):
+        s = shlib.logical(*(("batch",) + (None,) * (leaf.ndim - 1)))
+        return _ns(mesh, s, leaf.shape)
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def _cache_rules(cfg):
+    from repro.models.attention import cache_spec
+    kv = cache_spec(cfg)
+    return {
+        "k": kv,
+        "v": kv,
+        "k_scale": kv,
+        "v_scale": kv,
+        "s": ("batch", "heads", None, None),
+        "x_tmix": ("batch", None),
+        "x_cmix": ("batch", None),
+        "h": ("batch", "heads"),
+        "conv": ("batch", None, "heads"),
+    }
+
+
+def cache_shardings(mesh: Mesh, cfg, caches) -> object:
+    rules = _cache_rules(cfg)
+
+    def spec(path, leaf):
+        name = None
+        for part in reversed(path):
+            if hasattr(part, "key"):
+                name = str(part.key)
+                break
+        tail = rules.get(name)
+        if name == "pos" and leaf.ndim >= 2:       # local-attn slot positions
+            tail = ("batch", None)
+        if tail is None or leaf.ndim < len(tail):
+            return NamedSharding(mesh, P())
+        lead = (None,) * (leaf.ndim - len(tail))
+        return _ns(mesh, shlib.logical(*(lead + tail)), leaf.shape)
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def param_shardings_sane(mesh: Mesh, tree, serve_replicated: bool = False):
+    """serve_replicated: inference layout — weights replicated over "data"
+    (no per-step FSDP gathers; there is no optimizer state to amortize them
+    against) and TP-sharded over "model" only. Fits when
+    params x 2B / model_axis <= HBM (granite-3-8b: 1.0 GB/device)."""
+    def one(path, leaf):
+        spec = shlib.param_spec(shlib._path_str(path), leaf.ndim)
+        if serve_replicated:
+            spec = P(*[None if ax == "data" else ax for ax in spec])
+        return _ns(mesh, spec, leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def state_shardings(mesh: Mesh, abstract_state):
+    """Shardings for a TrainState: params/m/v/signs by param rules, exps by the
+    same rules (block-exponent planes inherit their weight's layout)."""
+    from repro.training.steps import TrainState
+    pspec = param_shardings_sane(mesh, abstract_state.params)
+    opt = {"m": param_shardings_sane(mesh, abstract_state.opt["m"]),
+           "v": param_shardings_sane(mesh, abstract_state.opt["v"]),
+           "step": NamedSharding(mesh, P())}
+
+    def aux_spec(tree):
+        def one(path, leaf):
+            if leaf is None:
+                return None
+            spec = shlib.param_spec(shlib._path_str(path), leaf.ndim)
+            return _ns(mesh, spec, leaf.shape)
+        return jax.tree_util.tree_map_with_path(one, tree,
+                                                is_leaf=lambda x: x is None)
+
+    return TrainState(params=pspec, opt=opt,
+                      exps=aux_spec(abstract_state.exps),
+                      signs=aux_spec(abstract_state.signs),
+                      ef_error=None if abstract_state.ef_error is None
+                      else param_shardings_sane(mesh, abstract_state.ef_error))

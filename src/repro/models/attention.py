@@ -1,0 +1,275 @@
+"""GQA attention: full / local-window / q-chunked prefill / cached decode.
+
+Sharding: heads are tensor-parallel ("model" axis); the caller keeps the
+residual stream sequence-sharded (SP) — constraints here trigger the
+all-gather (seq) -> head-parallel compute -> reduce-scatter (seq) pattern
+under GSPMD.
+
+For long sequences (``seq > cfg.attn_chunk_threshold``) the query axis is
+processed in chunks of ``cfg.attn_chunk_q`` under ``lax.scan`` so the
+``S x T`` logits never materialize at once (32k prefill would otherwise
+allocate ~17 GB/layer/device at the assigned shapes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import apply_rope, dense_init, rope_frequencies
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+def init_attention(key, cfg):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.pdtype()
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k0, (d, h * hd), dtype=dt),
+        "wk": dense_init(k1, (d, k * hd), dtype=dt),
+        "wv": dense_init(k2, (d, k * hd), dtype=dt),
+        "wo": dense_init(k3, (h * hd, d), dtype=dt),
+    }
+
+
+def _project_qkv(params, cfg, x, positions, constrain: bool = True):
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.cdtype()
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, h, hd)
+    kk = (x @ params["wk"].astype(dt)).reshape(b, s, k, hd)
+    vv = (x @ params["wv"].astype(dt)).reshape(b, s, k, hd)
+    sin, cos = rope_frequencies(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, sin, cos)
+    kk = apply_rope(kk, sin, cos)
+    if constrain:
+        # TP layout: heads on "model", full sequence (all-gather out of SP).
+        q = shard(q, "batch", None, "heads", None)
+        kk = shard(kk, "batch", None, "kv_heads", None)
+        vv = shard(vv, "batch", None, "kv_heads", None)
+    return q, kk, vv
+
+
+def _attend(q, k, v, mask):
+    """q [B,S,K,G,hd], k/v [B,T,K,hd], mask broadcastable to [B,K,G,S,T].
+
+    Grouped form — used on the decode path where the cache keeps K heads."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out
+
+
+def _attend_mha(q, k, v, mask):
+    """q/k/v [B,S|T,H,hd] (kv pre-expanded), mask broadcast to [B,H,S,T].
+
+    Training/prefill path. The merged-head layout keeps the model axis on a
+    SINGLE tensor dimension: with the grouped [B,K,G,S,T] layout GSPMD factors
+    model=16 as kv x group (e.g. 4x4 at qwen3) and then "involuntarily fully
+    rematerializes" the S x T probability tensors when resharding — measured
+    ~240 GB/layer of backward all-gathers (EXPERIMENTS.md §Perf iteration 2).
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def _expand_kv(k, g: int):
+    """[B,T,K,hd] -> [B,T,K*g,hd] (each kv head repeated over its q group)."""
+    if g == 1:
+        return k
+    b, t, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (b, t, kh, g, hd)) \
+        .reshape(b, t, kh * g, hd)
+
+
+def _causal_mask(q_pos, k_pos, window: int):
+    """[..., S, T] boolean; local-window band when ``window`` > 0."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window > 0:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def full_attention(params, cfg, x, positions, window: int = 0):
+    """Training / short-prefill path. x [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // kh
+    if cfg.attn_impl == "cp" and s <= cfg.attn_chunk_threshold:
+        # Context-parallel attention (§Perf): the query/output KEEP the
+        # residual stream's sequence sharding; only K/V leave it (replicated
+        # over "model"). Per layer the only collectives are the K/V gathers
+        # (fwd) and their reduce-scatters (bwd) — no head<->seq reshard of
+        # the residual at all. Grouped einsum: the model axis touches a
+        # single tensor dim (S), so no kv x group factorization either.
+        q, k, v = _project_qkv(params, cfg, x, positions, constrain=False)
+        q = shard(q, "batch", "seq", None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+        q = q.reshape(b, s, kh, g, hd)
+        mask = _causal_mask(positions[0], positions[0], window)[None, None, None]
+        out = _attend(q, k, v, mask).reshape(b, s, h * hd)
+        out = shard(out, "batch", "seq", None)
+    else:
+        q, k, v = _project_qkv(params, cfg, x, positions)
+        k = shard(_expand_kv(k, g), "batch", None, "heads", None)
+        v = shard(_expand_kv(v, g), "batch", None, "heads", None)
+
+        if s > cfg.attn_chunk_threshold:
+            out = _q_chunked(q, k, v, positions, window, cfg.attn_chunk_q)
+        else:
+            # positions are uniform across batch -> a [S,T] mask (a [B,1,S,T]
+            # mask gets all-gathered as a ~0.3 GB pred tensor per layer)
+            mask = _causal_mask(positions[0], positions[0], window)[None, None]
+            out = _attend_mha(q, k, v, mask)
+        out = out.reshape(b, s, h * hd)
+    out = out @ params["wo"].astype(x.dtype)
+    return shard(out, "batch", "seq", None)
+
+
+def _q_chunked(q, k, v, positions, window: int, chunk: int):
+    """Scan over query chunks; logits bounded to [B,H,chunk,T]."""
+    b, s, h, hd = q.shape
+    n = s // chunk
+    assert s % chunk == 0, "seq must divide the q-chunk size"
+    qc = jnp.moveaxis(q.reshape(b, n, chunk, h, hd), 1, 0)
+    pc = jnp.moveaxis(positions.reshape(b, n, chunk), 1, 0)
+
+    def body(_, xs):
+        q_i, p_i = xs
+        mask = _causal_mask(p_i[0], positions[0], window)[None, None]
+        return None, _attend_mha(q_i, k, v, mask)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------- decode
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=None):
+    k, hd = cfg.n_kv_heads, cfg.head_dim_
+    if cfg.kv_cache_dtype == "int8":
+        # quantized cache: int8 values + one scale per (token, head) —
+        # halves the decode-dominant cache traffic (§Perf granite iter. 3)
+        return {
+            "k": jnp.zeros((batch, max_len, k, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, k, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, k, 1), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, max_len, k, 1), jnp.bfloat16),
+        }
+    dt = dtype or cfg.cdtype()
+    return {
+        "k": jnp.zeros((batch, max_len, k, hd), dt),
+        "v": jnp.zeros((batch, max_len, k, hd), dt),
+    }
+
+
+def _quant_kv(x):
+    """[B,1,K,hd] -> (int8 values, bf16 scale [B,1,K,1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequant_kv(q, scale, dt):
+    return q.astype(dt) * scale.astype(dt)
+
+
+def cache_spec(cfg):
+    """Logical sharding of the KV cache [B, S, K, hd].
+
+    KV heads go on "model" when they divide the axis (musicgen kv=32);
+    otherwise the cache is sharded over the *sequence* (flash-decoding
+    layout): per-shard partial logits combine through the softmax max/sum
+    reductions, tiny [B, heads] collectives instead of padded kv storage."""
+    from repro.distributed import sharding as shlib
+    if cfg.n_kv_heads % max(shlib.axis_size("model"), 1) == 0:
+        return ("batch", None, "kv_heads", None)
+    return ("batch", "kv_seq", None, None)
+
+
+def init_local_cache(cfg, batch: int, window: int, dtype=None):
+    """Rolling-window cache for local attention (recurrentgemma): O(window)
+    memory regardless of decode length — slot ``pos % window`` is overwritten
+    and per-slot absolute positions drive the mask."""
+    k, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = dtype or cfg.cdtype()
+    return {
+        "k": jnp.zeros((batch, window, k, hd), dt),
+        "v": jnp.zeros((batch, window, k, hd), dt),
+        "pos": jnp.full((batch, window), -1, jnp.int32),
+    }
+
+
+def decode_local_attention(params, cfg, x, cache, pos, window: int):
+    """One-token decode against a rolling window cache."""
+    b, _, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // kh
+    w = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    q = q.reshape(b, 1, kh, g, hd)
+
+    slot = jnp.mod(pos, w)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], positions, (0, slot))
+
+    valid = (cpos >= 0) & (cpos <= pos) & ((pos - cpos) < window)
+    mask = valid[:, None, None, None, :]                  # [B,1,1,1,W]
+    out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    out = out.reshape(b, 1, h * hd) @ params["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def decode_attention(params, cfg, x, cache, pos, window: int = 0):
+    """One-token decode. x [B,1,D]; cache k/v [B,Smax,K,hd]; pos scalar =
+    number of tokens already in the cache. Returns (out [B,1,D], new cache)."""
+    b, _, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // kh
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    q = q.reshape(b, 1, kh, g, hd)
+    int8_cache = "k_scale" in cache
+
+    if int8_cache:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        new_cache = {}
+        for name, val in (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)):
+            buf = jax.lax.dynamic_update_slice(
+                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
+            new_cache[name] = shard(buf, *cache_spec(cfg))
+        ck = _dequant_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
+        cv = _dequant_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        ck = shard(ck, *cache_spec(cfg))
+        cv = shard(cv, *cache_spec(cfg))
+        new_cache = {"k": ck, "v": cv}
+
+    t = new_cache["k"].shape[1]
+    k_pos = jnp.arange(t, dtype=jnp.int32)[None]
+    mask = _causal_mask(positions, k_pos, window)[:, None, None]
+    out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    out = out.reshape(b, 1, h * hd) @ params["wo"].astype(x.dtype)
+    return out, new_cache

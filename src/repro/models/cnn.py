@@ -1,0 +1,51 @@
+"""Small ConvNet — the paper's benchmark family (ResNet18/YOLOv5/nnUNet are
+CNNs) at container scale, used by the Fig. 2/6/7 and Table I benchmarks with
+the GaussianBlobs classification task.
+
+Conv kernels are [kh, kw, cin, cout]; exponent alignment groups along the
+input channel (axis -2), exactly the paper's Fig. 3 ① grouping for conv
+layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_cnn(key, n_classes: int = 10, channels: int = 3, width: int = 32):
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1": dense_init(ks[0], (3, 3, channels, width)),
+        "conv2": dense_init(ks[1], (3, 3, width, 2 * width)),
+        "dense": dense_init(ks[2], (2 * width * 16, 4 * width)),
+        "head": dense_init(ks[3], (4 * width, n_classes)),
+    }
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def apply_cnn(params, x):
+    """x [B, 16, 16, C] -> logits [B, n_classes]."""
+    h = jax.nn.relu(_conv(x, params["conv1"], stride=2))    # [B, 8, 8, w]
+    h = jax.nn.relu(_conv(h, params["conv2"], stride=2))    # [B, 4, 4, 2w]
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense"])
+    return h @ params["head"]
+
+
+def cnn_loss(params, x, y):
+    logits = apply_cnn(params, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], 1)[:, 0]
+    acc = jnp.mean(jnp.argmax(logits, -1) == y)
+    return jnp.mean(nll), acc
+
+
+def accuracy(params, x, y) -> float:
+    logits = apply_cnn(params, x)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))

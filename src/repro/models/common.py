@@ -1,0 +1,85 @@
+"""Shared layer primitives for the architecture zoo (pure-functional JAX)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: no learnable scale/bias."""
+    return layernorm(x, None, None, eps)
+
+
+def apply_norm(norm_type: str, params, x):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if norm_type == "nonparametric_ln":
+        return nonparametric_ln(x)
+    raise ValueError(norm_type)
+
+
+def init_norm(key, norm_type: str, d: int, dtype=jnp.float32):
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if norm_type == "nonparametric_ln":
+        return {}
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_frequencies(head_dim: int, theta: float, positions):
+    """positions [...,S] -> (sin, cos) each [..., S, head_dim//2], fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, head_dim]; sin/cos [..., S, head_dim//2] (broadcast H)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin_ = sin[..., None, :] if x.ndim == sin.ndim + 1 else sin
+    cos_ = cos[..., None, :] if x.ndim == cos.ndim + 1 else cos
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos_ - x2f * sin_,
+                            x2f * cos_ + x1f * sin_], axis=-1).astype(x.dtype)

@@ -1,0 +1,383 @@
+"""Unified decoder LM covering all ten assigned architectures.
+
+A model is a cycle of block kinds (``cfg.block_pattern``) over ``n_layers``:
+
+  * ``attn``  — GQA attention + dense MLP          (dense family, VLM, audio)
+  * ``local`` — windowed attention + dense MLP      (recurrentgemma 1/3 layers)
+  * ``moe``   — GQA attention + MoE FFN             (qwen3-moe, dbrx)
+  * ``rwkv``  — RWKV6 time-mix + channel-mix        (attention-free)
+  * ``rec``   — RG-LRU recurrent block + dense MLP  (recurrentgemma 2/3 layers)
+
+Layers are stacked into pattern *groups* and iterated with ``lax.scan``
+(+ optional ``jax.checkpoint``), which keeps HLO size and compile time bounded
+at 80–94 layers and makes the saved residual stream a single ``[G, B, S, D]``
+tensor that the sharding rules distribute over both mesh axes.
+
+Three entry points per model: ``forward`` (training), ``prefill`` (returns
+last-token logits + caches) and ``decode`` (one token against caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.common import apply_norm, embed_init, init_norm
+
+
+# ---------------------------------------------------------------- init
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.pdtype()
+    p = {"norm1": init_norm(k3, cfg.norm_type, cfg.d_model, dt),
+         "norm2": init_norm(k3, cfg.norm_type, cfg.d_model, dt)}
+    if kind in ("attn", "local"):
+        p["attn"] = attn_lib.init_attention(k1, cfg)
+        p["mlp"] = mlp_lib.init_mlp(k2, cfg)
+    elif kind == "moe":
+        p["attn"] = attn_lib.init_attention(k1, cfg)
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    elif kind == "rwkv":
+        p["tmix"] = rwkv_lib.init_rwkv_tmix(k1, cfg)
+        p["cmix"] = mlp_lib.init_mlp(k2, cfg)
+    elif kind == "rec":
+        p["rec"] = rglru_lib.init_rglru_block(k1, cfg)
+        p["mlp"] = mlp_lib.init_mlp(k2, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _group_kinds(cfg: ModelConfig):
+    pat = cfg.block_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail = tuple(pat[i] for i in range(cfg.n_layers % len(pat)))
+    return pat, n_groups, tail
+
+
+def init_lm(key, cfg: ModelConfig):
+    pat, n_groups, tail = _group_kinds(cfg)
+    k_embed, k_unembed, k_layers, k_tail, k_norm = jax.random.split(key, 5)
+    dt = cfg.pdtype()
+
+    def init_group(k):
+        ks = jax.random.split(k, len(pat))
+        return {f"blk{i}": init_block(ks[i], cfg, kind)
+                for i, kind in enumerate(pat)}
+
+    group_keys = jax.random.split(k_layers, max(n_groups, 1))
+    groups = jax.vmap(init_group)(group_keys) if n_groups else None
+    tail_keys = jax.random.split(k_tail, max(len(tail), 1))
+    tail_params = tuple(init_block(tail_keys[i], cfg, kind)
+                        for i, kind in enumerate(tail))
+
+    params = {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "unembed": embed_init(k_unembed, (cfg.d_model, cfg.vocab_size), dt),
+        "final_norm": init_norm(k_norm, cfg.norm_type, cfg.d_model, dt),
+        "groups": groups,
+        "tail": tail_params,
+    }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------- sequence
+
+def apply_block_seq(p, cfg: ModelConfig, kind: str, x, positions,
+                    want_cache: bool = False):
+    """-> (x, aux_loss, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn", "local", "moe"):
+        window = cfg.local_window if kind == "local" else 0
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        x = x + attn_lib.full_attention(p["attn"], cfg, h, positions, window)
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        if kind == "moe":
+            out, aux = moe_lib.apply_moe(p["moe"], cfg, h2)
+        else:
+            out = mlp_lib.apply_mlp(p["mlp"], cfg, h2)
+        x = x + out
+        # (attn-kind caches are built by the caller via _prefill_block_cache)
+    elif kind == "rwkv":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, state = rwkv_lib.apply_rwkv_tmix(p["tmix"], cfg, h)
+        x = x + o
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        h2s = jnp.concatenate([jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+        x = x + mlp_lib.apply_mlp(p["cmix"], cfg, h2, h2s)
+        if want_cache:
+            state["x_cmix"] = h2[:, -1].astype(jnp.float32)
+            cache = state
+    elif kind == "rec":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, state = rglru_lib.apply_rglru_block(p["rec"], cfg, h)
+        x = x + o
+        x = x + mlp_lib.apply_mlp(p["mlp"], cfg, apply_norm(cfg.norm_type, p["norm2"], x))
+        if want_cache:
+            cache = state
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _prefill_block_cache(p, cfg: ModelConfig, kind: str, h, positions):
+    """Recompute k/v of the (normed) layer input to build the decode cache."""
+    b, s, _ = h.shape
+    _, k, v = attn_lib._project_qkv(p["attn"], cfg, h, positions)
+    if kind == "local":
+        w = min(cfg.local_window, s)
+        kw, vw = k[:, -w:], v[:, -w:]
+        pw = positions[:, -w:]
+        cache = attn_lib.init_local_cache(cfg, b, cfg.local_window, k.dtype)
+        slots = jnp.mod(pw[0], cfg.local_window)
+        cache["k"] = cache["k"].at[:, slots].set(kw)
+        cache["v"] = cache["v"].at[:, slots].set(vw)
+        cache["pos"] = cache["pos"].at[:, slots].set(pw)
+        return cache
+    return {"k": k, "v": v}
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict):
+    dt = cfg.cdtype()
+    if cfg.modality == "vision_stub" and "vision_embeds" in batch:
+        tok = shard(params["embed"].astype(dt), "vocab", None)[batch["tokens"]]
+        vis = batch["vision_embeds"].astype(dt)
+        x = jnp.concatenate([vis, tok], axis=1)
+    elif cfg.modality == "audio_stub" and "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = shard(params["embed"].astype(dt), "vocab", None)[batch["tokens"]]
+    return shard(x, "batch", "seq", None)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, remat: bool = True,
+            unroll: bool = False):
+    """-> (logits [B,S,V], aux_loss, caches_or_None)."""
+    pat, n_groups, tail = _group_kinds(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def apply_group(gp, x, aux):
+        for i, kind in enumerate(pat):
+            x, a, _ = apply_block_seq(gp[f"blk{i}"], cfg, kind, x, positions)
+            aux = aux + a
+            x = shard(x, "batch", "seq", None)
+        return x, aux
+
+    group_fn = apply_group
+    if remat:
+        group_fn = jax.checkpoint(apply_group)
+
+    aux = jnp.zeros((), jnp.float32)
+    if n_groups:
+        if unroll:
+            # Python-loop over groups: every layer's ops/collectives appear
+            # explicitly in the HLO (scan bodies are counted once by XLA cost
+            # analysis — the dry-run extrapolates exact roofline terms from
+            # 1-group and 2-group unrolled lowerings; DESIGN.md §6).
+            for gi in range(n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+                x, aux = group_fn(gp, x, aux)
+        else:
+            def body(carry, gp):
+                x, aux = carry
+                x, aux = group_fn(gp, x, aux)
+                return (x, aux), None
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+    for i, kind in enumerate(tail):
+        x, a, _ = apply_block_seq(params["tail"][i], cfg, kind, x, positions)
+        aux = aux + a
+
+    # Leave SP before the unembed: tokens unsharded on "model" so dlogits and
+    # the hidden agree on the contraction layout — otherwise GSPMD computes
+    # the unembed grad by all-gathering full-vocab fp32 dlogits (13 GB/step
+    # per device measured at olmo-1b train_4k vs a 0.27 GB bf16 gather here).
+    x = shard(x, "batch", None, None)
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    # FSDP: gather the (small, bf16) weight rather than partial-summing the
+    # contraction over its "data"-sharded D axis — the latter all-reduces the
+    # full fp32 logits (13 GB/step/device measured; the gather is 0.2 GB).
+    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
+    logits = x @ w_un
+    return shard(logits, "batch", None, "vocab"), aux, None
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, unroll: bool = False):
+    """Inference prefill: runs the sequence, returns last-token logits and the
+    decode caches for every layer (scan-stacked for groups)."""
+    pat, n_groups, tail = _group_kinds(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def apply_group_cached(gp, x):
+        caches = {}
+        for i, kind in enumerate(pat):
+            h_in = apply_norm(cfg.norm_type, gp[f"blk{i}"]["norm1"], x)
+            x, _, c = apply_block_seq(gp[f"blk{i}"], cfg, kind, x, positions,
+                                      want_cache=(kind in ("rwkv", "rec")))
+            if kind in ("attn", "local", "moe"):
+                c = _prefill_block_cache(gp[f"blk{i}"], cfg, kind, h_in, positions)
+            caches[f"blk{i}"] = c
+            x = shard(x, "batch", "seq", None)
+        return x, caches
+
+    group_caches = None
+    if n_groups:
+        if unroll:
+            percall = []
+            for gi in range(n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+                x, caches = apply_group_cached(gp, x)
+                percall.append(caches)
+            group_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *percall)
+        else:
+            def body(x, gp):
+                x, caches = apply_group_cached(gp, x)
+                return x, caches
+            x, group_caches = jax.lax.scan(body, x, params["groups"])
+
+    tail_caches = []
+    for i, kind in enumerate(tail):
+        h_in = apply_norm(cfg.norm_type, params["tail"][i]["norm1"], x)
+        x, _, c = apply_block_seq(params["tail"][i], cfg, kind, x, positions,
+                                  want_cache=(kind in ("rwkv", "rec")))
+        if kind in ("attn", "local", "moe"):
+            c = _prefill_block_cache(params["tail"][i], cfg, kind, h_in, positions)
+        tail_caches.append(c)
+
+    x = apply_norm(cfg.norm_type, params["final_norm"], x[:, -1:])
+    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
+    logits = (x @ w_un)[:, 0]
+    return logits, {"groups": group_caches, "tail": tuple(tail_caches),
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+# ---------------------------------------------------------------- decode
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    """Zero caches sized for ``max_len`` (dry-run serve_step input spec)."""
+    pat, n_groups, tail = _group_kinds(cfg)
+
+    def one(kind):
+        if kind in ("attn", "moe"):
+            return attn_lib.init_kv_cache(cfg, batch, max_len)
+        if kind == "local":
+            return attn_lib.init_local_cache(cfg, batch,
+                                             min(cfg.local_window, max_len))
+        if kind == "rwkv":
+            return rwkv_lib.init_rwkv_state(cfg, batch)
+        if kind == "rec":
+            return rglru_lib.init_rglru_state(cfg, batch)
+        raise ValueError(kind)
+
+    def stack(kind):
+        c = one(kind)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), c)
+
+    groups = {f"blk{i}": stack(kind) for i, kind in enumerate(pat)} \
+        if n_groups else None
+    return {"groups": groups,
+            "tail": tuple(one(kind) for kind in tail),
+            "pos": jnp.asarray(prefilled, jnp.int32)}
+
+
+def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
+    if kind in ("attn", "local", "moe"):
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        if kind == "local":
+            o, cache = attn_lib.decode_local_attention(p["attn"], cfg, h, cache,
+                                                       pos, cfg.local_window)
+        else:
+            o, cache = attn_lib.decode_attention(p["attn"], cfg, h, cache, pos)
+        x = x + o
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        if kind == "moe":
+            out, _ = moe_lib.apply_moe(p["moe"], cfg, h2)
+        else:
+            out = mlp_lib.apply_mlp(p["mlp"], cfg, h2)
+        x = x + out
+    elif kind == "rwkv":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, state = rwkv_lib.decode_rwkv_tmix(p["tmix"], cfg, h, cache)
+        x = x + o
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        x = x + mlp_lib.apply_mlp(p["cmix"], cfg, h2,
+                                  cache["x_cmix"].astype(h2.dtype)[:, None])
+        state["x_cmix"] = h2[:, 0].astype(jnp.float32)
+        cache = state
+    elif kind == "rec":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, cache = rglru_lib.decode_rglru_block(p["rec"], cfg, h, cache)
+        x = x + o
+        x = x + mlp_lib.apply_mlp(p["mlp"], cfg, apply_norm(cfg.norm_type, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
+           unroll: bool = False):
+    """One decode step. tokens [B,1] -> (logits [B,V], new caches)."""
+    pat, n_groups, tail = _group_kinds(cfg)
+    if pos is None:
+        pos = caches["pos"]
+    dt = cfg.cdtype()
+    x = params["embed"].astype(dt)[tokens]
+    x = shard(x, "batch", None, None)
+
+    new_group_caches = None
+    if n_groups:
+        def body(x, xs):
+            gp, gc = xs
+            out_c = {}
+            for i, kind in enumerate(pat):
+                x, c = apply_block_decode(gp[f"blk{i}"], cfg, kind, x,
+                                          gc[f"blk{i}"], pos)
+                out_c[f"blk{i}"] = c
+            return x, out_c
+        if unroll:
+            # measurement mode: do NOT restack the per-group caches — a
+            # jnp.stack of sharded cache slices adds reshard copies that the
+            # real scan path never performs (it would inflate decode roofline
+            # terms ~20x; see EXPERIMENTS.md §Roofline methodology).
+            percall = []
+            for gi in range(n_groups):
+                sel = lambda a: a[gi]
+                x, out_c = body(x, (jax.tree_util.tree_map(sel, params["groups"]),
+                                    jax.tree_util.tree_map(sel, caches["groups"])))
+                percall.append(out_c)
+            new_group_caches = tuple(percall)
+        else:
+            x, new_group_caches = jax.lax.scan(body, x,
+                                               (params["groups"], caches["groups"]))
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, c = apply_block_decode(params["tail"][i], cfg, kind, x,
+                                  caches["tail"][i], pos)
+        new_tail.append(c)
+
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
+    logits = (x @ w_un)[:, 0]
+    return logits, {"groups": new_group_caches, "tail": tuple(new_tail),
+                    "pos": pos + 1}

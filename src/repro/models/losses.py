@@ -1,0 +1,38 @@
+"""Loss functions: masked LM cross-entropy (+ MoE aux is added by the step).
+
+The CE is written to stay *vocab-sharded* under GSPMD: no one-hot, no
+``take_along_axis`` gather over the sharded vocab axis, no fp32 [B,S,V]
+buffer. max / logsumexp / masked-pick are plain reductions over the last
+axis, which XLA fuses and partially-reduces per shard (the only collective is
+a tiny [B,S] combine). This matters at the assigned shapes: a fp32
+log-softmax of 1M tokens x 152k vocab would be ~26 GB/device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def lm_loss(logits, labels):
+    """logits [B,S,V] (may be vocab-sharded), labels [B,S] int (IGNORE masked).
+
+    Returns (loss, metrics)."""
+    v = logits.shape[-1]
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == safe[..., None], x, 0.0), axis=-1)
+    nll = lse - picked
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = jnp.sum(nll * mask) / denom
+    # accuracy without argmax over the (sharded) vocab axis: the prediction is
+    # correct iff the label's logit equals the row max (an argmax over a
+    # sharded axis makes GSPMD all-gather the full fp32 logits — measured
+    # 13 GB/step/device at olmo-1b train_4k).
+    acc = jnp.sum((picked >= m) & mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

@@ -1,0 +1,62 @@
+"""Channel MLPs: SwiGLU (llama-family), GeLU (musicgen), RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import dense_init
+
+
+def init_mlp(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    k0, k1, k2 = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {"w_gate": dense_init(k0, (d, f), dtype=dt),
+                "w_in": dense_init(k1, (d, f), dtype=dt),
+                "w_out": dense_init(k2, (f, d), dtype=dt)}
+    if cfg.mlp_type == "gelu":
+        return {"w_in": dense_init(k0, (d, f), dtype=dt),
+                "w_out": dense_init(k1, (f, d), dtype=dt)}
+    if cfg.mlp_type == "rwkv_cmix":
+        # RWKV channel mix: r = sigmoid(W_r x'); out = r * (W_out relu(W_in x')^2)
+        return {"w_r": dense_init(k0, (d, d), dtype=dt),
+                "w_in": dense_init(k1, (d, f), dtype=dt),
+                "w_out": dense_init(k2, (f, d), dtype=dt),
+                "mix_k": jnp.full((d,), 0.5, dt),
+                "mix_r": jnp.full((d,), 0.5, dt)}
+    raise ValueError(cfg.mlp_type)
+
+
+def apply_mlp(params, cfg, x, x_shifted=None):
+    dt = x.dtype
+    fsdp = cfg.mlp_impl == "fsdp"
+
+    def W(name):
+        w = params[name].astype(dt)
+        # fsdp mode (§Perf command-r iteration 4): gather the bf16 weight
+        # (ZeRO-3 style, ~0.37 GB/layer at command-r) and keep the tokens
+        # sequence-sharded — Megatron-TP instead all-gathers ~2.1 GB of
+        # activations per matmul to unshard the sequence.
+        return shard(w, None, None) if fsdp else w
+
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ W("w_gate")) * (x @ W("w_in"))
+        if not fsdp:
+            h = shard(h, "batch", None, "ff")
+        return shard(h @ W("w_out"), "batch", "seq", None)
+    if cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(x @ W("w_in"))
+        if not fsdp:
+            h = shard(h, "batch", None, "ff")
+        return shard(h @ W("w_out"), "batch", "seq", None)
+    if cfg.mlp_type == "rwkv_cmix":
+        assert x_shifted is not None, "rwkv channel-mix needs the shifted stream"
+        xk = x * params["mix_k"].astype(dt) + x_shifted * (1 - params["mix_k"].astype(dt))
+        xr = x * params["mix_r"].astype(dt) + x_shifted * (1 - params["mix_r"].astype(dt))
+        h = jnp.square(jax.nn.relu(xk @ params["w_in"].astype(dt)))
+        h = shard(h, "batch", None, "ff")
+        out = jax.nn.sigmoid(xr @ params["w_r"].astype(dt)) * (h @ params["w_out"].astype(dt))
+        return shard(out, "batch", "seq", None)
+    raise ValueError(cfg.mlp_type)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer (qwen3-moe, dbrx) with expert parallelism.
+
+Dispatch is a GSPMD-friendly capacity-based gather/scatter: no ``[T, E, C]``
+one-hot dispatch tensor is ever materialized (that would be ~10^10 elements
+at the assigned shapes). Assignments are ranked per expert (sort-based by
+default — see §Perf iteration 1 for why the cumsum baseline is catastrophic),
+scattered into an ``[E, C, D]`` buffer sharded (experts -> "model",
+capacity -> "data"), processed with per-expert einsums, and gathered back.
+Under a mesh the default is the explicit shard_map all-to-all dispatch
+(``repro.models.moe_a2a``, §Perf 4.1 iteration 4 — 13-79x less collective
+traffic); the GSPMD dense path remains the fallback for hosts without a mesh
+and for indivisible shapes (decode's seq=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import dense_init
+
+
+def init_moe(key, cfg):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    dt = cfg.pdtype()
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k0, (d, e), dtype=dt),
+        "moe_win": dense_init(k1, (e, d, f), in_axis=-2, dtype=dt),
+        "moe_wgate": dense_init(k2, (e, d, f), in_axis=-2, dtype=dt),
+        "moe_wout": dense_init(k3, (e, f, d), in_axis=-2, dtype=dt),
+    }
+
+
+def capacity(cfg, tokens: int) -> int:
+    c = int(math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, c)
+
+
+def apply_moe(params, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] -> (out [B,S,D], aux load-balancing loss scalar)."""
+    if cfg.moe_dispatch == "a2a":
+        from repro.distributed import sharding as shlib
+        mesh = shlib.get_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and cfg.n_experts % mesh.shape["model"] == 0:
+            bsz = 1
+            for a in (shlib.batch_axes() or ()):
+                bsz *= mesh.shape[a]
+            if x.shape[0] % bsz == 0 and x.shape[1] % mesh.shape["model"] == 0:
+                from repro.models.moe_a2a import apply_moe_a2a
+                return apply_moe_a2a(params, cfg, x)
+        # no mesh (host tests) or indivisible shapes (decode: seq=1)
+        # -> GSPMD dense dispatch fallback
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    dt = x.dtype
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                              # [T, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # Aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    # ---- rank each assignment within its expert ---------------------------
+    flat_ids = ids.reshape(t * k)                                     # [T*k]
+    if cfg.moe_dispatch == "cumsum":
+        # baseline (flax-switch style): one-hot + cumsum over [T*k, E].
+        # XLA lowers the cumsum to reduce-windows — measured ~360x the expert
+        # einsum FLOPs at qwen3 shapes (EXPERIMENTS.md §Perf iteration 1).
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)         # [T*k, E]
+        ranks_all = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.take_along_axis(ranks_all, flat_ids[:, None], axis=1)[:, 0]
+    else:
+        # optimized: sort-based ranking — 1-D ops only, no [T*k, E] tensor.
+        # rank(i) = position of assignment i within its expert's sorted run.
+        n = t * k
+        order = jnp.argsort(flat_ids)                                 # [n]
+        sorted_ids = flat_ids[order]
+        starts = jnp.searchsorted(sorted_ids, jnp.arange(e, dtype=flat_ids.dtype))
+        ranks_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids]
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)
+    c = capacity(cfg, t)
+    keep = rank < c
+    dest = jnp.where(keep, flat_ids * c + rank, e * c)                # drop slot
+
+    # ---- dispatch: scatter tokens into the [E*C(+1), D] buffer ------------
+    # (a 2-D (expert, rank) scatter onto a pre-sharded [E, C, D] buffer was
+    # tried and REFUTED: GSPMD rematerializes the scatter, 10x more collective
+    # bytes — EXPERIMENTS.md §Perf iteration 3. The 1-D linearized scatter +
+    # post-constraint is the best GSPMD formulation; the next step beyond it
+    # is a shard_map all-to-all dispatch.)
+    src = jnp.repeat(xt, k, axis=0)                                   # [T*k, D]
+    buf = jnp.zeros((e * c + 1, d), dt).at[dest].add(src)
+    buf = shard(buf[:e * c].reshape(e, c, d), "experts", "batch", None)
+
+    # ---- expert computation (per-expert SwiGLU) ----------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["moe_wgate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["moe_win"].astype(dt))
+    h = shard(h, "experts", "batch", None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["moe_wout"].astype(dt))
+    out_buf = shard(out_buf, "experts", "batch", None).reshape(e * c, d)
+
+    # ---- combine: gather + gate-weighted sum over the k assignments -------
+    gathered = jnp.where(keep[:, None], out_buf[jnp.minimum(dest, e * c - 1)], 0)
+    weighted = gathered * gates.reshape(t * k, 1).astype(dt)
+    out = jnp.sum(weighted.reshape(t, k, d), axis=1)
+    return shard(out.reshape(b, s, d), "batch", "seq", None), aux

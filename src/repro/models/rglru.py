@@ -1,0 +1,120 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU gated recurrence.
+
+    y = W_down( GeLU(W_gate_br x) ⊙ RGLRU(conv4(W_x x)) )
+
+RG-LRU (per channel, fp32):
+    r_t = σ(w_a·x̃_t + b_a)        (recurrence gate)
+    i_t = σ(w_i·x̃_t + b_i)        (input gate)
+    log a_t = -c · softplus(Λ) · r_t
+    h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x̃_t)
+
+The sequence recurrence is a first-order elementwise linear recurrence →
+``jax.lax.associative_scan`` (log-depth, parallel over the sequence). The
+gates here are per-channel (diagonal) — a documented simplification of the
+block-diagonal linear gates in the reference implementation (DESIGN.md §1).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import dense_init
+
+RG_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d, r = cfg.d_model, cfg.d_rnn or cfg.d_model
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c ≈ uniform in [0.9, 0.999] at r_t=1 (Griffin appendix)
+    u = jax.random.uniform(ks[3], (r,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RG_C))      # softplus^-1(-log u / c)
+    return {
+        "w_x": dense_init(ks[0], (d, r), dtype=dt),
+        "w_gate_br": dense_init(ks[1], (d, r), dtype=dt),
+        "w_down": dense_init(ks[2], (r, d), dtype=dt),
+        "rg_lambda": lam.astype(dt),
+        "rg_wa": jnp.zeros((r,), dt), "rg_ba": jnp.zeros((r,), dt),
+        "rg_wi": jnp.zeros((r,), dt), "rg_bi": jnp.zeros((r,), dt),
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv_width, r)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((r,), dt),
+    }
+
+
+def _conv1d_causal(x, w, b, x_init=None):
+    """Depthwise causal conv. x [B,T,R]; w [W,R]; x_init [B,W-1,R] carry."""
+    wlen = w.shape[0]
+    if x_init is None:
+        x_init = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([x_init, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[wlen - 1 - i].astype(x.dtype)
+              for i in range(wlen))
+    return out + b.astype(x.dtype), xp[:, -(wlen - 1):]
+
+
+def _rg_lru_coeffs(params, xt):
+    """-> (a, bx) fp32: h_t = a_t h_{t-1} + bx_t."""
+    x32 = xt.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(x32 * params["rg_wa"].astype(jnp.float32)
+                            + params["rg_ba"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(x32 * params["rg_wi"].astype(jnp.float32)
+                            + params["rg_bi"].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(params["rg_lambda"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i_gate * x32)
+    return a, bx
+
+
+def init_rglru_state(cfg, batch: int):
+    r = cfg.d_rnn or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), jnp.float32),
+    }
+
+
+def apply_rglru_block(params, cfg, x, state=None) -> Tuple[jnp.ndarray, dict]:
+    """Sequence mode. x [B,T,D] -> (out [B,T,D], final state)."""
+    b, t, d = x.shape
+    dt = x.dtype
+    if state is None:
+        state = init_rglru_state(cfg, b)
+    gate = jax.nn.gelu(x @ params["w_gate_br"].astype(dt))
+    xb = x @ params["w_x"].astype(dt)
+    gate = shard(gate, "batch", None, "heads")
+    xb = shard(xb, "batch", None, "heads")
+    xb, conv_carry = _conv1d_causal(xb, params["conv_w"], params["conv_b"],
+                                    state["conv"].astype(dt))
+    a, bx = _rg_lru_coeffs(params, xb)                    # [B,T,R] fp32
+    # fold the carried state into the first step: h_1 = a_1 h_0 + bx_1
+    bx = bx.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = (gate * h.astype(dt)) @ params["w_down"].astype(dt)
+    new_state = {"h": h[:, -1], "conv": conv_carry.astype(jnp.float32)}
+    return shard(out, "batch", "seq", None), new_state
+
+
+def decode_rglru_block(params, cfg, x, state) -> Tuple[jnp.ndarray, dict]:
+    """Single-token recurrence. x [B,1,D]."""
+    b, _, d = x.shape
+    dt = x.dtype
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate_br"].astype(dt))
+    xb = x[:, 0] @ params["w_x"].astype(dt)
+    wlen = cfg.conv_width
+    hist = jnp.concatenate([state["conv"].astype(dt), xb[:, None]], axis=1)
+    xb = sum(hist[:, wlen - 1 - i] * params["conv_w"][i].astype(dt)
+             for i in range(wlen)) + params["conv_b"].astype(dt)
+    a, bx = _rg_lru_coeffs(params, xb)
+    h = a * state["h"] + bx
+    out = (gate * h.astype(dt)) @ params["w_down"].astype(dt)
+    return out[:, None], {"h": h, "conv": hist[:, 1:].astype(jnp.float32)}

@@ -1,0 +1,202 @@
+"""RWKV6 ("Finch") time-mix block — attention-free, data-dependent decay.
+
+The matrix-valued state per head, ``S in R^{hd x hd}``, evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T           (w_t in (0,1), per channel)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Training/prefill use a *chunked* linear-attention formulation (``lax.scan``
+over chunks of 16 tokens carrying S): within a chunk the interaction is a
+masked [C, C] matmul; across chunks only the decayed state flows. This keeps
+memory at O(T·hd) instead of O(T·hd^2) and maps onto the MXU. fp32 is used for
+the recurrence (matching the official CUDA kernels); decays are clamped to
+keep the ``k/a`` rescaling inside fp32 range (DESIGN.md notes).
+
+Decode is the O(1) single-token recurrence on the cached state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import dense_init
+
+CHUNK = 16
+TS_LORA = 32     # token-shift lora rank
+W_LORA = 64      # decay lora rank
+
+
+def init_rwkv_tmix(key, cfg):
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim_
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 12)
+    return {
+        "w_r": dense_init(ks[0], (d, h * hd), dtype=dt),
+        "w_k": dense_init(ks[1], (d, h * hd), dtype=dt),
+        "w_v": dense_init(ks[2], (d, h * hd), dtype=dt),
+        "w_g": dense_init(ks[3], (d, h * hd), dtype=dt),
+        "w_o": dense_init(ks[4], (h * hd, d), dtype=dt),
+        # data-dependent token shift (5 targets: r,k,v,g,w)
+        "ts_mu0": jnp.zeros((d,), dt),
+        "ts_mu": jnp.zeros((5, d), dt),
+        "ts_lora_a": dense_init(ks[5], (d, 5 * TS_LORA), dtype=dt),
+        "ts_lora_b": (jax.random.normal(ks[6], (5, TS_LORA, d)) * 0.01).astype(dt),
+        # data-dependent decay w_t = exp(-exp(w0 + lora(x_w)))
+        "decay_w0": jnp.full((h * hd,), -6.0, dt),
+        "decay_lora_a": dense_init(ks[7], (d, W_LORA), dtype=dt),
+        "decay_lora_b": (jax.random.normal(ks[8], (W_LORA, h * hd)) * 0.01).astype(dt),
+        "bonus_u": (jax.random.normal(ks[9], (h, hd)) * 0.1).astype(dt),
+        "gn_scale": jnp.ones((h * hd,), dt),
+    }
+
+
+def _token_shift_targets(params, x, x_prev_last):
+    """Data-dependent lerp between x_t and x_{t-1} for the 5 projection inputs.
+
+    x [B,T,D]; x_prev_last [B,D] is the token before the window (decode carry).
+    Returns xs [5, B, T, D].
+    """
+    dt = x.dtype
+    xp = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    delta = xp - x
+    base = x + delta * params["ts_mu0"].astype(dt)
+    lora = jnp.tanh(base @ params["ts_lora_a"].astype(dt))
+    b, t, _ = x.shape
+    lora = lora.reshape(b, t, 5, TS_LORA)
+    offs = jnp.einsum("btir,ird->ibtd", lora, params["ts_lora_b"].astype(dt))
+    mu = params["ts_mu"].astype(dt)[:, None, None, :]
+    return x[None] + delta[None] * (mu + offs)
+
+
+def _decay(params, xw):
+    """Per-channel decay in (0,1); clamped for fp32-safe chunk rescaling."""
+    dt = xw.dtype
+    raw = params["decay_w0"].astype(dt) + \
+        jnp.tanh(xw @ params["decay_lora_a"].astype(dt)) @ params["decay_lora_b"].astype(dt)
+    return jnp.exp(-jnp.exp(jnp.clip(raw.astype(jnp.float32), -8.0, 1.0)))
+
+
+def _group_norm(x, scale, h):
+    """Per-head RMS-style normalization of the wkv output. x [B,T,H*hd]."""
+    b, t, dh = x.shape
+    xs = x.reshape(b, t, h, dh // h).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xs), axis=-1, keepdims=True)
+    out = (xs * jax.lax.rsqrt(var + 1e-5)).reshape(b, t, dh)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunked WKV6 scan. r,k,v,w [B,T,H,hd] fp32; u [H,hd]; s0 [B,H,hd,hd].
+
+    Returns (o [B,T,H,hd], sT)."""
+    b, t, h, hd = r.shape
+    pad = (-t) % CHUNK
+    if pad:
+        # identity-pad the tail: w=1 (no decay), r=k=v=0 (no contribution)
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    tp = t + pad
+    n = tp // CHUNK
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, n, CHUNK, h, hd), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), jnp.float32), -1)  # strict lower
+
+    def body(s, xs):
+        rr, kk, vv, ww = xs                       # [B,C,H,hd]
+        a = jnp.cumprod(ww, axis=1)               # inclusive cumprod
+        a_prev = jnp.concatenate([jnp.ones_like(a[:, :1]), a[:, :-1]], axis=1)
+        k_div = kk / a                            # bounded by decay clamp
+        r_sc = rr * a_prev
+        # intra-chunk interaction [B,H,C,C] (strictly causal) + bonus diagonal
+        m = jnp.einsum("bthc,bshc->bhts", r_sc, k_div) * tri
+        diag = jnp.einsum("bthc,bthc->bth", rr * u[None, None], kk)
+        o = jnp.einsum("bhts,bshd->bthd", m, vv) + diag[..., None] * vv
+        # carry-in contribution and state update
+        o = o + jnp.einsum("bthc,bhcd->bthd", r_sc, s)
+        a_last = a[:, -1]                         # [B,H,hd]
+        s = a_last[..., None] * (s + jnp.einsum("bshc,bshd->bhcd", k_div, vv))
+        return s, o
+
+    sT, oc = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    return jnp.moveaxis(oc, 0, 1).reshape(b, tp, h, hd)[:, :t], sT
+
+
+def init_rwkv_state(cfg, batch: int):
+    h, hd = cfg.n_heads, cfg.head_dim_
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_tmix": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "x_cmix": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def apply_rwkv_tmix(params, cfg, x, state=None) -> Tuple[jnp.ndarray, dict]:
+    """Sequence mode (train/prefill). x [B,T,D] -> (out, final state)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    dt = x.dtype
+    if state is None:
+        state = init_rwkv_state(cfg, b)
+    # NOTE (§Perf rwkv iteration, REFUTED): gathering the sequence once here
+    # and projecting on the gathered stream cuts collectives 1.4x but doubles
+    # per-device flops/bytes — the token-shift LoRA then runs REPLICATED over
+    # the model axis instead of seq-sharded. Net dominant-term regression
+    # (5.68 s -> 7.88 s); the seq-sharded projections below are kept. The real
+    # next lever is a sequence-parallel WKV ring (state handoff via
+    # collective_permute), documented as future work.
+    xs = _token_shift_targets(params, x, state["x_tmix"].astype(dt))
+    xr, xk, xv, xg, xw = xs[0], xs[1], xs[2], xs[3], xs[4]
+
+    def proj(inp, name):
+        y = inp @ params[name].astype(dt)
+        return shard(y.reshape(b, t, h, hd).astype(jnp.float32),
+                     "batch", None, "heads", None)
+
+    r, k, v = proj(xr, "w_r"), proj(xk, "w_k"), proj(xv, "w_v")
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    w = _decay(params, xw).reshape(b, t, h, hd)
+    w = shard(w, "batch", None, "heads", None)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    o, sT = _wkv_chunked(r, k, v, w, u, state["s"])
+    o = _group_norm(o.reshape(b, t, h * hd).astype(dt), params["gn_scale"], h)
+    out = (o * g) @ params["w_o"].astype(dt)
+    new_state = {"s": sT, "x_tmix": x[:, -1].astype(jnp.float32),
+                 "x_cmix": state["x_cmix"]}
+    return shard(out, "batch", "seq", None), new_state
+
+
+def decode_rwkv_tmix(params, cfg, x, state) -> Tuple[jnp.ndarray, dict]:
+    """Single-token recurrence. x [B,1,D]."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    dt = x.dtype
+    xs = _token_shift_targets(params, x, state["x_tmix"].astype(dt))
+    xr, xk, xv, xg, xw = (xs[i][:, 0] for i in range(5))
+
+    def proj(inp, name):
+        return (inp @ params[name].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+
+    r, k, v = proj(xr, "w_r"), proj(xk, "w_k"), proj(xv, "w_v")
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    w = _decay(params, xw).reshape(b, h, hd)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    s = state["s"]
+    kv = k[..., :, None] * v[..., None, :]                   # [B,H,hd,hd]
+    o = jnp.einsum("bhc,bhcd->bhd", r, s + u[None, ..., None] * kv)
+    s = w[..., None] * s + kv
+    o = _group_norm(o.reshape(b, 1, h * hd).astype(dt), params["gn_scale"], h)
+    out = (o * g[:, None]) @ params["w_o"].astype(dt)
+    new_state = {"s": s, "x_tmix": x[:, -1].astype(jnp.float32),
+                 "x_cmix": state["x_cmix"]}
+    return out, new_state

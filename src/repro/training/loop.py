@@ -1,0 +1,127 @@
+"""The training loop: checkpointing, auto-resume, straggler watchdog, dynamic
+fault injection — the part of the framework that has to survive a fleet.
+
+``run_training`` is used by ``launch/train.py``, the examples and the
+fault-tolerance tests. Reliability modes:
+
+  * ``off`` / ``align`` — plain or frozen-exponent training (align projection
+    lives inside ``train_step``);
+  * ``cim`` + ``inject: dynamic`` — fresh soft errors hit the stored weights
+    every step *before* the forward pass (paper Fig. 7). With
+    ``protect=one4n`` the exponent/sign field sees the post-ECC residual rate
+    (closed form, ``residual_ber_after_secded``); with ``protect=none`` it
+    sees the raw BER. Mantissa bits are always unprotected (the paper's
+    design decision).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import fault as fault_lib
+from repro.core.ecc import residual_ber_after_secded
+from repro.distributed import checkpoint as ckpt_lib
+from repro.distributed.elastic import StragglerWatchdog
+from repro.training import steps as steps_lib
+
+
+def make_fault_schedule(run: RunConfig):
+    """Per-step weight corruption for dynamic injection (or None)."""
+    rel = run.reliability
+    if rel.mode != "cim" or rel.ber <= 0 or rel.inject != "dynamic":
+        return None
+    codec = rel.cim_cfg.codec
+    if rel.protect == "one4n":
+        exp_ber = residual_ber_after_secded(rel.ber, codec.code.n)
+    else:
+        exp_ber = rel.ber
+
+    def corrupt(params, key):
+        k1, k2 = jax.random.split(key)
+        params = fault_lib.inject_pytree(
+            k1, params, fault_lib.FaultModel(ber=exp_ber, field="exponent_sign",
+                                             fmt=rel.fmt))
+        params = fault_lib.inject_pytree(
+            k2, params, fault_lib.FaultModel(ber=rel.ber, field="mantissa",
+                                             fmt=rel.fmt))
+        return params
+
+    return corrupt
+
+
+def run_training(cfg: ModelConfig, run: RunConfig, batches: Iterable[Dict],
+                 log_fn: Optional[Callable[[int, Dict], None]] = None,
+                 state: Optional[steps_lib.TrainState] = None,
+                 sleep_injector: Optional[Callable[[int], float]] = None):
+    """Train for ``run.steps`` steps with checkpoint/resume + watchdog.
+
+    Returns (final state, history list, info dict)."""
+    corrupt = make_fault_schedule(run)
+    rel = run.reliability
+
+    def wrapped_step(state, batch, key):
+        if corrupt is not None:
+            faulty = corrupt(state.params, key)
+            state = steps_lib.TrainState(faulty, state.opt, state.exps,
+                                         state.signs, state.ef_error)
+        return base_step(state, batch)
+
+    base_step = steps_lib.make_train_step(cfg, run)
+    step_fn = jax.jit(wrapped_step) if corrupt is not None else \
+        jax.jit(lambda s, b, k: base_step(s, b))
+
+    start_step = 0
+    ckpt_dir = run.checkpoint_dir
+    checkpointer = None
+    if ckpt_dir:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        if state is None:
+            latest = ckpt_lib.latest_step(ckpt_dir)
+            if latest is not None:
+                abstract = jax.eval_shape(
+                    lambda: steps_lib.init_train_state(
+                        jax.random.PRNGKey(run.seed), cfg, run))
+                state, start_step = ckpt_lib.restore(abstract, ckpt_dir)
+                state = jax.tree_util.tree_map(
+                    lambda x: None if x is None else jnp.asarray(x), state,
+                    is_leaf=lambda x: x is None)
+        checkpointer = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    if state is None:
+        state = steps_lib.init_train_state(jax.random.PRNGKey(run.seed), cfg, run)
+
+    watchdog = StragglerWatchdog(factor=run.straggler_factor)
+    history, stragglers = [], 0
+    it = iter(batches)
+    for step in range(start_step, run.steps):
+        batch = next(it)
+        t0 = time.time()
+        if sleep_injector is not None:   # simulated host slowness (tests)
+            time.sleep(sleep_injector(step))
+        key = jax.random.fold_in(jax.random.PRNGKey(run.seed + 17), step)
+        state, metrics = step_fn(state, batch, key)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        # first step includes jit compile — never feed it to the watchdog
+        if step > start_step and watchdog.observe(dt):
+            stragglers += 1
+        metrics.update(step=step, step_time=dt)
+        history.append(metrics)
+        if log_fn:
+            log_fn(step, metrics)
+        if checkpointer and (step + 1) % run.checkpoint_every == 0:
+            checkpointer.save_async(state, step + 1)
+
+    if checkpointer:
+        checkpointer.save_async(state, run.steps)
+        checkpointer.wait()
+        checkpointer.close()
+    info = {"stragglers_flagged": stragglers, "resumed_from": start_step,
+            "ewma_step_time": watchdog.ewma}
+    return state, history, info

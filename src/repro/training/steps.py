@@ -1,0 +1,113 @@
+"""jit-able train / prefill / serve steps with the reliability feature wired in.
+
+``train_step`` implements: forward (+MoE aux) -> grad -> global-norm clip ->
+(optional int8 error-feedback compression of the cross-pod gradient) -> AdamW
+-> frozen-exponent projection (paper §III-C fine-tuning: mantissa-only
+updates). ``serve_step`` is one decode token; ``prefill_step`` returns
+last-token logits + caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import align as align_lib
+from repro.core.api import ReliabilityConfig
+from repro.models import lm
+from repro.models.losses import lm_loss
+from repro.optim import adamw
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: object
+    opt: object
+    exps: object          # frozen block exponents (None leaves when mode=off)
+    signs: object         # frozen signs
+    ef_error: object      # error-feedback accumulator (grad compression) or None
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.exps, self.signs, self.ef_error), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(key, cfg: ModelConfig, run: RunConfig) -> TrainState:
+    params = lm.init_lm(key, cfg)
+    rel = run.reliability
+    exps = signs = jax.tree_util.tree_map(lambda _: None, params)
+    if rel.enabled():
+        params, exps = align_lib.align_pytree(params, rel.align_cfg)
+        signs = jax.tree_util.tree_map(
+            lambda w, e: jnp.sign(w).astype(jnp.int8) if e is not None else None,
+            params, exps, is_leaf=lambda x: x is None)
+    ef = None
+    if run.grad_compression:
+        ef = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=adamw.init_opt_state(params),
+                      exps=exps, signs=signs, ef_error=ef)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    unroll: bool = False) -> Callable:
+    rel = run.reliability
+    opt_cfg = adamw.AdamWConfig(weight_decay=run.weight_decay,
+                                grad_clip=run.grad_clip)
+    lr_fn = adamw.make_lr_schedule(run.learning_rate, run.warmup_steps, run.steps)
+
+    cdt = cfg.cdtype()
+
+    def _cast(p):
+        # Cast weights to the compute dtype ONCE at the step top, while still
+        # sharded: every downstream FSDP all-gather then moves bf16, not fp32
+        # (XLA does not hoist the convert above the gather by itself —
+        # §Perf command-r iteration 3). Grads return in fp32 at this boundary.
+        if p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(cdt)
+        return p
+
+    def loss_fn(params, batch):
+        params_c = jax.tree_util.tree_map(_cast, params)
+        logits, aux, _ = lm.forward(params_c, cfg, batch, remat=run.remat,
+                                    unroll=unroll)
+        loss, metrics = lm_loss(logits, batch["labels"])
+        return loss + aux, (metrics, aux)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, (metrics, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
+
+        ef = state.ef_error
+        if ef is not None:
+            from repro.distributed.compression import compress_decompress
+            grads, ef = compress_decompress(grads, ef)
+
+        lr = lr_fn(state.opt["step"])
+        params, opt = adamw.adamw_update(grads, state.opt, state.params, lr, opt_cfg)
+        if rel.enabled():
+            params = align_lib.project_pytree(params, state.exps, state.signs,
+                                              rel.align_cfg)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr, aux_loss=aux)
+        return TrainState(params, opt, state.exps, state.signs, ef), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, unroll=unroll)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    def serve_step(params, caches, tokens):
+        return lm.decode(params, cfg, caches, tokens, unroll=unroll)
+    return serve_step

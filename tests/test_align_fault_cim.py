@@ -1,0 +1,224 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import align, bitops, cim, fault
+from repro.core.bitops import FP16
+
+
+def _rand_w(key, k=64, j=32, scale=0.1):
+    return jax.random.normal(key, (k, j)) * scale
+
+
+# ---------------------------------------------------------------- alignment
+
+@pytest.mark.parametrize("n,index", [(4, 1), (4, 2), (8, 2), (8, 3), (16, 2)])
+def test_alignment_invariant_shared_exponent(n, index):
+    w = _rand_w(jax.random.PRNGKey(0), k=4 * n, j=24)
+    cfg = align.AlignmentConfig(n_group=n, index=index)
+    w_al, e = align.align_matrix(w, cfg)
+    _, ee, _ = bitops.split_fields(w_al, FP16)
+    ee = np.asarray(ee).reshape(4, n, 24)
+    assert (ee == ee[:, :1]).all(), "all weights in a block share one exponent"
+    assert (ee[:, 0] == np.asarray(e)).all()
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_alignment_within_range_property(seed):
+    """|aligned| ∈ [LL, UL] of the block exponent (Fig. 5 invariant)."""
+    key = jax.random.PRNGKey(seed)
+    w = _rand_w(key, 32, 8, scale=float(jax.random.uniform(key, ()) * 2 + 1e-3))
+    cfg = align.AlignmentConfig(n_group=8, index=2)
+    w_al, e = align.align_matrix(w, cfg)
+    ll, ul = bitops.exponent_range(e, FP16)
+    mag = np.abs(np.asarray(w_al, np.float32)).reshape(4, 8, 8)
+    assert (mag >= np.asarray(ll)[:, None] - 1e-12).all()
+    assert (mag <= np.asarray(ul)[:, None] + 1e-12).all()
+
+
+def test_alignment_monotone_within_sign_class():
+    """Eq. 4 is a monotone min-max map: ordering of positives preserved."""
+    w = jnp.asarray(np.linspace(0.011, 0.5, 8)[:, None], jnp.float32)
+    cfg = align.AlignmentConfig(n_group=8, index=2)
+    w_al, _ = align.align_matrix(w, cfg)
+    v = np.asarray(w_al).ravel()
+    assert (np.diff(v) >= 0).all()
+
+
+def test_projection_idempotent_and_freezes_sign():
+    key = jax.random.PRNGKey(1)
+    w = _rand_w(key)
+    cfg = align.AlignmentConfig(n_group=8, index=2)
+    w_al, e = align.align_matrix(w, cfg)
+    sign0 = jnp.sign(w_al)
+    upd = w_al + jax.random.normal(jax.random.PRNGKey(2), w_al.shape) * 0.05
+    p1 = align.project_to_block_exponent(upd, e, sign0, cfg)
+    p2 = align.project_to_block_exponent(p1, e, sign0, cfg)
+    assert np.allclose(np.asarray(p1), np.asarray(p2))
+    assert (np.sign(np.asarray(p1)) == np.asarray(sign0)).all()
+    _, ee, _ = bitops.split_fields(p1, FP16)
+    assert (np.asarray(ee).reshape(8, 8, 32) == np.asarray(e)[:, None]).all()
+
+
+def test_align_pytree_skips_vectors():
+    params = {"w": _rand_w(jax.random.PRNGKey(0)), "scale": jnp.ones((16,))}
+    aligned, exps = align.align_pytree(params, align.AlignmentConfig())
+    assert exps["scale"] is None
+    assert (np.asarray(aligned["scale"]) == 1).all()
+    assert exps["w"] is not None
+
+
+def test_ragged_last_block():
+    """K not divisible by N: remaining weights form an extra block (fn. 2)."""
+    w = _rand_w(jax.random.PRNGKey(3), k=19, j=8)
+    w_al, e = align.align_matrix(w, align.AlignmentConfig(n_group=8, index=2))
+    assert w_al.shape == (19, 8)
+    assert e.shape == (3, 8)
+
+
+# ---------------------------------------------------------------- fault
+
+def test_fault_zero_ber_is_identity():
+    w = _rand_w(jax.random.PRNGKey(0))
+    out = fault.inject(jax.random.PRNGKey(1), w, 0.0, "full")
+    assert (np.asarray(out) == np.asarray(w)).all()
+
+
+@pytest.mark.parametrize("field", ["sign", "exponent", "mantissa", "full"])
+def test_fault_flip_rate_statistics(field):
+    """Empirical flip rate matches BER (binomial CI)."""
+    n = 4096
+    ber = 0.05
+    w = jnp.full((n, 16), 1.5, jnp.float32)
+    out = fault.inject(jax.random.PRNGKey(42), w, ber, field)
+    xor = np.asarray(bitops.to_bits(out)) ^ np.asarray(bitops.to_bits(w))
+    flipped = np.unpackbits(xor.view(np.uint8)).sum()
+    n_bits = n * 16 * len(FP16.field_bit_positions(field))
+    rate = flipped / n_bits
+    assert abs(rate - ber) < 5 * np.sqrt(ber * (1 - ber) / n_bits)
+
+
+@pytest.mark.parametrize("field", ["sign", "exponent", "mantissa"])
+def test_fault_confined_to_field(field):
+    # Power-of-two values (zero mantissa): exponent flips give ±inf, never NaN,
+    # so the fp32 storage roundtrip is bit-exact and XOR isolates the field.
+    # (With nonzero mantissas, exp->31 flips produce NaNs whose payload is
+    # canonicalized by the fp32 cast — numerically faithful, bitwise lossy.)
+    w = jnp.full((128, 64), 2.0, jnp.float32) * jnp.sign(
+        jax.random.normal(jax.random.PRNGKey(0), (128, 64)))
+    out = fault.inject(jax.random.PRNGKey(7), w, 0.2, field)
+    xor = np.asarray(bitops.to_bits(out) ^ bitops.to_bits(w)).astype(np.uint32)
+    allowed = np.zeros((), np.uint32)
+    for p in FP16.field_bit_positions(field):
+        allowed |= np.uint32(1 << p)
+    assert (xor & ~allowed).max() == 0
+
+
+def test_fault_pytree_skips_vectors():
+    params = {"w": _rand_w(jax.random.PRNGKey(0)), "b": jnp.zeros((32,))}
+    model = fault.FaultModel(ber=0.5, field="full")
+    out = fault.inject_pytree(jax.random.PRNGKey(0), params, model)
+    assert (np.asarray(out["b"]) == 0).all()
+    assert not (np.asarray(out["w"]) == np.asarray(params["w"])).all()
+
+
+# ---------------------------------------------------------------- CIM store
+
+def test_cim_pack_read_exact_roundtrip():
+    w = _rand_w(jax.random.PRNGKey(5), 64, 48)
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    for protect in ("one4n", "none"):
+        store = cim.pack(w_al, cim.CIMConfig(protect=protect))
+        out, stats = cim.read(store)
+        assert (np.asarray(out) == np.asarray(w_al, np.float32)).all()
+        assert int(stats["uncorrectable"]) == 0
+
+
+def test_cim_single_error_per_segment_fully_corrected():
+    w = _rand_w(jax.random.PRNGKey(6), 32, 16)
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    store = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
+    cw = store.codewords
+    cw = cw.at[..., 3].set(1 - cw[..., 3])  # one flip in every segment
+    store_f = cim.CIMStore(store.man, store.sign, store.exp, cw, store.shape, store.cfg)
+    out, stats = cim.read(store_f)
+    assert (np.asarray(out) == np.asarray(w_al, np.float32)).all()
+    assert int(stats["corrected"]) == int(np.prod(cw.shape[:-1]))
+
+
+def test_cim_protection_beats_unprotected():
+    """Fig. 6 mechanism: at BER 1e-3 on exp/sign cells, One4N keeps weights
+    near-exact while unprotected weights blow up."""
+    w = _rand_w(jax.random.PRNGKey(8), 128, 64)
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    key = jax.random.PRNGKey(9)
+    errs = {}
+    for protect in ("one4n", "none"):
+        store = cim.pack(w_al, cim.CIMConfig(protect=protect))
+        faulty = cim.inject(key, store, 1e-3, "exponent_sign")
+        out, _ = cim.read(faulty)
+        errs[protect] = float(jnp.max(jnp.abs(out - jnp.asarray(w_al, jnp.float32))))
+    assert errs["one4n"] < 1.0
+    assert errs["none"] > 100.0
+
+
+def test_cim_mantissa_errors_bounded():
+    """Mantissa flips perturb |w| by < one ulp span — the Fig. 2 robustness."""
+    w = _rand_w(jax.random.PRNGKey(10), 64, 32)
+    w_al, e = align.align_matrix(w, align.AlignmentConfig())
+    store = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
+    faulty = cim.inject(jax.random.PRNGKey(11), store, 1e-2, "mantissa")
+    out, _ = cim.read(faulty)
+    _, ul = bitops.exponent_range(e, FP16)
+    bound = float(jnp.max(ul))  # mantissa error < 2^(e-15) <= UL
+    assert float(jnp.max(jnp.abs(out - jnp.asarray(w_al, jnp.float32)))) <= bound
+
+
+def test_cim_deploy_pytree_and_stats():
+    params = {"a": _rand_w(jax.random.PRNGKey(0), 32, 16),
+              "norm": jnp.ones((16,))}
+    stores, aligned = cim.deploy_pytree(params, cim.CIMConfig())
+    assert isinstance(stores["a"], cim.CIMStore)
+    assert not isinstance(stores["norm"], cim.CIMStore)
+    faulty = cim.inject_pytree(jax.random.PRNGKey(1), stores, 1e-3)
+    restored, stats = cim.read_pytree(faulty)
+    assert restored["a"].shape == (32, 16)
+    assert (np.asarray(restored["norm"]) == 1).all()
+    assert "corrected" in stats
+
+
+def test_cim_store_is_pytree():
+    w = _rand_w(jax.random.PRNGKey(0), 16, 16)
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    store = cim.pack(w_al, cim.CIMConfig())
+    leaves = jax.tree_util.tree_leaves(store)
+    assert len(leaves) == 4
+    mapped = jax.tree_util.tree_map(lambda x: x, store)
+    assert isinstance(mapped, cim.CIMStore)
+
+
+def test_cim_per_weight_traditional_mode():
+    """Table III 'traditional ECC for exponent & sign', functional: SECDED(6)
+    per weight, exact roundtrip, single-flip correction, and EXACTLY 40x the
+    One4N check bits (the paper's headline ratio)."""
+    w = _rand_w(jax.random.PRNGKey(12), 64, 48)
+    w16 = jnp.asarray(jnp.asarray(w, jnp.float16), jnp.float32)
+    store = cim.pack(w16, cim.CIMConfig(protect="per_weight"))
+    out, stats = cim.read(store)
+    assert (np.asarray(out) == np.asarray(w16)).all()
+    # flip one bit in every codeword -> fully corrected
+    cw = store.codewords.at[..., 4].set(1 - store.codewords[..., 4])
+    out2, st2 = cim.read(cim.CIMStore(store.man, store.sign, store.exp, cw,
+                                      store.shape, store.cfg))
+    assert (np.asarray(out2) == np.asarray(w16)).all()
+    assert int(st2["corrected"]) == 64 * 48
+    # 40x check-bit ratio vs One4N (Table III)
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    s_pw = cim.pack(w_al, cim.CIMConfig(protect="per_weight"))
+    s_o4 = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
+    pw_check = s_pw.codewords.size - 64 * 48 * 6
+    o4_check = s_o4.codewords.size - (64 // 8 * 3) * (5 * 16 + 8 * 16)
+    assert pw_check / o4_check == 40.0

@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+from repro.core.bitops import BF16, FP16, FP32
+
+
+@pytest.mark.parametrize("fmt", [FP16, BF16, FP32])
+def test_roundtrip_bits(fmt):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(256), fmt.float_dtype)
+    y = bitops.from_bits(bitops.to_bits(x, fmt), fmt)
+    assert (np.asarray(x) == np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("fmt", [FP16, BF16, FP32])
+def test_split_combine_identity(fmt):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(512) * 10, fmt.float_dtype)
+    s, e, m = bitops.split_fields(x, fmt)
+    y = bitops.combine_fields(s, e, m, fmt)
+    assert (np.asarray(x) == np.asarray(y)).all()
+
+
+@given(st.floats(min_value=6e-5, max_value=60000.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_fp16_field_semantics(v):
+    """value == (-1)^s * 2^(e-15) * (1 + m/2^10) for normal fp16 numbers."""
+    x = np.float16(v)
+    if not np.isfinite(x) or x == 0:
+        return
+    s, e, m = (int(np.asarray(t)[0]) for t in bitops.split_fields(jnp.asarray([x]), FP16))
+    if e == 0:
+        return  # subnormal
+    recon = (-1.0) ** s * 2.0 ** (e - 15) * (1 + m / 1024.0)
+    assert np.isclose(recon, float(x), rtol=1e-6)
+
+
+def test_field_positions():
+    assert list(FP16.field_bit_positions("sign")) == [15]
+    assert list(FP16.field_bit_positions("exponent")) == [10, 11, 12, 13, 14]
+    assert len(FP16.field_bit_positions("mantissa")) == 10
+    assert len(FP16.field_bit_positions("full")) == 16
+    assert list(FP16.field_bit_positions("exponent_sign")) == list(range(10, 16))
+
+
+def test_exponent_range_matches_fig5():
+    ll, ul = bitops.exponent_range(jnp.asarray([15]), FP16)  # e=0
+    assert float(ll[0]) == 1.0
+    assert float(ul[0]) == 2.0 - 2.0 ** -10
+
+
+@given(st.integers(min_value=0, max_value=2**16 - 1),
+       st.integers(min_value=1, max_value=16))
+@settings(max_examples=100, deadline=None)
+def test_pack_unpack_bits(word, nbits):
+    word = word & ((1 << nbits) - 1)
+    bits = bitops.unpack_bits(jnp.asarray([word]), nbits)
+    assert bits.shape == (1, nbits)
+    back = int(np.asarray(bitops.pack_bits(bits))[0])
+    assert back == word
+
+
+def test_quantize_fp8_monotone_and_exact_on_grid():
+    x = jnp.asarray([0.0, 0.5, 1.0, 1.5, -2.0, 448.0])
+    y = bitops.quantize_to_format(x, bitops.FP8_E4M3)
+    assert np.allclose(np.asarray(y), np.asarray(x))  # all on e4m3 grid
+    z = bitops.quantize_to_format(jnp.asarray([1.06]), bitops.FP8_E4M3)
+    assert float(z[0]) in (1.0, 1.125)
+
+
+@pytest.mark.parametrize("fmt", [bitops.FP8_E4M3, bitops.FP8_E5M2])
+def test_fp8_pack_unpack_roundtrip(fmt):
+    """Beyond-paper FP8 support: grid values survive pack->unpack exactly."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(512) * 4, jnp.float32)
+    xq = bitops.quantize_to_format(x, fmt)
+    back = bitops.from_bits(bitops.to_bits(xq, fmt), fmt)
+    assert (np.asarray(back) == np.asarray(xq)).all()
+
+
+def test_fp8_injection_field_confined():
+    from repro.core import fault
+    w = jnp.full((64, 32), 1.0, jnp.float32)
+    out = fault.inject(jax.random.PRNGKey(1), w, 0.2, "mantissa", bitops.FP8_E4M3)
+    # mantissa flips at exp=0 keep |w| within [1, 2)
+    a = np.abs(np.asarray(out))
+    assert (a >= 1.0).all() and (a < 2.0).all()

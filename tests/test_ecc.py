@@ -1,0 +1,102 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ecc import MAX_SEGMENT_DATA_BITS, One4NRowCodec, SecdedCode, \
+    secded_redundant_bits
+
+
+@pytest.mark.parametrize("d", [6, 10, 32, 72, 84, 96, 104, 160])
+def test_clean_roundtrip(d):
+    rng = np.random.default_rng(d)
+    code = SecdedCode(d)
+    data = jnp.asarray(rng.integers(0, 2, (8, d)), jnp.uint8)
+    out, status = code.decode(code.encode(data))
+    assert (np.asarray(out) == np.asarray(data)).all()
+    assert (np.asarray(status) == 0).all()
+
+
+@given(st.integers(min_value=0, max_value=10 ** 9),
+       st.sampled_from([6, 96, 104]),
+       st.data())
+@settings(max_examples=60, deadline=None)
+def test_any_single_flip_corrected(seed, d, data_strategy):
+    """SECDED property: every single-bit flip (data, parity or overall bit)
+    is corrected — the paper's case (ii)."""
+    rng = np.random.default_rng(seed)
+    code = SecdedCode(d)
+    data = jnp.asarray(rng.integers(0, 2, (1, d)), jnp.uint8)
+    cw = code.encode(data)
+    pos = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
+    cw = cw.at[0, pos].set(1 - cw[0, pos])
+    out, status = code.decode(cw)
+    assert (np.asarray(out) == np.asarray(data)).all()
+    assert int(status[0]) == 1
+
+
+@given(st.integers(min_value=0, max_value=10 ** 9), st.data())
+@settings(max_examples=60, deadline=None)
+def test_any_double_flip_detected(seed, data_strategy):
+    """Every 2-bit flip is flagged uncorrectable — the paper's case (iii)."""
+    rng = np.random.default_rng(seed)
+    code = SecdedCode(104)
+    data = jnp.asarray(rng.integers(0, 2, (1, 104)), jnp.uint8)
+    cw = code.encode(data)
+    p1 = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
+    p2 = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
+    if p1 == p2:
+        return
+    for p in (p1, p2):
+        cw = cw.at[0, p].set(1 - cw[0, p])
+    _, status = code.decode(cw)
+    assert int(status[0]) == 2
+
+
+def test_paper_redundancy_counts():
+    """Every redundant-bit count quoted in the paper (§III-A2, §III-B1, Tab III)."""
+    assert secded_redundant_bits(6) == 5      # naive per-weight sign+exp
+    assert secded_redundant_bits(10) == 5     # per-weight mantissa
+    assert secded_redundant_bits(96) == 8     # unified 16-weight row
+    assert secded_redundant_bits(104) == 8    # One4N N=8 half-payload
+    assert secded_redundant_bits(160) == 9    # row of 16 mantissas
+
+
+def test_one4n_paper_layout_n8():
+    codec = One4NRowCodec(n_group=8)
+    assert codec.payload_bits == 5 * 16 + 8 * 16 == 208     # Eq. 3
+    assert codec.n_segments == 2                            # "two rows"
+    assert codec.segment_bits == 104
+    assert codec.redundant_bits_per_block == 16             # 8 + 8
+    # 256x256 array: 256 rows / 8 = 32 blocks -> 512 redundant bits (Table III)
+    assert 32 * codec.redundant_bits_per_block == 512
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_one4n_roundtrip_and_correction(n):
+    rng = np.random.default_rng(n)
+    codec = One4NRowCodec(n_group=n)
+    exp_row = jnp.asarray(rng.integers(0, 32, (3, 2, 16)), jnp.uint8)
+    signs = jnp.asarray(rng.integers(0, 2, (3, 2, n, 16)), jnp.uint8)
+    cw = codec.encode(exp_row, signs)
+    assert cw.shape[-2:] == (codec.n_segments, codec.code.n)
+    e2, s2, status = codec.decode(cw)
+    assert (np.asarray(e2) == np.asarray(exp_row)).all()
+    assert (np.asarray(s2) == np.asarray(signs)).all()
+    assert (np.asarray(status) == 0).all()
+    # flip one bit in every segment -> still decodes exactly
+    cw = cw.at[..., 11].set(1 - cw[..., 11])
+    e3, s3, status = codec.decode(cw)
+    assert (np.asarray(e3) == np.asarray(exp_row)).all()
+    assert (np.asarray(s3) == np.asarray(signs)).all()
+    assert (np.asarray(status) == 1).all()
+
+
+def test_syndrome_semantics_r7():
+    """Fig. 4 ③: R[7] (overall parity) distinguishes 1-flip from 2-flip."""
+    code = SecdedCode(104)
+    data = jnp.zeros((1, 104), jnp.uint8)
+    cw = code.encode(data)
+    _, st1 = code.decode(cw.at[0, 5].set(1))
+    _, st2 = code.decode(cw.at[0, 5].set(1).at[0, 9].set(1))
+    assert int(st1[0]) == 1 and int(st2[0]) == 2

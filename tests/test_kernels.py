@@ -1,0 +1,125 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import align, bitops
+from repro.kernels.bfp_matmul import ops as bfp_ops
+from repro.kernels.bfp_matmul import ref as bfp_ref
+from repro.kernels.bfp_matmul.kernel import bfp_matmul_pallas
+from repro.kernels.fault_inject import ops as fi_ops
+from repro.kernels.fault_inject import ref as fi_ref
+from repro.kernels.fault_inject.kernel import fault_inject_pallas
+
+
+def _packed(key, k, n, n_group=8, scale=0.05):
+    w = jax.random.normal(key, (k, n)) * scale
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig(n_group=n_group, index=2))
+    return bfp_ref.pack_bfp(w_al, n_group), w_al
+
+
+# ---------------------------------------------------------------- bfp matmul
+
+@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 256),
+                                   (128, 2048, 384), (8, 512, 128)])
+def test_bfp_matmul_shapes(m, k, n):
+    (man, exp), w_al = _packed(jax.random.PRNGKey(m + k + n), k, n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    out = bfp_ops.bfp_matmul(x, man, exp, block_m=min(128, m))
+    ref = bfp_ref.bfp_matmul_ref(x, man, exp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # dequant path is bit-exact vs the aligned fp16 weights
+    direct = x @ jnp.asarray(w_al, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_bfp_matmul_dtypes(xdtype):
+    (man, exp), _ = _packed(jax.random.PRNGKey(0), 512, 128)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 512)).astype(xdtype)
+    out = bfp_ops.bfp_matmul(x, man, exp)
+    ref = bfp_ref.bfp_matmul_ref(x, man, exp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_group", [4, 8, 16])
+def test_bfp_matmul_group_sizes(n_group):
+    (man, exp), _ = _packed(jax.random.PRNGKey(2), 512, 128, n_group=n_group)
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 512))
+    out = bfp_ops.bfp_matmul(x, man, exp, n_group=n_group)
+    ref = bfp_ref.bfp_matmul_ref(x, man, exp, n_group)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 512), (128, 256, 256),
+                                      (64, 128, 1024)])
+def test_bfp_matmul_block_shapes(bm, bn, bk):
+    (man, exp), _ = _packed(jax.random.PRNGKey(4), 1024, 256)
+    x = jax.random.normal(jax.random.PRNGKey(5), (128, 1024))
+    out = bfp_matmul_pallas(x, man, exp, n_group=8, block_m=bm, block_n=bn,
+                            block_k=bk, interpret=True)
+    ref = bfp_ref.bfp_matmul_ref(x, man, exp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pack_bfp_roundtrip_exact():
+    (man, exp), w_al = _packed(jax.random.PRNGKey(6), 256, 64)
+    deq = bfp_ref.dequant_ref(man, exp)
+    assert (np.asarray(deq) == np.asarray(w_al, np.float32)).all()
+
+
+def test_cim_linear_wrapper():
+    (man, exp), w_al = _packed(jax.random.PRNGKey(7), 512, 128)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 32, 512))
+    out = bfp_ops.cim_linear(x, man, exp)
+    ref = x.reshape(-1, 512) @ jnp.asarray(w_al, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 128), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- fault inject
+
+@pytest.mark.parametrize("shape", [(256, 256), (512, 384), (128, 1024)])
+@pytest.mark.parametrize("positions", [(15,), (10, 11, 12, 13, 14),
+                                       tuple(range(16))])
+def test_fault_inject_matches_ref(shape, positions):
+    bits = jax.random.randint(jax.random.PRNGKey(0), shape, 0, 2 ** 16).astype(jnp.uint16)
+    out = fi_ops.fault_inject_bits(bits, seed=3, ber=0.02, positions=positions)
+    ref = fi_ref.fault_inject_ref(bits, seed=3, ber=0.02, positions=positions)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_fault_inject_tiling_independent():
+    bits = jax.random.randint(jax.random.PRNGKey(1), (512, 512), 0, 2 ** 16).astype(jnp.uint16)
+    a = fault_inject_pallas(bits, seed=9, ber=0.01, positions=(10, 15),
+                            block_r=512, block_c=512, interpret=True)
+    b = fault_inject_pallas(bits, seed=9, ber=0.01, positions=(10, 15),
+                            block_r=128, block_c=256, interpret=True)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_fault_inject_rate_and_confinement():
+    bits = jnp.zeros((1024, 512), jnp.uint16)
+    positions = (10, 11, 12, 13, 14)
+    out = fi_ops.fault_inject_bits(bits, seed=11, ber=0.05, positions=positions)
+    xor = np.asarray(out)
+    allowed = sum(1 << p for p in positions)
+    assert (xor & ~np.uint16(allowed)).max() == 0
+    flips = np.unpackbits(xor.view(np.uint8)).sum()
+    n_bits = bits.size * len(positions)
+    assert abs(flips / n_bits - 0.05) < 5 * np.sqrt(0.05 * 0.95 / n_bits)
+
+
+def test_fault_inject_fp16_field_semantics():
+    w = jnp.full((256, 256), 1.0, jnp.float32)
+    out = fi_ops.fault_inject_fp16(w, seed=5, ber=0.01, field="exponent")
+    xor = np.asarray(bitops.to_bits(out) ^ bitops.to_bits(w)).astype(np.uint32)
+    assert (xor & ~np.uint32(0x7C00)).max() == 0
+    assert xor.sum() > 0

@@ -1,0 +1,115 @@
+"""End-to-end behaviour of the paper's system: train -> align -> CIM deploy ->
+inject -> ECC -> evaluate, plus serving-path integration (BFP kernel) and the
+closed-form residual-BER model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config
+from repro.core import align, cim, ecc
+from repro.core.api import ReliabilityConfig
+from repro.data.synthetic import MarkovLM
+from repro.models import lm
+from repro.models.losses import lm_loss
+from repro.training.loop import run_training
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("olmo-1b").reduced()
+    data = MarkovLM(cfg.vocab_size, 48, 8, seed=3)
+    rel = ReliabilityConfig(mode="align", n_group=8, index=2)
+    run = RunConfig(arch="olmo-1b", steps=60, checkpoint_dir="", remat=False,
+                    learning_rate=1e-3, reliability=rel)
+    state, hist, _ = run_training(cfg, run, iter(data))
+    batch = data.batch(777)
+
+    def eval_fn(params):
+        logits, _, _ = lm.forward(params, cfg, batch, remat=False)
+        return float(lm_loss(logits, batch["labels"])[1]["accuracy"])
+
+    return cfg, state, eval_fn, hist
+
+
+def test_aligned_training_learns(trained):
+    _, _, _, hist = trained
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1
+
+
+def test_trained_params_stay_aligned(trained):
+    cfg, state, _, _ = trained
+    w = state.params["unembed"]
+    from repro.core import bitops
+    _, e, _ = bitops.split_fields(w)
+    e = np.asarray(e).reshape(-1, 8, w.shape[1])
+    assert (e == e[:, :1]).all(), "frozen-exponent training kept blocks aligned"
+
+
+def test_e2e_protection_pipeline(trained):
+    """The paper's headline at smoke scale: at a damaging BER, One4N keeps
+    accuracy; unprotected deployment loses it."""
+    cfg, state, eval_fn, _ = trained
+    clean = eval_fn(state.params)
+    key = jax.random.PRNGKey(5)
+    accs = {}
+    for protect in ("one4n", "none"):
+        ccfg = cim.CIMConfig(n_group=8, index=2, protect=protect)
+        stores, _ = cim.deploy_pytree(state.params, ccfg)
+        vals = []
+        for t in range(3):
+            faulty = cim.inject_pytree(jax.random.fold_in(key, t), stores, 1e-4)
+            restored, _ = cim.read_pytree(faulty)
+            vals.append(eval_fn(restored))
+        accs[protect] = float(np.mean(vals))
+    assert accs["one4n"] >= clean - 0.08
+    assert accs["one4n"] > accs["none"]
+
+
+def test_serve_with_bfp_kernel_matches_dense(trained):
+    """cim_linear (Pallas bfp_matmul) == dense matmul on aligned weights."""
+    from repro.kernels.bfp_matmul import ops as bfp_ops
+    from repro.kernels.bfp_matmul import ref as bfp_ref
+    cfg, state, _, _ = trained
+    w = jnp.asarray(state.params["unembed"], jnp.float32)   # aligned by training
+    k = w.shape[0] - (w.shape[0] % 8)
+    w = w[:k]
+    man, exp = bfp_ref.pack_bfp(w, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, k))
+    out = bfp_ops.cim_linear(x, man, exp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_residual_ber_model_matches_montecarlo():
+    """Closed-form post-SECDED residual rate vs bit-accurate simulation."""
+    rng = np.random.default_rng(0)
+    code = ecc.SecdedCode(104)
+    p = 5e-3
+    n_words, n = 4000, code.n
+    data = jnp.asarray(rng.integers(0, 2, (n_words, 104)), jnp.uint8)
+    cw = code.encode(data)
+    flips = jnp.asarray(rng.random((n_words, n)) < p, jnp.uint8)
+    out, _ = code.decode(cw ^ flips)
+    err_rate = float(jnp.mean(out != data))
+    pred = ecc.residual_ber_after_secded(p, n)
+    assert err_rate == pytest.approx(pred, rel=0.5)
+
+
+def test_int8_kv_cache_close_to_bf16():
+    cfg = get_config("granite-3-8b").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    from repro.training import steps as steps_lib
+    toks = jnp.arange(2, dtype=jnp.int32)[:, None] % cfg.vocab_size
+    outs = {}
+    for mode in ("compute", "int8"):
+        c = dataclasses.replace(cfg, kv_cache_dtype=mode)
+        caches = lm.init_caches(c, 2, 16, prefilled=0)
+        serve = jax.jit(steps_lib.make_serve_step(c))
+        logits = None
+        for i in range(4):
+            logits, caches = serve(params, caches, toks)
+        outs[mode] = np.asarray(jax.nn.softmax(logits))
+    assert np.abs(outs["compute"] - outs["int8"]).max() < 0.05
