@@ -106,6 +106,19 @@ def finetune_cnn(params, task, align_cfg, steps=120, lr=1e-3):
     return p
 
 
+def make_engine(bers, n_trials, fields=None, protects=None, backend="auto"):
+    """A SweepEngine for a benchmark grid (vectorized characterization)."""
+    from repro.core import sweep as sweep_lib
+    kw = {}
+    if fields is not None:
+        kw["fields"] = tuple(fields)
+    if protects is not None:
+        kw["protects"] = tuple(protects)
+    plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials,
+                               backend=backend, **kw)
+    return sweep_lib.SweepEngine(plan)
+
+
 def emit(rows):
     """CSV rows: name,us_per_call,derived."""
     for name, us, derived in rows:

@@ -1,14 +1,19 @@
-"""Fig. 2: inference accuracy vs BER per FP16 field (static injection)."""
+"""Fig. 2: inference accuracy vs BER per FP16 field (static injection).
+
+Driven by the vectorized sweep engine: one compiled (BER x trial) plane per
+field arm (see repro/core/sweep.py and benchmarks/sweep_bench.py for the
+engine-vs-loop comparison)."""
 from __future__ import annotations
 
 import time
 
 import jax
 
-from benchmarks.common import QUICK, cnn_setup, emit, lm_setup
+from benchmarks.common import QUICK, cnn_setup, emit, lm_setup, make_engine
 from repro.core import resilience
 
 BERS = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2]
+FIELDS = ("sign", "exponent", "mantissa", "full")
 
 
 def main():
@@ -20,11 +25,15 @@ def main():
         params, eval_fn = got[0], got[-1]
         clean = float(eval_fn(params))
         rows.append((f"fig2.{name}.clean", None, f"acc={clean:.4f}"))
+        engine = make_engine(BERS, trials, fields=FIELDS)
         t0 = time.time()
         results = resilience.characterize_fields(
             jax.random.PRNGKey(3), params, eval_fn, BERS,
-            fields=("sign", "exponent", "mantissa", "full"), n_trials=trials)
+            fields=FIELDS, n_trials=trials, engine=engine)
         us = (time.time() - t0) * 1e6 / max(len(results) * trials, 1)
+        compiles = max(engine.compiles().values())
+        rows.append((f"fig2.{name}.compiles_per_arm", None,
+                     f"{compiles} (contract: 1):{compiles == 1}"))
         for r in results:
             rows.append((f"fig2.{name}.{r.field}.ber{r.ber:.0e}", round(us),
                          f"acc={r.mean:.4f};std={r.std:.4f}"))

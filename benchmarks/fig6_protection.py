@@ -1,28 +1,36 @@
 """Fig. 6: accuracy vs BER with and without One4N ECC on the CIM deployment
-(exponent-aligned weights, bit-accurate SRAM image)."""
+(exponent-aligned weights, bit-accurate SRAM image).
+
+Driven by the vectorized sweep engine: one compiled inject -> ECC-decode ->
+eval plane per protection arm."""
 from __future__ import annotations
 
 import time
 
 import jax
 
-from benchmarks.common import QUICK, emit, lm_setup
+from benchmarks.common import QUICK, emit, lm_setup, make_engine
 from repro.core import cim as cim_lib
 from repro.core import resilience
 
 BERS = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2]
+PROTECTS = ("none", "per_weight", "one4n")
 
 
 def main():
     params, cfg, eval_fn, _ = lm_setup()
     rows = [("fig6.lm.clean", None, f"acc={float(eval_fn(params)):.4f}")]
     trials = 3 if QUICK else 8
+    engine = make_engine(BERS, trials, protects=PROTECTS)
     t0 = time.time()
     results = resilience.characterize_protection(
         jax.random.PRNGKey(5), params, eval_fn, BERS,
         cim_cfg=cim_lib.CIMConfig(n_group=8, index=2), n_trials=trials,
-        protects=("none", "per_weight", "one4n"))
+        protects=PROTECTS, engine=engine)
     us = (time.time() - t0) * 1e6 / max(len(results) * trials, 1)
+    compiles = max(engine.compiles().values())
+    rows.append(("fig6.lm.compiles_per_arm", None,
+                 f"{compiles} (contract: 1):{compiles == 1}"))
     by = {}
     for r in results:
         rows.append((f"fig6.lm.{r.protect}.ber{r.ber:.0e}", round(us),

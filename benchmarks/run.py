@@ -14,12 +14,13 @@ import traceback
 def main() -> None:
     from benchmarks import (fig2_characterization, fig6_protection,
                             fig7_training, fp8_future, kernel_bench,
-                            roofline_report, table1_alignment,
+                            roofline_report, sweep_bench, table1_alignment,
                             table3_overhead)
     modules = [
         ("table3", table3_overhead),        # pure arithmetic first (fast)
         ("roofline", roofline_report),
         ("kernels", kernel_bench),
+        ("sweep", sweep_bench),             # vectorized vs loop characterization
         ("fig2", fig2_characterization),
         ("fig6", fig6_protection),
         ("table1", table1_alignment),

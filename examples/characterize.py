@@ -5,7 +5,12 @@ mantissa, full} with static injection, reporting mean accuracy over trials.
 Expected qualitative reproduction: exponent >> sign > full > mantissa
 sensitivity; the exponent cliff sits orders of magnitude below the mantissa's.
 
-Run:  PYTHONPATH=src python examples/characterize.py [--trials 5]
+The sweep runs on the vectorized engine (repro.core.sweep): each field's
+whole (BER x trial) plane is one compiled executable, with the trial axis
+sharded across devices. Pass ``--loop`` to use the legacy per-trial loop
+harness instead (same PRNG stream, same results, many more dispatches).
+
+Run:  PYTHONPATH=src python examples/characterize.py [--trials 5] [--loop]
 """
 import argparse
 
@@ -66,14 +71,18 @@ def train_cnn(steps=150):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--loop", action="store_true",
+                    help="use the per-trial loop harness (baseline)")
     args = ap.parse_args()
     bers = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2]
+    characterize = (resilience.characterize_fields_loop if args.loop
+                    else resilience.characterize_fields)
 
     for name, (params, eval_fn) in (("lm", train_lm()),
                                     ("cnn", train_cnn())):
         clean = float(eval_fn(params))
         print(f"\n== {name}: clean accuracy {clean:.3f} ==")
-        results = resilience.characterize_fields(
+        results = characterize(
             jax.random.PRNGKey(7), params, eval_fn, bers,
             n_trials=args.trials)
         print(resilience.format_table(results))

@@ -1,4 +1,4 @@
 # The paper's primary contribution: FP fault injection, exponent alignment,
 # One4N ECC, and bit-accurate CIM weight-memory emulation.
-from repro.core import align, api, bitops, cim, ecc, fault, resilience  # noqa: F401
+from repro.core import align, api, bitops, cim, ecc, fault, resilience, sweep  # noqa: F401
 from repro.core.api import ReliabilityConfig  # noqa: F401

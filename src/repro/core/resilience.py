@@ -4,14 +4,19 @@ Drives repeated fault-injection trials over a BER sweep and reports accuracy
 statistics per (BER, field, protection) cell — the experiment grid behind the
 paper's 24,000-run characterization, sized down by ``n_trials``.
 
-The (inject -> eval) pipeline is jitted ONCE per field/protection arm with the
-BER as a *dynamic* scalar, so a full sweep costs one compile per arm instead
-of one per (BER, trial).
+``characterize_fields`` / ``characterize_protection`` are thin wrappers over
+the vectorized :class:`repro.core.sweep.SweepEngine`, which evaluates each
+arm's whole (BER × trial) plane in one compiled executable (vmap over trials,
+``lax.map`` over the BER vector, trial axis sharded across devices). The
+original per-trial loop harness is kept as ``characterize_fields_loop`` /
+``characterize_protection_loop`` — it is the PRNG-stream reference the engine
+must match (see ``tests/test_sweep.py``) and the baseline that
+``benchmarks/sweep_bench.py`` measures speedup against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,33 +24,70 @@ import numpy as np
 
 from repro.core import cim as cim_lib
 from repro.core import fault as fault_lib
+from repro.core import sweep as sweep_lib
 from repro.core.bitops import FP16
-
-
-@dataclasses.dataclass
-class SweepResult:
-    ber: float
-    field: str
-    protect: str            # 'raw' (plain tensors), 'none' (CIM unprotected), 'one4n'
-    accuracies: List[float]
-    corrected: float = 0.0
-    uncorrectable: float = 0.0
-
-    @property
-    def mean(self) -> float:
-        return float(np.mean(self.accuracies))
-
-    @property
-    def std(self) -> float:
-        return float(np.std(self.accuracies))
+from repro.core.sweep import SweepResult  # noqa: F401  (re-export, stable API)
 
 
 def characterize_fields(key, params, eval_fn: Callable, bers: Sequence[float],
                         fields: Sequence[str] = ("sign", "exponent", "mantissa", "full"),
-                        n_trials: int = 10, fmt=FP16) -> List[SweepResult]:
+                        n_trials: int = 10, fmt=FP16,
+                        engine: Optional[sweep_lib.SweepEngine] = None
+                        ) -> List[SweepResult]:
     """Fig. 2: per-field sensitivity of plain FP weights (static injection).
 
-    ``eval_fn(params) -> scalar accuracy`` must be jit-compatible."""
+    ``eval_fn(params) -> scalar accuracy`` must be jit-compatible. Pass a
+    prebuilt ``engine`` to reuse its compiled executors across calls; its plan
+    must describe the same grid as the explicit arguments."""
+    if engine is None:
+        plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials,
+                                   fields=tuple(fields), fmt=fmt)
+        engine = sweep_lib.SweepEngine(plan)
+    else:
+        _check_engine_grid(engine, bers=tuple(float(b) for b in bers),
+                           n_trials=n_trials, fields=tuple(fields), fmt=fmt)
+    return engine.run_fields(key, params, eval_fn)
+
+
+def characterize_protection(key, params, eval_fn: Callable, bers: Sequence[float],
+                            cim_cfg: Optional[cim_lib.CIMConfig] = None,
+                            n_trials: int = 10,
+                            protects: Sequence[str] = ("none", "one4n"),
+                            engine: Optional[sweep_lib.SweepEngine] = None
+                            ) -> List[SweepResult]:
+    """Fig. 6: accuracy vs BER with/without One4N (optionally also the
+    Table III "traditional" per-weight SECDED arm) on the CIM deployment."""
+    if engine is None:
+        plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials,
+                                   protects=tuple(protects))
+        engine = sweep_lib.SweepEngine(plan)
+    else:
+        _check_engine_grid(engine, bers=tuple(float(b) for b in bers),
+                           n_trials=n_trials, protects=tuple(protects))
+    return engine.run_protection(key, params, eval_fn, cim_cfg)
+
+
+def _check_engine_grid(engine: sweep_lib.SweepEngine, **expected) -> None:
+    """A prebuilt engine runs ITS plan's grid — refuse silently diverging
+    explicit arguments instead of ignoring them."""
+    for name, want in expected.items():
+        got = getattr(engine.plan, name)
+        if got != want:
+            raise ValueError(
+                f"engine.plan.{name}={got!r} conflicts with explicit "
+                f"argument {name}={want!r}; build the engine from a matching "
+                f"SweepPlan or drop the explicit argument")
+
+
+# ---------------------------------------------------------------------------
+# Loop-based reference harness: one jitted device call per (BER, trial) cell.
+# Kept as the PRNG-stream oracle for the vectorized engine and as the
+# benchmark baseline; do not use for large grids.
+# ---------------------------------------------------------------------------
+
+def characterize_fields_loop(key, params, eval_fn: Callable, bers: Sequence[float],
+                             fields: Sequence[str] = ("sign", "exponent", "mantissa", "full"),
+                             n_trials: int = 10, fmt=FP16) -> List[SweepResult]:
     results = []
     for field in fields:
         @jax.jit
@@ -64,12 +106,11 @@ def characterize_fields(key, params, eval_fn: Callable, bers: Sequence[float],
     return results
 
 
-def characterize_protection(key, params, eval_fn: Callable, bers: Sequence[float],
-                            cim_cfg: Optional[cim_lib.CIMConfig] = None,
-                            n_trials: int = 10,
-                            protects: Sequence[str] = ("none", "one4n")) -> List[SweepResult]:
-    """Fig. 6: accuracy vs BER with/without One4N (optionally also the
-    Table III "traditional" per-weight SECDED arm) on the CIM deployment."""
+def characterize_protection_loop(key, params, eval_fn: Callable, bers: Sequence[float],
+                                 cim_cfg: Optional[cim_lib.CIMConfig] = None,
+                                 n_trials: int = 10,
+                                 protects: Sequence[str] = ("none", "one4n")
+                                 ) -> List[SweepResult]:
     results = []
     for protect in protects:
         cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(), protect=protect)

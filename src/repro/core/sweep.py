@@ -1,0 +1,359 @@
+"""Vectorized characterization engine (paper §III-A at production scale).
+
+The paper's Fig. 2 / Fig. 6 / Table III evidence is a ~24,000-run
+fault-injection grid over (field-or-protection arm × BER × trial). The naive
+harness drives that grid with nested Python loops — one device dispatch per
+cell. This module evaluates the whole (BER × trial) *plane* of an arm in a
+single compiled executable:
+
+* **trials** are batched with ``jax.vmap`` over a stacked batch of PRNG keys
+  (XLA backend) or counter-PRNG seeds (Pallas backend);
+* the **BER axis** is folded in with ``jax.lax.map`` over a stacked BER
+  vector, so BER is a traced scalar and never triggers recompilation;
+* the **trial axis is sharded** across available devices via a 1-D
+  ``("trial",)`` mesh from :mod:`repro.launch.mesh` — fault-injection trials
+  are embarrassingly parallel;
+* the inner bit-flip step routes through the trial-batched
+  :mod:`repro.kernels.fault_inject` Pallas kernel when the backend supports it
+  (TPU, or interpret mode for CPU testing), with the pure-JAX
+  :mod:`repro.core.fault` path as the default CPU fallback.
+
+Net effect: **one compile per arm**, one (or a handful of) device dispatches
+per sweep, instead of ``n_bers * n_trials`` of each.
+
+The XLA backend reproduces the loop harness's PRNG stream exactly (the key
+schedule is the same sequential ``jax.random.split`` chain, computed with
+``lax.scan``), so ``SweepEngine`` results match the legacy loop functions
+trial-for-trial — see ``tests/test_sweep.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core import bitops
+from repro.core import cim as cim_lib
+from repro.core import fault as fault_lib
+from repro.core.bitops import FP16, FloatFormat
+from repro.kernels.fault_inject import ops as fi_ops
+from repro.kernels.fault_inject.kernel import hash_u32
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """One (BER, arm) cell of the characterization grid."""
+
+    ber: float
+    field: str
+    protect: str            # 'raw' (plain tensors), 'none' (CIM unprotected), 'one4n'
+    accuracies: List[float]
+    corrected: float = 0.0
+    uncorrectable: float = 0.0
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.accuracies))
+
+    @property
+    def std(self) -> float:
+        return float(np.std(self.accuracies))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Static description of a characterization grid.
+
+    One compiled executor is built per *arm* (a field for Fig. 2 sweeps, a
+    protection mode for Fig. 6 sweeps); ``bers`` and ``n_trials`` are folded
+    into that executor as traced values.
+    """
+
+    bers: Tuple[float, ...]
+    n_trials: int = 10
+    fields: Tuple[str, ...] = ("sign", "exponent", "mantissa", "full")
+    protects: Tuple[str, ...] = ("none", "one4n")
+    fmt: FloatFormat = FP16
+    backend: str = "auto"               # 'auto' | 'xla' | 'pallas'
+    shard_trials: bool = True
+    interpret: Optional[bool] = None    # Pallas interpret-mode override
+
+    def __post_init__(self):
+        object.__setattr__(self, "bers", tuple(float(b) for b in self.bers))
+        object.__setattr__(self, "fields", tuple(self.fields))
+        object.__setattr__(self, "protects", tuple(self.protects))
+        if self.backend not in ("auto", "xla", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _split_schedule(key, steps: int):
+    """The loop harness's sequential ``key, sub = split(key)`` chain, on
+    device: returns (carried key, subkeys [steps, ...])."""
+    def step(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+    return jax.lax.scan(step, key, None, length=steps)
+
+
+def _salted(seeds: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Decorrelate the per-trial counter-PRNG streams of distinct planes."""
+    return hash_u32(seeds ^ jnp.uint32((salt * 0x85EBCA6B + 0x9E3779B9)
+                                       & 0xFFFFFFFF))
+
+
+def _leaf_inject_batched(bits2d, seeds, threshold, positions, interpret):
+    return fi_ops.fault_inject_bits_batched(
+        bits2d, seeds, threshold, positions=tuple(positions),
+        interpret=interpret)
+
+
+def inject_pytree_batched(params, seeds: jnp.ndarray, threshold, field: str,
+                          fmt: FloatFormat = FP16, *,
+                          predicate=fault_lib._is_injectable,
+                          interpret: Optional[bool] = None):
+    """Kernel-backed batched static injection: every injectable leaf gains a
+    leading trial axis [T, ...]; pass-through leaves are broadcast to match.
+
+    The per-leaf streams are decorrelated by salting ``seeds`` with the leaf
+    index, mirroring ``fault.inject_pytree``'s per-leaf key split.
+    """
+    positions = tuple(int(p) for p in fmt.field_bit_positions(field))
+    t = seeds.shape[0]
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        if predicate(path, leaf):
+            bits = bitops.to_bits(leaf.reshape(-1, leaf.shape[-1]), fmt)
+            faulted = _leaf_inject_batched(bits, _salted(seeds, i), threshold,
+                                           positions, interpret)
+            w = bitops.from_bits(faulted, fmt)
+            out.append(jnp.asarray(w, leaf.dtype).reshape((t,) + leaf.shape))
+        else:
+            out.append(jnp.broadcast_to(leaf, (t,) + jnp.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
+                          interpret) -> cim_lib.CIMStore:
+    """Batched SRAM-plane injection (field='full' of ``cim.inject``): mantissa
+    plane always; codeword bits when protected, else raw exponent+sign."""
+    t = seeds.shape[0]
+    mb = store.cfg.fmt.man_bits
+    eb = store.cfg.fmt.exp_bits
+
+    man = _leaf_inject_batched(store.man, _salted(seeds, 101), threshold,
+                               tuple(range(mb)), interpret)
+    if store.codewords is not None:
+        cw2d = store.codewords.reshape(-1, store.codewords.shape[-1])
+        cw = _leaf_inject_batched(cw2d, _salted(seeds, 102), threshold,
+                                  (0,), interpret)
+        cw = cw.reshape((t,) + store.codewords.shape)
+        sign = jnp.broadcast_to(store.sign, (t,) + store.sign.shape)
+        exp = jnp.broadcast_to(store.exp, (t,) + store.exp.shape)
+    else:
+        cw = None
+        exp = _leaf_inject_batched(store.exp, _salted(seeds, 103), threshold,
+                                   tuple(range(eb)), interpret)
+        sign = _leaf_inject_batched(store.sign, _salted(seeds, 104), threshold,
+                                    (0,), interpret)
+    return cim_lib.CIMStore(man=man, sign=sign, exp=exp, codewords=cw,
+                            shape=store.shape, cfg=store.cfg)
+
+
+def cim_inject_pytree_batched(stores, seeds, threshold,
+                              interpret: Optional[bool] = None):
+    """Batched ``cim.inject_pytree``: every leaf (store plane or pass-through)
+    gains a leading [T] axis so the decode→eval pipeline can be vmapped."""
+    t = seeds.shape[0]
+    flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=cim_lib._is_store)
+    out = []
+    for i, leaf in enumerate(flat):
+        if cim_lib._is_store(leaf):
+            out.append(_store_inject_batched(leaf, _salted(seeds, 7 * i + 1),
+                                             threshold, interpret))
+        else:
+            out.append(jnp.broadcast_to(leaf, (t,) + jnp.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class SweepEngine:
+    """Batched/sharded executor for characterization grids.
+
+    One jitted *plane function* per arm, cached across calls; each plane
+    function maps (params-or-stores, per-trial randomness [B, T], bers [B])
+    to accuracies [B, T] (plus ECC stats for protection sweeps) in a single
+    dispatch chain. ``engine.compiles()`` exposes the per-arm compile count so
+    benchmarks can assert the one-compile-per-arm contract.
+    """
+
+    MAX_CACHED_EXECUTORS = 64
+
+    def __init__(self, plan: SweepPlan, mesh=None):
+        self.plan = plan
+        if plan.backend == "auto":
+            self.backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+        else:
+            self.backend = plan.backend
+        self.interpret = (plan.interpret if plan.interpret is not None
+                          else jax.default_backend() != "tpu")
+        self._mesh = mesh
+        self._mesh_built = mesh is not None
+        self._executors: Dict[tuple, Callable] = {}
+
+    # ------------------------------------------------------------- plumbing
+
+    @property
+    def mesh(self):
+        if not self._mesh_built:
+            self._mesh_built = True
+            if self.plan.shard_trials:
+                from repro.launch import mesh as mesh_lib
+                self._mesh = mesh_lib.make_trial_mesh()
+        return self._mesh
+
+    def _shard_trials(self, arr, trial_axis: int = 1):
+        """Place ``arr`` with its trial axis split across the mesh. The
+        executors' outputs then inherit trial-sharded layouts from jit."""
+        mesh = self.mesh
+        if mesh is None:
+            return arr
+        n = int(np.prod(mesh.devices.shape))
+        if arr.shape[trial_axis] % n != 0:
+            return arr                       # ragged trial count: replicate
+        spec = [None] * arr.ndim
+        spec[trial_axis] = "trial"
+        return jax.device_put(arr, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    def _executor(self, cache_key, build: Callable):
+        # Keys include id(eval_fn); the cached plane closes over eval_fn so
+        # ids stay unique while cached. Evict oldest arms beyond the bound so
+        # a long-lived engine fed fresh eval_fn closures cannot grow (and pin
+        # eval data) without limit.
+        if cache_key not in self._executors:
+            while len(self._executors) >= self.MAX_CACHED_EXECUTORS:
+                self._executors.pop(next(iter(self._executors)))
+            self._executors[cache_key] = build()
+        return self._executors[cache_key]
+
+    def compiles(self) -> Dict[tuple, int]:
+        """Per-arm jit cache sizes (1 == the one-compile-per-arm contract)."""
+        out = {}
+        for k, fn in self._executors.items():
+            out[k] = int(fn._cache_size()) if hasattr(fn, "_cache_size") else -1
+        return out
+
+    def _trial_randomness(self, key, n_bers: int):
+        """(carried key, per-trial randomness [B, T, ...]) for one arm."""
+        t = self.plan.n_trials
+        if self.backend == "pallas":
+            key, sub = jax.random.split(key)
+            seeds = jax.random.bits(sub, (n_bers, t), jnp.uint32)
+            return key, self._shard_trials(seeds)
+        key, subs = _split_schedule(key, n_bers * t)
+        subs = subs.reshape((n_bers, t) + subs.shape[1:])
+        return key, self._shard_trials(subs)
+
+    # ------------------------------------------------------- Fig. 2 sweeps
+
+    def _build_field_plane(self, field: str, eval_fn: Callable):
+        fmt = self.plan.fmt
+        if self.backend == "pallas":
+            interpret = self.interpret
+
+            def ber_step(params, seeds, ber):
+                thr = fi_ops.ber_to_threshold(ber)
+                corrupted = inject_pytree_batched(params, seeds, thr, field,
+                                                  fmt, interpret=interpret)
+                return jax.vmap(eval_fn)(corrupted)
+        else:
+            model = fault_lib.FaultModel(ber=1.0, field=field, fmt=fmt)
+
+            def one_trial(params, k, ber):
+                corrupted = fault_lib.inject_pytree(k, params, model,
+                                                    ber_override=ber)
+                return eval_fn(corrupted)
+
+            ber_step = jax.vmap(one_trial, in_axes=(None, 0, None))
+
+        @jax.jit
+        def plane(params, randomness, bers):
+            return jax.lax.map(lambda rb: ber_step(params, rb[0], rb[1]),
+                               (randomness, bers))
+        return plane
+
+    def run_fields(self, key, params, eval_fn: Callable) -> List[SweepResult]:
+        """Fig. 2: per-field sensitivity, whole (BER × trial) plane per field."""
+        plan = self.plan
+        bers_arr = jnp.asarray(plan.bers, jnp.float32)
+        results = []
+        for field in plan.fields:
+            key, rand = self._trial_randomness(key, len(plan.bers))
+            plane = self._executor(
+                ("fields", field, self.backend, id(eval_fn)),
+                lambda: self._build_field_plane(field, eval_fn))
+            accs = np.asarray(jax.device_get(plane(params, rand, bers_arr)))
+            for i, ber in enumerate(plan.bers):
+                results.append(SweepResult(ber, field, "raw",
+                                           [float(a) for a in accs[i]]))
+        return results
+
+    # ------------------------------------------------------- Fig. 6 sweeps
+
+    def _build_protect_plane(self, eval_fn: Callable):
+        if self.backend == "pallas":
+            interpret = self.interpret
+
+            def ber_step(stores, seeds, ber):
+                thr = fi_ops.ber_to_threshold(ber)
+                batched = cim_inject_pytree_batched(stores, seeds, thr,
+                                                    interpret)
+
+                def decode_eval(st):
+                    restored, stats = cim_lib.read_pytree(st)
+                    return eval_fn(restored), stats
+                return jax.vmap(decode_eval)(batched)
+        else:
+            def one_trial(stores, k, ber):
+                faulty = cim_lib.inject_pytree(k, stores, ber)
+                restored, stats = cim_lib.read_pytree(faulty)
+                return eval_fn(restored), stats
+
+            ber_step = jax.vmap(one_trial, in_axes=(None, 0, None))
+
+        @jax.jit
+        def plane(stores, randomness, bers):
+            return jax.lax.map(lambda rb: ber_step(stores, rb[0], rb[1]),
+                               (randomness, bers))
+        return plane
+
+    def run_protection(self, key, params, eval_fn: Callable,
+                       cim_cfg: Optional[cim_lib.CIMConfig] = None
+                       ) -> List[SweepResult]:
+        """Fig. 6: accuracy vs BER per protection arm on the CIM deployment."""
+        plan = self.plan
+        bers_arr = jnp.asarray(plan.bers, jnp.float32)
+        results = []
+        for protect in plan.protects:
+            cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(),
+                                      protect=protect)
+            stores, _ = cim_lib.deploy_pytree(params, cfg)
+            key, rand = self._trial_randomness(key, len(plan.bers))
+            plane = self._executor(
+                ("protect", protect, self.backend, id(eval_fn)),
+                lambda: self._build_protect_plane(eval_fn))
+            accs, stats = plane(stores, rand, bers_arr)
+            accs = np.asarray(jax.device_get(accs))
+            corr = np.asarray(jax.device_get(stats["corrected"]), np.float64)
+            unc = np.asarray(jax.device_get(stats["uncorrectable"]), np.float64)
+            for i, ber in enumerate(plan.bers):
+                results.append(SweepResult(
+                    ber, "exponent_sign+mantissa", protect,
+                    [float(a) for a in accs[i]],
+                    float(corr[i].mean()), float(unc[i].mean())))
+        return results

@@ -6,7 +6,9 @@ PRNG (murmur3 finalizer) keyed by (seed, absolute element index, bit
 position) — pure integer ops, so the kernel (a) lowers on TPU without the
 Mosaic PRNG primitives, (b) runs bit-exactly in interpret mode on CPU, and
 (c) produces tiling-independent faults (the same (seed, element, bit) always
-flips the same way regardless of block shape).
+flips the same way regardless of block shape). Counter streams are strided
+by 32 bits per element so positions 0..31 are independent across elements
+(covers every format up to fp32).
 
 Per bit position p in the target field: flip iff hash(...) < ber * 2^32,
 i.e. i.i.d. Bernoulli(ber) per stored bit, matching `repro.core.fault`.
@@ -20,6 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def hash_u32(z: jnp.ndarray) -> jnp.ndarray:
@@ -47,7 +52,7 @@ def _fault_kernel(bits_ref, o_ref, *, seed: int, threshold: int,
     mask = jnp.zeros((block_r, block_c), jnp.uint32)
     for p in positions:
         # distinct stream per (seed, element, bit position)
-        z = elem * jnp.uint32(16) + jnp.uint32(p)
+        z = elem * jnp.uint32(32) + jnp.uint32(p)
         z = z ^ (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
         r = hash_u32(z)
         flip = (r < jnp.uint32(threshold)).astype(jnp.uint32)
@@ -64,11 +69,26 @@ def _pick_block(dim: int, preferred: int) -> int:
     return dim
 
 
+# The counter is a uint32 striding 32 per element, so streams repeat after
+# 2^27 elements; beyond that, element pairs 2^27 apart would receive
+# identical (correlated) faults. Refuse instead of silently biasing stats.
+MAX_COUNTER_ELEMENTS = 2 ** 27
+
+
+def _check_counter_space(r: int, c: int) -> None:
+    if r * c > MAX_COUNTER_ELEMENTS:
+        raise ValueError(
+            f"fault_inject counter space exhausted: {r}x{c} = {r * c} elements "
+            f"> 2^27; split the leaf into chunks of <= {MAX_COUNTER_ELEMENTS} "
+            f"elements (each with a distinct seed) to keep faults i.i.d.")
+
+
 def fault_inject_pallas(bits: jnp.ndarray, *, seed: int, ber: float,
                         positions: Sequence[int], block_r: int = 256,
                         block_c: int = 256, interpret: bool = True):
     """bits uint16 [R, C] -> bits with field positions flipped at rate ber."""
     r, c = bits.shape
+    _check_counter_space(r, c)
     block_r = _pick_block(r, block_r)
     block_c = _pick_block(c, block_c)
     assert r % block_r == 0 and c % block_c == 0
@@ -82,7 +102,78 @@ def fault_inject_pallas(bits: jnp.ndarray, *, seed: int, ber: float,
         in_specs=[pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(bits.shape, bits.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(bits)
+
+
+# ---------------------------------------------------------------------------
+# Trial-batched variant with *traced* seeds/threshold (the sweep-engine path).
+#
+# The static kernel above bakes (seed, ber) into the compiled artifact — one
+# compile per sweep cell. Here both live in an SMEM scalar block instead:
+# scalars[0] is the uint32 Bernoulli threshold (round(ber * 2^32)) and
+# scalars[1 + t] is trial t's seed, so a whole (trial × element × bit) fault
+# plane evaluates under ONE compilation, with BER and trial count swept as
+# ordinary device values. The grid grows a leading trial dimension; every
+# (seed, element, bit) stream is identical to the static kernel's, so trial t
+# of the batched call is bit-exact with a static call at seed = seeds[t].
+# ---------------------------------------------------------------------------
+
+
+def _fault_kernel_batched(scalars_ref, bits_ref, o_ref, *,
+                          positions: Tuple[int, ...], n_cols: int,
+                          block_r: int, block_c: int):
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    threshold = scalars_ref[0]
+    seed = scalars_ref[1 + t]
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 0) \
+        + jnp.uint32(i * block_r)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 1) \
+        + jnp.uint32(j * block_c)
+    elem = rows * jnp.uint32(n_cols) + cols
+
+    mask = jnp.zeros((block_r, block_c), jnp.uint32)
+    for p in positions:
+        z = elem * jnp.uint32(32) + jnp.uint32(p)
+        z = z ^ (seed * jnp.uint32(0x9E3779B9))
+        r = hash_u32(z)
+        flip = (r < threshold).astype(jnp.uint32)
+        mask = mask | (flip << p)
+
+    o_ref[0] = bits_ref[...] ^ mask.astype(bits_ref.dtype)
+
+
+def fault_inject_batched_pallas(bits: jnp.ndarray, seeds: jnp.ndarray,
+                                threshold: jnp.ndarray, *,
+                                positions: Sequence[int], block_r: int = 256,
+                                block_c: int = 256, interpret: bool = True):
+    """bits uint [R, C], seeds uint32 [T] -> [T, R, C] faulted copies.
+
+    ``seeds`` and ``threshold`` are traced operands (SMEM scalars): one
+    compile covers every (BER, trial) the caller sweeps over.
+    """
+    r, c = bits.shape
+    t = seeds.shape[0]
+    _check_counter_space(r, c)
+    block_r = _pick_block(r, block_r)
+    block_c = _pick_block(c, block_c)
+    scalars = jnp.concatenate([
+        jnp.asarray(threshold, jnp.uint32).reshape(1),
+        seeds.astype(jnp.uint32)])
+    grid = (t, r // block_r, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_fault_kernel_batched, positions=tuple(positions),
+                          n_cols=c, block_r=block_r, block_c=block_c),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((block_r, block_c), lambda t, i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block_r, block_c), lambda t, i, j: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, r, c), bits.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(scalars, bits)

@@ -7,12 +7,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bitops import FP16, FloatFormat
-from repro.kernels.fault_inject.kernel import fault_inject_pallas
+from repro.kernels.fault_inject.kernel import (fault_inject_batched_pallas,
+                                               fault_inject_pallas)
 from repro.kernels.fault_inject.ref import fault_inject_ref  # noqa: F401
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def ber_to_threshold(ber) -> jnp.ndarray:
+    """Traced BER -> uint32 Bernoulli threshold (flip iff hash < threshold).
+
+    Matches the static kernel's ``round(ber * 2^32)`` up to float32 rounding;
+    saturates to 0xFFFFFFFF (flip always) near ber=1 because float32 cannot
+    represent 2^32 - 1."""
+    t = jnp.round(jnp.asarray(ber, jnp.float32) * jnp.float32(2.0 ** 32))
+    return jnp.where(t >= jnp.float32(4294967040.0), jnp.uint32(0xFFFFFFFF),
+                     t.astype(jnp.uint32))
 
 
 @functools.partial(jax.jit, static_argnames=("seed", "ber", "positions",
@@ -23,6 +35,22 @@ def fault_inject_bits(bits, *, seed: int, ber: float, positions,
         interpret = not _on_tpu()
     return fault_inject_pallas(bits, seed=seed, ber=ber,
                                positions=tuple(positions), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("positions", "interpret"))
+def fault_inject_bits_batched(bits, seeds, threshold, *, positions,
+                              interpret: bool | None = None):
+    """Trial-batched injection: bits [R, C] -> [T, R, C], one compile total.
+
+    ``seeds`` (uint32 [T]) and ``threshold`` (uint32 scalar, see
+    :func:`ber_to_threshold`) are traced — sweeping BER or trial seeds does
+    NOT retrigger compilation, which is what lets the sweep engine evaluate a
+    whole (BER x trial) plane per arm."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fault_inject_batched_pallas(bits, seeds, threshold,
+                                       positions=tuple(positions),
+                                       interpret=interpret)
 
 
 def fault_inject_fp16(w, *, seed: int, ber: float, field: str = "full",

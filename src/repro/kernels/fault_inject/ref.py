@@ -18,8 +18,30 @@ def fault_inject_ref(bits: jnp.ndarray, *, seed: int, ber: float,
     elem = rows * jnp.uint32(c) + cols
     mask = jnp.zeros((r, c), jnp.uint32)
     for p in positions:
-        z = elem * jnp.uint32(16) + jnp.uint32(p)
+        z = elem * jnp.uint32(32) + jnp.uint32(p)
         z = z ^ (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
         flip = (hash_u32(z) < jnp.uint32(threshold)).astype(jnp.uint32)
         mask = mask | (flip << p)
     return bits ^ mask.astype(bits.dtype)
+
+
+def fault_inject_batched_ref(bits: jnp.ndarray, seeds: jnp.ndarray,
+                             threshold, *,
+                             positions: Sequence[int]) -> jnp.ndarray:
+    """Oracle for the trial-batched kernel: [R, C] x seeds [T] -> [T, R, C].
+
+    Same counter-based streams — trial t equals ``fault_inject_ref`` at
+    ``seed=seeds[t]`` for a matching threshold."""
+    r, c = bits.shape
+    threshold = jnp.asarray(threshold, jnp.uint32)
+    rows = jnp.arange(r, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(c, dtype=jnp.uint32)[None, :]
+    elem = (rows * jnp.uint32(c) + cols)[None]            # [1, R, C]
+    seeds = seeds.astype(jnp.uint32)[:, None, None]        # [T, 1, 1]
+    mask = jnp.zeros((seeds.shape[0], r, c), jnp.uint32)
+    for p in positions:
+        z = elem * jnp.uint32(32) + jnp.uint32(p)
+        z = z ^ (seeds * jnp.uint32(0x9E3779B9))
+        flip = (hash_u32(z) < threshold).astype(jnp.uint32)
+        mask = mask | (flip << p)
+    return bits[None] ^ mask.astype(bits.dtype)

@@ -21,3 +21,14 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     assert n % model_axis == 0
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_trial_mesh(n_devices: int = 0):
+    """1-D mesh over the Monte-Carlo trial axis (characterization sweeps).
+
+    Fault-injection trials are embarrassingly parallel, so the sweep engine
+    shards its trial batch across every available device; a single-device
+    mesh degenerates to fully-replicated execution at zero cost.
+    """
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("trial",))

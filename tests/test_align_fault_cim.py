@@ -2,7 +2,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # minimal installs: degrade to fixed-seed sampling
+    HAVE_HYPOTHESIS = False
 
 from repro.core import align, bitops, cim, fault
 from repro.core.bitops import FP16
@@ -25,8 +30,15 @@ def test_alignment_invariant_shared_exponent(n, index):
     assert (ee[:, 0] == np.asarray(e)).all()
 
 
-@given(st.integers(min_value=0, max_value=10 ** 6))
-@settings(max_examples=25, deadline=None)
+def _property_seeds(fn):
+    """hypothesis-driven when available, else a fixed-seed parametrization."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=25, deadline=None)(
+            given(st.integers(min_value=0, max_value=10 ** 6))(fn))
+    return pytest.mark.parametrize("seed", [0, 1, 17, 4242, 999_983])(fn)
+
+
+@_property_seeds
 def test_alignment_within_range_property(seed):
     """|aligned| ∈ [LL, UL] of the block exponent (Fig. 5 invariant)."""
     key = jax.random.PRNGKey(seed)

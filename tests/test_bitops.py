@@ -2,10 +2,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # minimal installs: degrade to fixed-example sampling
+    HAVE_HYPOTHESIS = False
 
 from repro.core import bitops
 from repro.core.bitops import BF16, FP16, FP32
+
+
+def _examples(*fallback_cases, argnames):
+    """hypothesis strategies when available, else fixed parametrized cases."""
+    def deco(strategies):
+        def wrap(fn):
+            if HAVE_HYPOTHESIS:
+                return settings(max_examples=100, deadline=None)(
+                    given(*strategies())(fn))
+            return pytest.mark.parametrize(argnames, list(fallback_cases))(fn)
+        return wrap
+    return deco
 
 
 @pytest.mark.parametrize("fmt", [FP16, BF16, FP32])
@@ -25,8 +42,8 @@ def test_split_combine_identity(fmt):
     assert (np.asarray(x) == np.asarray(y)).all()
 
 
-@given(st.floats(min_value=6e-5, max_value=60000.0, allow_nan=False))
-@settings(max_examples=200, deadline=None)
+@_examples(6.2e-5, 0.125, 1.0, 1.5, 3.14159, 1024.7, 59999.0, argnames="v")(
+    lambda: (st.floats(min_value=6e-5, max_value=60000.0, allow_nan=False),))
 def test_fp16_field_semantics(v):
     """value == (-1)^s * 2^(e-15) * (1 + m/2^10) for normal fp16 numbers."""
     x = np.float16(v)
@@ -53,9 +70,10 @@ def test_exponent_range_matches_fig5():
     assert float(ul[0]) == 2.0 - 2.0 ** -10
 
 
-@given(st.integers(min_value=0, max_value=2**16 - 1),
-       st.integers(min_value=1, max_value=16))
-@settings(max_examples=100, deadline=None)
+@_examples((0, 1), (1, 1), (0b1011, 4), (0xBEEF, 16), (0x7FFF, 15),
+           argnames="word,nbits")(
+    lambda: (st.integers(min_value=0, max_value=2**16 - 1),
+             st.integers(min_value=1, max_value=16)))
 def test_pack_unpack_bits(word, nbits):
     word = word & ((1 << nbits) - 1)
     bits = bitops.unpack_bits(jnp.asarray([word]), nbits)

@@ -1,7 +1,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # minimal installs: degrade to fixed-example sampling
+    HAVE_HYPOTHESIS = False
 
 from repro.core.ecc import MAX_SEGMENT_DATA_BITS, One4NRowCodec, SecdedCode, \
     secded_redundant_bits
@@ -17,40 +22,63 @@ def test_clean_roundtrip(d):
     assert (np.asarray(status) == 0).all()
 
 
-@given(st.integers(min_value=0, max_value=10 ** 9),
-       st.sampled_from([6, 96, 104]),
-       st.data())
-@settings(max_examples=60, deadline=None)
-def test_any_single_flip_corrected(seed, d, data_strategy):
+def _single_flip_case(seed, d, pos_frac):
     """SECDED property: every single-bit flip (data, parity or overall bit)
     is corrected — the paper's case (ii)."""
     rng = np.random.default_rng(seed)
     code = SecdedCode(d)
     data = jnp.asarray(rng.integers(0, 2, (1, d)), jnp.uint8)
     cw = code.encode(data)
-    pos = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
+    pos = min(int(pos_frac * code.n), code.n - 1)
     cw = cw.at[0, pos].set(1 - cw[0, pos])
     out, status = code.decode(cw)
     assert (np.asarray(out) == np.asarray(data)).all()
     assert int(status[0]) == 1
 
 
-@given(st.integers(min_value=0, max_value=10 ** 9), st.data())
-@settings(max_examples=60, deadline=None)
-def test_any_double_flip_detected(seed, data_strategy):
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=10 ** 9),
+           st.sampled_from([6, 96, 104]),
+           st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_any_single_flip_corrected(seed, d, pos_frac):
+        _single_flip_case(seed, d, pos_frac)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 99, 10 ** 9])
+    @pytest.mark.parametrize("d", [6, 96, 104])
+    @pytest.mark.parametrize("pos_frac", [0.0, 0.37, 0.99])
+    def test_any_single_flip_corrected(seed, d, pos_frac):
+        _single_flip_case(seed, d, pos_frac)
+
+
+def _double_flip_case(seed, f1, f2):
     """Every 2-bit flip is flagged uncorrectable — the paper's case (iii)."""
     rng = np.random.default_rng(seed)
     code = SecdedCode(104)
     data = jnp.asarray(rng.integers(0, 2, (1, 104)), jnp.uint8)
     cw = code.encode(data)
-    p1 = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
-    p2 = data_strategy.draw(st.integers(min_value=0, max_value=code.n - 1))
+    p1 = min(int(f1 * code.n), code.n - 1)
+    p2 = min(int(f2 * code.n), code.n - 1)
     if p1 == p2:
         return
     for p in (p1, p2):
         cw = cw.at[0, p].set(1 - cw[0, p])
     _, status = code.decode(cw)
     assert int(status[0]) == 2
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=10 ** 9),
+           st.floats(min_value=0.0, max_value=1.0),
+           st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_any_double_flip_detected(seed, f1, f2):
+        _double_flip_case(seed, f1, f2)
+else:
+    @pytest.mark.parametrize("seed", [0, 7, 10 ** 9])
+    @pytest.mark.parametrize("f1,f2", [(0.0, 0.99), (0.1, 0.5), (0.42, 0.43)])
+    def test_any_double_flip_detected(seed, f1, f2):
+        _double_flip_case(seed, f1, f2)
 
 
 def test_paper_redundancy_counts():
