@@ -1,12 +1,15 @@
-"""Batched serving on emulated CIM macros with the BFP Pallas weight path.
+"""Batched serving on emulated CIM macros with the fused decode-on-read path.
 
 Shows the paper's deployment story end to end:
-  * weights exponent-aligned and packed into the macro SRAM image,
-  * static soft-error injection at a configurable BER,
-  * One4N SECDED decode on the read path,
-  * the block-shared-exponent matmul kernel (``kernels/bfp_matmul``)
-    consuming the mantissa plane + shared exponents directly — the dequant
-    happens in VMEM, exactly like the macro's exponent/mantissa split.
+  * weights exponent-aligned and packed into the word-packed SRAM image,
+  * static soft-error injection at a configurable BER (every stored cell —
+    check bits included — is a target),
+  * the fused ``kernels/cim_read`` Pallas kernel consuming the packed planes
+    directly: SECDED decode + FP16 reconstruction + matmul in VMEM, exactly
+    like the macro's read path — the decoded weight matrix never exists in
+    HBM,
+  * per-read dynamic injection: the same kernel draws fresh counter-PRNG
+    faults in-kernel, bit-identical to ``cim.inject`` with the same key.
 
 Run:  PYTHONPATH=src python examples/serve_cim.py --ber 1e-4
 """
@@ -18,8 +21,8 @@ import numpy as np
 
 from repro.core import align as align_lib
 from repro.core import cim as cim_lib
-from repro.kernels.bfp_matmul import ops as bfp_ops
-from repro.kernels.bfp_matmul import ref as bfp_ref
+from repro.kernels.cim_read import ops as cr_ops
+from repro.kernels.fault_inject.ops import ber_to_threshold
 
 
 def main():
@@ -34,7 +37,6 @@ def main():
     w = jax.random.normal(key, (args.d_in, args.d_out)) * 0.05
     w_al, _ = align_lib.align_matrix(w, align_lib.AlignmentConfig(8, 2))
 
-    # pack the SRAM image two ways: protected and not
     x = jax.random.normal(jax.random.PRNGKey(1), (args.requests, args.d_in))
     clean = x @ jnp.asarray(w_al, jnp.float32)
 
@@ -42,19 +44,35 @@ def main():
         store = cim_lib.pack(w_al, cim_lib.CIMConfig(protect=protect))
         faulty = cim_lib.inject(jax.random.PRNGKey(2), store, args.ber,
                                 "exponent_sign")
-        w_read, stats = cim_lib.read(faulty)
-        man, exp = bfp_ref.pack_bfp(w_read, 8)
-        out = bfp_ops.bfp_matmul(x, man, exp)   # Pallas kernel (interpret on CPU)
+        stats = cim_lib.store_stats(faulty)
+        # fused serve: decode-on-read straight off the packed image
+        out, info = cr_ops.cim_linear_store(x, faulty, with_info=True)
         err = float(jnp.max(jnp.abs(out - clean)))
         rel = err / float(jnp.max(jnp.abs(clean)))
-        print(f"protect={protect:6s} ber={args.ber:.0e}  corrected={int(stats['corrected'])} "
+        print(f"protect={protect:6s} ber={args.ber:.0e}  "
+              f"corrected={int(stats['corrected'])} "
               f"uncorrectable={int(stats['uncorrectable'])}  "
+              f"kernel={info['used_kernel']}  "
               f"max output err {err:.3e} (rel {rel:.2e})")
 
-    print("\nKernel sanity: bfp_matmul == x @ dequant(ref) on clean weights:",
-          bool(np.allclose(
-              np.asarray(bfp_ops.bfp_matmul(x, *bfp_ref.pack_bfp(w_al, 8))),
-              np.asarray(clean), rtol=1e-5, atol=1e-5)))
+    # dynamic mode: per-read faults drawn in-kernel — same streams as the
+    # static injection above when keyed identically
+    store = cim_lib.pack(w_al, cim_lib.CIMConfig(protect="one4n"))
+    thr = ber_to_threshold(args.ber)
+    scalars = cr_ops.make_scalars(cim_lib.plane_seeds(jax.random.PRNGKey(2)),
+                                  thr_man=0, thr_meta=thr)
+    dyn = cr_ops.cim_linear_store(x, store, scalars=scalars)
+    stat = cr_ops.cim_linear_store(
+        x, cim_lib.inject(jax.random.PRNGKey(2), store, args.ber,
+                          "exponent_sign"))
+    print("\nPer-read dynamic == static inject with the same key:",
+          bool(np.allclose(np.asarray(dyn), np.asarray(stat),
+                           rtol=1e-5, atol=1e-5)))
+
+    clean_out = cr_ops.cim_linear_store(x, store)
+    print("Kernel sanity: fused decode-on-read == x @ w on a clean image:",
+          bool(np.allclose(np.asarray(clean_out), np.asarray(clean),
+                           rtol=1e-5, atol=1e-5)))
 
 
 if __name__ == "__main__":

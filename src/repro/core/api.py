@@ -33,6 +33,11 @@ class ReliabilityConfig:
     field: str = "full"               # fault target field
     inject: str = "dynamic"           # static | dynamic
     fmt_name: str = "fp16"
+    serve_path: str = "fused"         # fused  — serve straight from the packed
+                                      #          SRAM image (decode-on-read
+                                      #          kernels, no fp16 weight
+                                      #          matrices in HBM);
+                                      # hbm    — decode once, serve fp16 copies
 
     @property
     def fmt(self):
@@ -51,6 +56,15 @@ class ReliabilityConfig:
     def fault_model(self) -> FaultModel:
         return FaultModel(ber=self.ber, field=self.field, fmt=self.fmt,
                           mode=self.inject)
+
+    @property
+    def residual_exp_ber(self) -> float:
+        """Closed-form post-ECC exponent/sign BER of the active codec (the
+        launcher's dynamic-injection rate; raw BER when unprotected)."""
+        from repro.core.ecc import residual_ber_after_secded
+        if self.protect == "one4n":
+            return residual_ber_after_secded(self.ber, codec=self.cim_cfg.codec)
+        return self.ber
 
     def enabled(self) -> bool:
         return self.mode != "off"

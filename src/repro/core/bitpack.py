@@ -1,0 +1,195 @@
+"""Multiword (uint32) bit-plane arithmetic for the packed SRAM image.
+
+Everything in the packed CIM path — SECDED codewords, One4N payloads, sign
+planes — is a little-endian bit string stored across the **last axis** of a
+``uint32`` array: bit ``i`` of the string lives in word ``i // 32`` at lane
+``i % 32`` (LSB first). These helpers implement the handful of primitives the
+packed codec needs as pure shift/mask/xor arithmetic:
+
+* window extraction / insertion at *static* bit offsets (payload assembly,
+  segment split/join),
+* single-bit insert/delete "funnel shifts" (placing Hamming parity bits at
+  the power-of-two codeword positions without scatters),
+* word-parallel parity (syndrome bits via precomputed column masks instead of
+  ``int32`` bit-matrix matmuls).
+
+Inside the algorithms a multiword value is carried as a Python **list** of
+``[...]``-shaped ``uint32`` arrays (one per word) so every per-word expression
+is statically unrolled; ``to_words`` / ``from_words`` convert to/from the
+stacked last-axis representation. All functions are jit-/vmap-/Pallas-safe
+element-wise ops.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+def n_words(nbits: int) -> int:
+    """Number of uint32 words needed to hold ``nbits`` bits."""
+    return (nbits + WORD - 1) // WORD
+
+
+def word_masks(nbits: int, W: int | None = None) -> np.ndarray:
+    """uint32 [W] validity mask: bit set iff that bit index is < ``nbits``."""
+    W = n_words(nbits) if W is None else W
+    out = np.zeros((W,), np.uint32)
+    for w in range(W):
+        lo = w * WORD
+        valid = min(max(nbits - lo, 0), WORD)
+        out[w] = _FULL if valid == WORD else np.uint32((1 << valid) - 1)
+    return out
+
+
+def to_words(arr: jnp.ndarray) -> List[jnp.ndarray]:
+    """Stacked [..., W] uint32 array -> list of W per-word [...] arrays."""
+    return [arr[..., w].astype(jnp.uint32) for w in range(arr.shape[-1])]
+
+
+def from_words(words: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """List of per-word arrays -> stacked [..., W] uint32 array."""
+    return jnp.stack([w.astype(jnp.uint32) for w in words], axis=-1)
+
+
+def zeros_like_words(ref: jnp.ndarray, W: int) -> List[jnp.ndarray]:
+    """W zero words shaped like ``ref`` (any array supplying shape/weak type)."""
+    z = jnp.zeros_like(jnp.asarray(ref, jnp.uint32))
+    return [z for _ in range(W)]
+
+
+def parity32(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit parity of each uint32 element (0 or 1), via xor-folding."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    return x & jnp.uint32(1)
+
+
+def masked_parity(words: Sequence[jnp.ndarray], masks: np.ndarray) -> jnp.ndarray:
+    """Parity of the bits selected by per-word ``masks`` (uint32 [W]).
+
+    parity(a) ^ parity(b) == parity(a ^ b), so the word reduction is a plain
+    XOR fold followed by one ``parity32``.
+    """
+    acc = words[0] & jnp.uint32(masks[0])
+    for w in range(1, len(words)):
+        if int(masks[w]) == 0:
+            continue
+        acc = acc ^ (words[w] & jnp.uint32(masks[w]))
+    return parity32(acc)
+
+
+def extract_window(words: Sequence[jnp.ndarray], start: int,
+                   nbits: int) -> List[jnp.ndarray]:
+    """Bits [start, start+nbits) as a fresh ``n_words(nbits)``-word value."""
+    W = len(words)
+    masks = word_masks(nbits)
+    out = []
+    for ow in range(n_words(nbits)):
+        bitpos = start + ow * WORD
+        wl, sh = divmod(bitpos, WORD)
+        v = (words[wl] >> sh) if wl < W else jnp.uint32(0)
+        if sh and wl + 1 < W:
+            v = v | (words[wl + 1] << (WORD - sh))
+        out.append(v & jnp.uint32(masks[ow]))
+    return out
+
+
+def or_window(dst: List[jnp.ndarray], src: Sequence[jnp.ndarray], start: int,
+              nbits: int) -> None:
+    """OR an ``nbits``-wide value into ``dst`` at bit offset ``start``.
+
+    ``dst`` must be zero (or disjoint) in the target window; ``src`` is masked
+    to ``nbits`` first. Mutates the ``dst`` list in place.
+    """
+    masks = word_masks(nbits)
+    for sw in range(n_words(nbits)):
+        s = src[sw] & jnp.uint32(masks[sw]) if sw < len(src) else None
+        if s is None:
+            break
+        bitpos = start + sw * WORD
+        wl, sh = divmod(bitpos, WORD)
+        if wl < len(dst):
+            dst[wl] = dst[wl] | ((s << sh) if sh else s)
+        if sh and wl + 1 < len(dst):
+            dst[wl + 1] = dst[wl + 1] | (s >> (WORD - sh))
+
+
+def insert_zero_bit(words: Sequence[jnp.ndarray], pos: int) -> List[jnp.ndarray]:
+    """Insert a zero bit at ``pos``, shifting higher bits up by one.
+
+    The caller provides enough words to hold the grown value (the top bit of
+    the last word is shifted out).
+    """
+    W = len(words)
+    shifted = []
+    for w in range(W):
+        v = words[w] << 1
+        if w > 0:
+            v = v | (words[w - 1] >> (WORD - 1))
+        shifted.append(v)
+    wl, sh = divmod(pos, WORD)
+    lo = jnp.uint32((1 << sh) - 1)
+    # bits < pos keep, bit pos forced to 0, bits > pos come from the shift
+    hi = jnp.uint32(((1 << (sh + 1)) - 1) & 0xFFFFFFFF)
+    out = []
+    for w in range(W):
+        if w < wl:
+            out.append(words[w])
+        elif w == wl:
+            out.append((words[w] & lo) | (shifted[w] & ~hi))
+        else:
+            out.append(shifted[w])
+    return out
+
+
+def delete_bit(words: Sequence[jnp.ndarray], pos: int) -> List[jnp.ndarray]:
+    """Remove the bit at ``pos``, shifting higher bits down by one."""
+    W = len(words)
+    shifted = []
+    for w in range(W):
+        v = words[w] >> 1
+        if w + 1 < W:
+            v = v | (words[w + 1] << (WORD - 1))
+        shifted.append(v)
+    wl, sh = divmod(pos, WORD)
+    lo = jnp.uint32((1 << sh) - 1)
+    out = []
+    for w in range(W):
+        if w < wl:
+            out.append(words[w])
+        elif w == wl:
+            out.append((words[w] & lo) | (shifted[w] & ~lo))
+        else:
+            out.append(shifted[w])
+    return out
+
+
+def pack_bits_words(bits: jnp.ndarray, nbits: int | None = None) -> jnp.ndarray:
+    """Bit array [..., nbits] (LSB first, {0,1}) -> packed [..., W] uint32."""
+    nbits = bits.shape[-1] if nbits is None else nbits
+    W = n_words(nbits)
+    pad = W * WORD - nbits
+    b = bits.astype(jnp.uint32)
+    if pad:
+        b = jnp.concatenate(
+            [b, jnp.zeros(b.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    b = b.reshape(b.shape[:-1] + (W, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_words(words: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Packed [..., W] uint32 -> bit array [..., nbits] uint8 (LSB first)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = ((words[..., None].astype(jnp.uint32) >> shifts) & 1).astype(jnp.uint8)
+    bits = bits.reshape(bits.shape[:-2] + (words.shape[-1] * WORD,))
+    return bits[..., :nbits]

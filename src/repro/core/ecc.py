@@ -20,16 +20,30 @@ Two layers:
 
 Everything is implemented as jit-able jnp bit arithmetic; generator/parity-check
 structure is precomputed with numpy at trace time.
+
+Both codecs expose **two equivalent APIs**:
+
+* the original per-bit API (``encode`` / ``decode`` on ``uint8`` bit arrays) —
+  kept as the readable oracle the packed path is tested against;
+* a word-packed API (``encode_packed`` / ``decode_packed`` on ``uint32`` word
+  arrays, bit ``i`` in word ``i//32`` lane ``i%32``) — syndrome/parity bits
+  are computed with precomputed per-word column masks + XOR-parity folds
+  (:mod:`repro.core.bitpack`), and parity-bit placement/removal uses static
+  single-bit funnel shifts. No ``int32`` bit-matrix matmuls, no ``.at[].set``
+  scatters — this is the representation the packed :class:`~repro.core.cim`
+  store and the fused ``cim_read`` kernel operate on.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import bitpack
 
 # Max data bits covered by one SECDED row with a 7-bit Hamming syndrome
 # (2^7 = 128 >= 104 + 7 + 1). The paper's N=8 block (208 payload bits) splits
@@ -61,6 +75,38 @@ def _secded_tables(d: int):
     enc = H[:, ~is_parity]                          # [r, d]
     # scatter indices: codeword[pos-1]
     return r, n, data_pos - 1, parity_pos - 1, H, enc
+
+
+@functools.lru_cache(maxsize=None)
+def _secded_packed_tables(d: int):
+    """Per-word column masks for the packed encode/decode of ``d`` data bits.
+
+    Packed codeword layout: body bit ``i`` (0-based, position ``i+1``) at word
+    ``i//32`` lane ``i%32``; the overall parity bit at bit index ``n``.
+    """
+    r, n, data_idx, _, _, _ = _secded_tables(d)
+    Wd = bitpack.n_words(d)
+    Wc = bitpack.n_words(n + 1)
+    # syndrome bit j = parity of body bits whose 1-based position has bit j set
+    hmask = np.zeros((r, Wc), np.uint32)
+    for i in range(n):
+        pos = i + 1
+        for j in range(r):
+            if (pos >> j) & 1:
+                hmask[j, i // 32] |= np.uint32(1 << (i % 32))
+    # encode: parity bit j = parity of DATA bits whose (data) position has bit j
+    encmask = np.zeros((r, Wd), np.uint32)
+    for q, i in enumerate(data_idx):          # i = 0-based codeword body index
+        pos = i + 1
+        for j in range(r):
+            if (pos >> j) & 1:
+                encmask[j, q // 32] |= np.uint32(1 << (q % 32))
+    body_mask = bitpack.word_masks(n, Wc)          # body bits only
+    code_mask = bitpack.word_masks(n + 1, Wc)      # body + overall parity
+    data_mask = bitpack.word_masks(d, Wd)
+    parity_pos0 = tuple((1 << j) - 1 for j in range(r))   # 0-based body indices
+    return r, n, Wd, Wc, hmask, encmask, body_mask, code_mask, data_mask, \
+        parity_pos0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +162,81 @@ class SecdedCode:
         data = corrected[..., jnp.asarray(data_idx)].astype(jnp.uint8)
         status = jnp.where(clean, 0, jnp.where(double, 2, 1)).astype(jnp.int32)
         return data, status
+
+    # ------------------------------------------------------- packed (uint32)
+
+    @property
+    def data_words(self) -> int:
+        return bitpack.n_words(self.data_bits)
+
+    @property
+    def code_words(self) -> int:
+        return bitpack.n_words(self.n)
+
+    @property
+    def code_word_masks(self) -> np.ndarray:
+        """uint32 [code_words] validity mask of stored codeword bits."""
+        return _secded_packed_tables(self.data_bits)[7]
+
+    def encode_packed(self, data_words: jnp.ndarray) -> jnp.ndarray:
+        """Packed encode: data [..., data_words] uint32 -> [..., code_words].
+
+        Parity bits come from XOR-parity folds against precomputed column
+        masks; their placement at the power-of-two positions is a sequence of
+        static single-bit funnel shifts (no scatters).
+        """
+        r, n, Wd, Wc, _, encmask, _, _, data_mask, parity_pos0 = \
+            _secded_packed_tables(self.data_bits)
+        dw = [data_words[..., w].astype(jnp.uint32) & jnp.uint32(data_mask[w])
+              for w in range(Wd)]
+        parity = [bitpack.masked_parity(dw, encmask[j]) for j in range(r)]
+        body = dw + [jnp.zeros_like(dw[0]) for _ in range(Wc - Wd)]
+        for pp in parity_pos0:                    # ascending 0, 1, 3, 7, ...
+            body = bitpack.insert_zero_bit(body, pp)
+        for j, pp in enumerate(parity_pos0):
+            wl, sh = divmod(pp, 32)
+            body[wl] = body[wl] | (parity[j] << sh)
+        overall = bitpack.masked_parity(body, bitpack.word_masks(n, Wc))
+        wl, sh = divmod(n, 32)
+        body[wl] = body[wl] | (overall << sh)
+        return bitpack.from_words(body)
+
+    def decode_packed(self, code_words: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Packed decode: [..., code_words] uint32 -> (data words, status).
+
+        Bit-exact with :meth:`decode` on the unpacked bits (same syndrome
+        semantics, same status codes 0/1/2).
+        """
+        r, n, Wd, Wc, hmask, _, body_mask, _, data_mask, parity_pos0 = \
+            _secded_packed_tables(self.data_bits)
+        cw = [code_words[..., w].astype(jnp.uint32) for w in range(Wc)]
+        body = [cw[w] & jnp.uint32(body_mask[w]) for w in range(Wc)]
+        synd = [bitpack.masked_parity(body, hmask[j]) for j in range(r)]
+        pos = synd[0]
+        for j in range(1, r):
+            pos = pos | (synd[j] << j)                       # 1-based, R[6:0]
+        owl, osh = divmod(n, 32)
+        overall_bit = (cw[owl] >> osh) & jnp.uint32(1)
+        parity = bitpack.masked_parity(body, bitpack.word_masks(n, Wc)) \
+            ^ overall_bit                                    # R[7]
+        clean = (pos == 0) & (parity == 0)
+        single = parity == 1
+        double = (parity == 0) & (pos > 0)
+
+        do_flip = single & (pos > 0)
+        pos0 = jnp.where(pos > 0, pos - 1, 0)
+        flip_word = pos0 // 32
+        flip_bit = jnp.left_shift(jnp.uint32(1), pos0 % 32)
+        for w in range(Wc):
+            flipw = jnp.where(do_flip & (flip_word == w), flip_bit,
+                              jnp.uint32(0)) & jnp.uint32(body_mask[w])
+            body[w] = body[w] ^ flipw
+        for pp in reversed(parity_pos0):          # descending 63, 31, ..., 0
+            body = bitpack.delete_bit(body, pp)
+        data = [body[w] & jnp.uint32(data_mask[w]) for w in range(Wd)]
+        status = jnp.where(clean, 0, jnp.where(double, 2, 1)).astype(jnp.int32)
+        return bitpack.from_words(data), status
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,8 +316,92 @@ class One4NRowCodec:
         exp_row, signs = self.split_payload(payload)
         return exp_row, signs, status
 
+    # ------------------------------------------------------- packed (uint32)
 
-def residual_ber_after_secded(ber: float, codeword_bits: int = 112) -> float:
+    @property
+    def sign_bits(self) -> int:
+        return self.n_group * self.sign_bits_per_row
+
+    @property
+    def sign_words(self) -> int:
+        """uint32 words holding one block's sign bits (bit = i_n*row + t)."""
+        return bitpack.n_words(self.sign_bits)
+
+    @property
+    def payload_words(self) -> int:
+        return bitpack.n_words(self.padded_bits)
+
+    @property
+    def codeword_words(self) -> int:
+        return self.code.code_words
+
+    def pack_signs(self, signs: jnp.ndarray) -> jnp.ndarray:
+        """signs [..., N, row_weights] bits -> packed [..., sign_words]."""
+        flat = signs.reshape(signs.shape[:-2] + (self.sign_bits,))
+        return bitpack.pack_bits_words(flat, self.sign_bits)
+
+    def unpack_signs(self, sign_words: jnp.ndarray) -> jnp.ndarray:
+        """Packed [..., sign_words] -> signs [..., N, row_weights] uint8 bits."""
+        bits = bitpack.unpack_words(sign_words, self.sign_bits)
+        return bits.reshape(bits.shape[:-1] +
+                            (self.n_group, self.sign_bits_per_row))
+
+    def build_payload_packed(self, exp_row: jnp.ndarray,
+                             sign_words: jnp.ndarray):
+        """exp_row [..., row_weights] ints + packed signs -> payload words list.
+
+        Payload bit layout matches :meth:`build_payload`: ``row_weights``
+        exponent fields of ``exp_bits`` each, then the ``N*row_weights`` sign
+        bits, then zero padding up to ``padded_bits``.
+        """
+        eb, rw = self.exp_bits, self.row_weights
+        pw = bitpack.zeros_like_words(exp_row[..., 0], self.payload_words)
+        for t in range(rw):
+            bitpack.or_window(pw, [exp_row[..., t].astype(jnp.uint32)],
+                              t * eb, eb)
+        off = rw * eb
+        for v in range(self.sign_words):
+            nb = min(32, self.sign_bits - 32 * v)
+            bitpack.or_window(pw, [sign_words[..., v].astype(jnp.uint32)],
+                              off + 32 * v, nb)
+        return pw
+
+    def split_payload_packed(self, pw):
+        """Payload word list -> (exp_row [..., row_weights] uint8,
+        sign_words [..., sign_words])."""
+        eb, rw = self.exp_bits, self.row_weights
+        exps = [bitpack.extract_window(pw, t * eb, eb)[0] for t in range(rw)]
+        exp_row = jnp.stack(exps, axis=-1).astype(jnp.uint8)
+        off = rw * eb
+        svs = [bitpack.extract_window(pw, off + 32 * v,
+                                      min(32, self.sign_bits - 32 * v))[0]
+               for v in range(self.sign_words)]
+        return exp_row, jnp.stack(svs, axis=-1)
+
+    def encode_packed(self, exp_row: jnp.ndarray,
+                      sign_words: jnp.ndarray) -> jnp.ndarray:
+        """-> packed codewords [..., n_segments, codeword_words] uint32."""
+        pw = self.build_payload_packed(exp_row, sign_words)
+        segs = [bitpack.from_words(
+            bitpack.extract_window(pw, s * self.segment_bits, self.segment_bits))
+            for s in range(self.n_segments)]
+        return self.code.encode_packed(jnp.stack(segs, axis=-2))
+
+    def decode_packed(self, codewords: jnp.ndarray):
+        """Packed codewords [..., n_segments, codeword_words] ->
+        (exp_row [..., row_weights], sign_words [..., sign_words],
+        status [..., n_segments])."""
+        data, status = self.code.decode_packed(codewords)
+        pw = bitpack.zeros_like_words(data[..., 0, 0], self.payload_words)
+        for s in range(self.n_segments):
+            bitpack.or_window(pw, [data[..., s, w] for w in range(data.shape[-1])],
+                              s * self.segment_bits, self.segment_bits)
+        exp_row, sign_words = self.split_payload_packed(pw)
+        return exp_row, sign_words, status
+
+
+def residual_ber_after_secded(ber: float, codeword_bits: Optional[int] = None,
+                              codec: Optional[One4NRowCodec] = None) -> float:
     """Post-ECC residual error rate per protected bit.
 
     SECDED corrects one flip per codeword; a bit stays wrong only when its
@@ -205,8 +410,15 @@ def residual_ber_after_secded(ber: float, codeword_bits: int = 112) -> float:
     and conditional on that, ~2 of n bits are wrong. Used for closed-form
     injection at scales where bit-plane emulation is impractical (launcher
     dynamic mode); the bit-accurate path is ``repro.core.cim``.
+
+    ``codeword_bits`` defaults to the stored codeword length of the active
+    ``codec`` (or the paper's default :class:`One4NRowCodec`, 112 bits for
+    N=8) so non-default ``n_group`` / ``row_weights`` configurations get a
+    consistent closed form without callers hard-coding the length.
     """
     import math as _math
+    if codeword_bits is None:
+        codeword_bits = (codec or One4NRowCodec()).code.n
     n, p = codeword_bits, ber
     if p <= 0:
         return 0.0

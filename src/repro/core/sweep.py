@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core import bitops
+from repro.core import bitops, bitpack
 from repro.core import cim as cim_lib
 from repro.core import fault as fault_lib
 from repro.core.bitops import FP16, FloatFormat
@@ -141,27 +141,42 @@ def inject_pytree_batched(params, seeds: jnp.ndarray, threshold, field: str,
 
 def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
                           interpret) -> cim_lib.CIMStore:
-    """Batched SRAM-plane injection (field='full' of ``cim.inject``): mantissa
-    plane always; codeword bits when protected, else raw exponent+sign."""
+    """Batched SRAM-plane injection (field='full' of ``cim.inject``) on the
+    word-packed planes: the trial-batched kernel draws per-word 32-lane flip
+    masks, and lanes that are not stored cells (codeword tail words, the sign
+    plane's ragged last word) are masked back to their original bits."""
     t = seeds.shape[0]
     mb = store.cfg.fmt.man_bits
     eb = store.cfg.fmt.exp_bits
 
     man = _leaf_inject_batched(store.man, _salted(seeds, 101), threshold,
                                tuple(range(mb)), interpret)
+    sign = exp = cw = None
     if store.codewords is not None:
-        cw2d = store.codewords.reshape(-1, store.codewords.shape[-1])
-        cw = _leaf_inject_batched(cw2d, _salted(seeds, 102), threshold,
-                                  (0,), interpret)
-        cw = cw.reshape((t,) + store.codewords.shape)
-        sign = jnp.broadcast_to(store.sign, (t,) + store.sign.shape)
-        exp = jnp.broadcast_to(store.exp, (t,) + store.exp.shape)
+        cw_arr = store.codewords
+        masks = cim_lib.codeword_valid_masks(store.cfg)
+        if cw_arr.ndim == 2:
+            # per-weight SECDED: one uint16 word per weight, n stored bits
+            positions = tuple(p for p in range(16) if (int(masks) >> p) & 1)
+            cw = _leaf_inject_batched(cw_arr, _salted(seeds, 102), threshold,
+                                      positions, interpret)
+        else:
+            cw2d = cw_arr.reshape(cw_arr.shape[0], -1)     # [B, G*S*W] uint32
+            flipped = _leaf_inject_batched(cw2d, _salted(seeds, 102), threshold,
+                                           tuple(range(32)), interpret)
+            valid = jnp.asarray(np.tile(masks, cw2d.shape[1] // masks.size),
+                                jnp.uint32)
+            flipped = (flipped & valid) | (cw2d[None] & ~valid)
+            cw = flipped.reshape((t,) + cw_arr.shape)
     else:
-        cw = None
         exp = _leaf_inject_batched(store.exp, _salted(seeds, 103), threshold,
                                    tuple(range(eb)), interpret)
-        sign = _leaf_inject_batched(store.sign, _salted(seeds, 104), threshold,
-                                    (0,), interpret)
+        k_pad = store.man.shape[0]
+        smasks = bitpack.word_masks(k_pad, store.sign.shape[0])
+        sflip = _leaf_inject_batched(store.sign, _salted(seeds, 104), threshold,
+                                     tuple(range(32)), interpret)
+        valid = jnp.asarray(smasks, jnp.uint32)[:, None]
+        sign = (sflip & valid) | (store.sign[None] & ~valid)
     return cim_lib.CIMStore(man=man, sign=sign, exp=exp, codewords=cw,
                             shape=store.shape, cfg=store.cfg)
 

@@ -1,0 +1,290 @@
+"""Pallas TPU kernel: fused SECDED decode + FP16 reconstruction + matmul.
+
+The serving-path realization of the packed CIM store (DESIGN: decode-on-read).
+Weights stream HBM->VMEM **in the macro's packed SRAM layout** — a uint16
+mantissa plane plus either word-packed One4N codewords (``protect='one4n'``)
+or a raw exponent plane + K-packed sign words (``protect='none'``). Each
+weight tile is ECC-decoded and reconstructed to fp32 *in VMEM* and fed
+straight to the MXU; decoded fp16 weight matrices never exist in HBM:
+
+    SECDED syndrome/correction  -> XOR-parity folds on uint32 words
+                                   (`ecc.decode_packed`, shared code)
+    exponent summation array    -> shared-exponent pow2 scale (exact)
+    sign processing unit (XOR)  -> sign factor in the reconstruction
+    mantissa multiplication     -> MXU dot on the reconstructed tile
+
+Optional **per-read dynamic injection**: with ``dynamic=True`` the kernel
+draws counter-PRNG flip masks over the packed words before decoding —
+bit-identical streams to :func:`repro.core.cim.inject` (same murmur3 hash,
+same per-plane seeds, element index computed in *store* coordinates so
+tile-level padding never shifts the streams). Thresholds and seeds are SMEM
+scalars: sweeping BER or read index does not recompile.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") with output revisiting —
+the [bm, bn] fp32 accumulator stays in VMEM across the K loop. ``bn`` must
+cover whole ``row_weights`` groups and ``bk`` whole exponent blocks (plus
+whole sign words for the raw path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bitpack
+from repro.core.ecc import One4NRowCodec
+from repro.kernels.fault_inject.kernel import hash_u32
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# SMEM scalar layout (uint32[5]); thresholds of 0 mean "no flips".
+SCALAR_THR_MAN = 0     # mantissa-field Bernoulli threshold
+SCALAR_THR_META = 1    # exponent_sign-field Bernoulli threshold
+SCALAR_SEED_MAN = 2    # mantissa-plane seed
+SCALAR_SEED_META = 3   # raw-exponent-plane seed   (protect='none')
+SCALAR_SEED_CW = 4     # codeword-plane seed (protected) / sign-plane seed
+
+
+def _flip_mask(elem: jnp.ndarray, seed, threshold, positions) -> jnp.ndarray:
+    """Counter-PRNG flip mask over ``positions`` for word elements ``elem``
+    (same streams as ``cim.counter_flip_words`` / the fault_inject kernel)."""
+    seed = seed * jnp.uint32(0x9E3779B9)
+    mask = jnp.zeros(elem.shape, jnp.uint32)
+    for p in positions:
+        z = (elem * jnp.uint32(32) + jnp.uint32(p)) ^ seed
+        flip = (hash_u32(z) < threshold).astype(jnp.uint32)
+        mask = mask | (flip << p)
+    return mask
+
+
+def _reconstruct_f32(sign_bit, e_full, man, *, man_bits: int, exp_bits: int,
+                     bias: int) -> jnp.ndarray:
+    """IEEE-faithful fp16-grid reconstruction (incl. subnormal/inf/nan, so a
+    corrupted exponent behaves exactly like the bitcast `read` path)."""
+    man_f = (man.astype(jnp.uint32) & ((1 << man_bits) - 1)).astype(jnp.float32)
+    e = e_full.astype(jnp.int32)
+    frac = man_f * (2.0 ** -man_bits)
+    normal = (1.0 + frac) * jnp.exp2((e - bias).astype(jnp.float32))
+    sub = frac * (2.0 ** (1 - bias))
+    emax = (1 << exp_bits) - 1
+    special = jnp.where(man_f == 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.nan))
+    mag = jnp.where(e == 0, sub, jnp.where(e == emax, special, normal))
+    sgn = jnp.where(sign_bit.astype(jnp.uint32) & 1 == 1, -1.0, 1.0)
+    return sgn.astype(jnp.float32) * mag
+
+
+def _expand_exp(e_block, n_group: int, bk: int, bn: int):
+    """[bkb, bn] per-block exponents -> [bk, bn] per-row."""
+    bkb = bk // n_group
+    e = jnp.broadcast_to(e_block[:, None, :], (bkb, n_group, bn))
+    return e.reshape(bk, bn)
+
+
+def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref, *,
+                           codec: One4NRowCodec, n_group: int, man_bits: int,
+                           exp_bits: int, bias: int, store_g: int,
+                           store_j: int, block_m: int, block_n: int,
+                           block_k: int, dynamic: bool):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    man = man_ref[...]                               # [bk, bn] uint16
+    cw = cw_ref[...].astype(jnp.uint32)              # [bkb, bng, S, W]
+    bkb, bng = cw.shape[0], cw.shape[1]
+    rw = codec.row_weights
+
+    if dynamic:
+        thr_man = scalars_ref[SCALAR_THR_MAN]
+        thr_meta = scalars_ref[SCALAR_THR_META]
+        seed_man = scalars_ref[SCALAR_SEED_MAN]
+        seed_cw = scalars_ref[SCALAR_SEED_CW]
+        j = pl.program_id(1)
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
+            + jnp.uint32(kk * block_k)
+        cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
+            + jnp.uint32(j * block_n)
+        elem = rows * jnp.uint32(store_j) + cols     # store coordinates
+        man = man ^ _flip_mask(elem, seed_man, thr_man,
+                               tuple(range(man_bits))).astype(man.dtype)
+        b_idx = jax.lax.broadcasted_iota(jnp.uint32, (bkb, bng), 0) \
+            + jnp.uint32(kk * bkb)
+        g_idx = jax.lax.broadcasted_iota(jnp.uint32, (bkb, bng), 1) \
+            + jnp.uint32(j * bng)
+        s_, w_ = codec.n_segments, codec.codeword_words
+        masks = codec.code.code_word_masks
+        base = (b_idx * jnp.uint32(store_g) + g_idx) * jnp.uint32(s_ * w_)
+        planes = []
+        for s in range(s_):
+            words = []
+            for w in range(w_):
+                positions = tuple(p for p in range(32)
+                                  if (int(masks[w]) >> p) & 1)
+                m = _flip_mask(base + jnp.uint32(s * w_ + w), seed_cw,
+                               thr_meta, positions)
+                words.append(cw[:, :, s, w] ^ m)
+            planes.append(jnp.stack(words, axis=-1))
+        cw = jnp.stack(planes, axis=-2)              # [bkb, bng, S, W]
+
+    exp_rows, sign_words, _ = codec.decode_packed(cw)    # [bkb,bng,rw],[...,Sw]
+    e_block = exp_rows.reshape(bkb, bng * rw)            # [bkb, bn]
+    e_full = _expand_exp(e_block, n_group, block_k, block_n)
+    # sign bit of weight (block b, i_n, group g, t) = payload sign bit
+    # i_n*rw + t of that block's sign words
+    per_in = []
+    sw_list = [sign_words[..., v] for v in range(sign_words.shape[-1])]
+    for i_n in range(n_group):
+        sv = bitpack.extract_window(sw_list, i_n * rw, rw)[0]   # [bkb, bng]
+        per_in.append(sv)
+    sv_all = jnp.stack(per_in, axis=1)                   # [bkb, n, bng]
+    t_iota = jax.lax.broadcasted_iota(jnp.uint32,
+                                      sv_all.shape + (rw,), 3)
+    bits = (sv_all[..., None] >> t_iota) & 1
+    sign_full = bits.reshape(block_k, block_n)           # (b, i_n, g, t) order
+
+    w_tile = _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
+                              exp_bits=exp_bits, bias=bias)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
+                          preferred_element_type=jnp.float32)
+
+
+def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
+                         o_ref, *, n_group: int, man_bits: int, exp_bits: int,
+                         bias: int, store_k: int, store_j: int, block_m: int,
+                         block_n: int, block_k: int, dynamic: bool):
+    """protect='none': raw exponent plane + K-packed sign words."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    man = man_ref[...]                               # [bk, bn] uint16
+    e_block = exp_ref[...]                           # [bkb, bn] uint8
+    signw = signw_ref[...].astype(jnp.uint32)        # [bk//32, bn]
+    bkw = signw.shape[0]
+
+    if dynamic:
+        thr_man = scalars_ref[SCALAR_THR_MAN]
+        thr_meta = scalars_ref[SCALAR_THR_META]
+        seed_man = scalars_ref[SCALAR_SEED_MAN]
+        seed_meta = scalars_ref[SCALAR_SEED_META]
+        seed_sign = scalars_ref[SCALAR_SEED_CW]
+        j = pl.program_id(1)
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
+            + jnp.uint32(kk * block_k)
+        cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
+            + jnp.uint32(j * block_n)
+        elem = rows * jnp.uint32(store_j) + cols
+        man = man ^ _flip_mask(elem, seed_man, thr_man,
+                               tuple(range(man_bits))).astype(man.dtype)
+        bkb = block_k // n_group
+        b_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 0) \
+            + jnp.uint32(kk * bkb)
+        b_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 1) \
+            + jnp.uint32(j * block_n)
+        e_elem = b_rows * jnp.uint32(store_j) + b_cols
+        e_block = e_block ^ _flip_mask(e_elem, seed_meta, thr_meta,
+                                       tuple(range(exp_bits))).astype(e_block.dtype)
+        w_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 0) \
+            + jnp.uint32(kk * bkw)
+        w_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 1) \
+            + jnp.uint32(j * block_n)
+        s_elem = w_rows * jnp.uint32(store_j) + w_cols
+        smask = _flip_mask(s_elem, seed_sign, thr_meta, tuple(range(32)))
+        # lanes beyond the store's K rows are not cells: mask them off
+        lane = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n, 32), 2)
+        lane_k = w_rows[:, :, None] * jnp.uint32(32) + lane
+        lane_valid = (lane_k < jnp.uint32(store_k)).astype(jnp.uint32)
+        valid = jnp.sum(lane_valid << lane, axis=-1)
+        signw = signw ^ (smask & valid)
+
+    e_full = _expand_exp(e_block, n_group, block_k, block_n)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (bkw, 32, block_n), 1)
+    bits = (signw[:, None, :] >> lane) & 1
+    sign_full = bits.reshape(bkw * 32, block_n)[:block_k]
+
+    w_tile = _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
+                              exp_bits=exp_bits, bias=bias)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
+                          preferred_element_type=jnp.float32)
+
+
+def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
+                          n_group: int, man_bits: int, exp_bits: int,
+                          bias: int, store_g: int, store_j: int,
+                          block_m: int, block_n: int, block_k: int,
+                          dynamic: bool, interpret: bool = True):
+    """x [M, K] float; man uint16 [K, N]; cw uint32 [K//n, N//rw, S, W];
+    scalars uint32 [5] -> [M, N] f32, decode fused into the matmul."""
+    m, k = x.shape
+    k2, n = man.shape
+    rw = codec.row_weights
+    assert k == k2 and cw.shape[:2] == (k // n_group, n // rw)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert block_k % n_group == 0 and block_n % rw == 0
+
+    s_, w_ = codec.n_segments, codec.codeword_words
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(
+        _cim_read_kernel_one4n, codec=codec, n_group=n_group,
+        man_bits=man_bits, exp_bits=exp_bits, bias=bias, store_g=store_g,
+        store_j=store_j, block_m=block_m, block_n=block_n, block_k=block_k,
+        dynamic=dynamic)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // n_group, block_n // rw, s_, w_),
+                         lambda i, j, kk: (kk, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(scalars, x, man, cw)
+
+
+def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
+                        man_bits: int, exp_bits: int, bias: int, store_k: int,
+                        store_j: int, block_m: int, block_n: int,
+                        block_k: int, dynamic: bool, interpret: bool = True):
+    """protect='none' variant: exp uint8 [K//n, N], signw uint32 [K//32, N]."""
+    m, k = x.shape
+    k2, n = man.shape
+    assert k == k2 and exp.shape == (k // n_group, n)
+    assert signw.shape == (k // 32, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert block_k % n_group == 0 and block_k % 32 == 0
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(
+        _cim_read_kernel_raw, n_group=n_group, man_bits=man_bits,
+        exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
+        block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // n_group, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // 32, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(scalars, x, man, exp, signw)

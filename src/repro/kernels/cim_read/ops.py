@@ -1,0 +1,162 @@
+"""jit'd public wrappers for the fused decode-on-read matmul.
+
+``cim_linear_store`` is the serving-path integration point: it consumes a
+packed :class:`repro.core.cim.CIMStore` directly (mantissa plane + packed
+codeword / exponent / sign words), pads every operand to tile boundaries, and
+launches the fused Pallas kernel — decoded fp16 weight matrices never
+materialize in HBM. Inputs that the kernel cannot tile (``per_weight``
+protection, non-fp16 formats) fall back to the reference path; callers can
+assert the kernel route actually ran via ``with_info=True``.
+
+``interpret`` defaults to True off-TPU (this container validates the kernel
+body on CPU); on a TPU runtime pass ``interpret=False`` for the Mosaic path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cim as cim_lib
+from repro.kernels.cim_read.kernel import (cim_read_matmul_one4n,
+                                           cim_read_matmul_raw)
+from repro.kernels.cim_read.ref import cim_read_ref  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return math.ceil(x / m) * m
+
+
+def _pad2(a, r, c):
+    return jnp.pad(a, ((0, r - a.shape[0]), (0, c - a.shape[1])))
+
+
+def make_scalars(seeds=None, thr_man=0, thr_meta=0) -> jnp.ndarray:
+    """SMEM scalar vector for the fused kernel (see kernel.SCALAR_*).
+
+    ``seeds`` is a :func:`repro.core.cim.plane_seeds` dict; zero thresholds
+    mean static serving (no in-kernel flips are drawn on that field).
+    """
+    z = jnp.uint32(0)
+    seeds = seeds or {}
+    return jnp.stack([
+        jnp.asarray(thr_man, jnp.uint32),
+        jnp.asarray(thr_meta, jnp.uint32),
+        jnp.asarray(seeds.get("man", z), jnp.uint32),
+        jnp.asarray(seeds.get("meta", z), jnp.uint32),
+        jnp.asarray(seeds.get("cw", z), jnp.uint32),
+    ])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "codec", "n_group", "man_bits", "exp_bits", "bias", "store_g", "store_j",
+    "block_m", "block_n", "block_k", "dynamic", "interpret"))
+def _one4n_call(x, man, cw, scalars, *, codec, n_group, man_bits, exp_bits,
+                bias, store_g, store_j, block_m, block_n, block_k, dynamic,
+                interpret):
+    return cim_read_matmul_one4n(
+        x, man, cw, scalars, codec=codec, n_group=n_group, man_bits=man_bits,
+        exp_bits=exp_bits, bias=bias, store_g=store_g, store_j=store_j,
+        block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_group", "man_bits", "exp_bits", "bias", "store_k", "store_j",
+    "block_m", "block_n", "block_k", "dynamic", "interpret"))
+def _raw_call(x, man, exp, signw, scalars, *, n_group, man_bits, exp_bits,
+              bias, store_k, store_j, block_m, block_n, block_k, dynamic,
+              interpret):
+    return cim_read_matmul_raw(
+        x, man, exp, signw, scalars, n_group=n_group, man_bits=man_bits,
+        exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
+        block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
+        interpret=interpret)
+
+
+def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 512,
+                     interpret: bool | None = None, use_kernel: bool = True,
+                     with_info: bool = False):
+    """Fused linear layer on a packed CIM store: ``x [..., K] -> [..., J]``.
+
+    Static serving: ``scalars=None`` (or zero thresholds). Per-read dynamic
+    injection: pass ``make_scalars(cim.plane_seeds(key), thr, thr)`` — the
+    kernel then draws the exact :func:`repro.core.cim.inject` flip streams
+    in-VMEM before decoding, so every read sees fresh faults without a stored
+    image update.
+
+    Operands are zero-padded to tile boundaries (padded activations are zero,
+    so padding never changes the result); outputs are sliced back. Returns
+    the output array, or ``(out, info)`` with ``info['used_kernel']`` when
+    ``with_info=True``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    cfg = store.cfg
+    k_log, j_log = store.shape
+    b_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    assert x2.shape[-1] == k_log, (x2.shape, store.shape)
+    dynamic = scalars is not None
+
+    supported = use_kernel and cfg.protect in ("one4n", "none") \
+        and cfg.fmt.name == "fp16"
+    if not supported:
+        out = _fallback(x2, store, scalars)
+        out = out.reshape(*b_shape, j_log)
+        return (out, {"used_kernel": False}) if with_info else out
+
+    n, rw = cfg.n_group, cfg.row_weights
+    k_pad, j_pad = store.man.shape
+    m = x2.shape[0]
+
+    lcm_k = n if cfg.protect == "one4n" else (n * 32 // math.gcd(n, 32))
+    bn = rw * (128 // math.gcd(rw, 128))          # lcm(rw, 128)
+    bn = min(bn * max(1, block_n // bn), bn * math.ceil(j_pad / bn))
+    j_t = _round_up(j_pad, bn)
+    bk = max(lcm_k, (min(block_k, k_pad) // lcm_k) * lcm_k)
+    k_t = _round_up(k_pad, bk)
+    bm = min(_round_up(block_m, 8), _round_up(m, 8))
+    m_t = _round_up(m, bm)
+
+    xp = jnp.pad(x2, ((0, m_t - m), (0, k_t - k_log)))
+    man = _pad2(store.man, k_t, j_t)
+    if scalars is None:
+        scalars = make_scalars()
+    common = dict(man_bits=cfg.fmt.man_bits, exp_bits=cfg.fmt.exp_bits,
+                  bias=cfg.fmt.bias, block_m=bm, block_n=bn, block_k=bk,
+                  dynamic=dynamic, interpret=interpret)
+    if cfg.protect == "one4n":
+        cw = store.codewords
+        b_t, g_t = k_t // n, j_t // rw
+        cw = jnp.pad(cw, ((0, b_t - cw.shape[0]), (0, g_t - cw.shape[1]),
+                          (0, 0), (0, 0)))
+        out = _one4n_call(xp, man, cw, scalars, codec=cfg.codec, n_group=n,
+                          store_g=j_pad // rw, store_j=j_pad, **common)
+    else:
+        b_t = k_t // n
+        exp = _pad2(store.exp, b_t, j_t)
+        sw_t = k_t // 32
+        signw = _pad2(store.sign, sw_t, j_t)
+        out = _raw_call(xp, man, exp, signw, scalars, n_group=n,
+                        store_k=k_pad, store_j=j_pad, **common)
+    out = out[:m, :j_log].reshape(*b_shape, j_log)
+    return (out, {"used_kernel": True}) if with_info else out
+
+
+def _fallback(x2, store, scalars):
+    """Reference path: packed jnp decode fused by XLA into the matmul (still
+    no persistent fp16 copy; used for per_weight / non-fp16 formats). Dynamic
+    scalars draw the same flip streams as the fused kernel."""
+    if scalars is not None:
+        seeds = {"man": scalars[2], "meta": scalars[3], "cw": scalars[4]}
+        store = cim_lib.inject_with_seeds(store, seeds, scalars[0], scalars[1])
+    w, _ = cim_lib.read(store)
+    return x2 @ w

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused decode-on-read matmul.
+
+The reference decodes the packed store with :func:`repro.core.cim.read` (the
+bit-exact packed ECC path) and runs a plain fp32 matmul — i.e. exactly what
+the fused kernel computes, but with the decoded weight matrix materialized.
+With ``seeds``/thresholds it first applies :func:`cim.inject_with_seeds`,
+which draws the identical counter-PRNG streams the kernel draws in-VMEM, so
+static and dynamic kernel outputs can both be checked against it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cim as cim_lib
+
+
+def cim_read_ref(x, store, *, seeds=None, thr_man=0, thr_meta=0):
+    """x [M, K] @ decode(store [K, J]) -> [M, J] f32 (+ decode stats)."""
+    if seeds is not None:
+        store = cim_lib.inject_with_seeds(store, seeds, thr_man, thr_meta)
+    w, stats = cim_lib.read(store)
+    return x.astype(jnp.float32) @ w, stats

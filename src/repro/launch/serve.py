@@ -1,18 +1,30 @@
 """Serving launcher: batched prefill + decode with CIM-deployed weights.
 
 The weight path mirrors deployment on a Unicorn-CIM macro: weights are
-exponent-aligned, packed into the SRAM image (mantissa plane + shared
-exponent rows + sign bits + SECDED check bits), statically injected with soft
-errors at ``--ber`` and ECC-decoded on read (``--protect one4n``) or not
-(``--protect none``) before serving.
+exponent-aligned and packed into the word-packed SRAM image (mantissa plane +
+SECDED codeword words, or raw exponent rows + packed sign words).
+
+Two serve paths (``--serve-path``):
+
+* ``fused`` (default) — the model's CIM-deployed matrices stay **packed** for
+  the whole run: the unembed projection runs through the fused decode-on-read
+  Pallas kernel (``kernels/cim_read``: SECDED decode + FP16 reconstruction +
+  matmul in VMEM) and the embedding table is decoded row-by-row at gather
+  time. Decoded fp16 weight matrices never materialize in HBM. Supports
+  static injection (``--inject static``: flip the image once, serve many) and
+  per-read dynamic injection (``--inject dynamic``: every prefill/decode step
+  draws fresh counter-PRNG faults in-kernel, keyed by the decode position).
+* ``hbm`` — the legacy path: inject + ECC-decode once, rematerialize fp16
+  weights, serve those (the baseline ``benchmarks/cim_store_bench.py``
+  compares against).
 
   python -m repro.launch.serve --arch olmo-1b --reduced --batch 4 \\
-      --prompt-len 64 --gen 32 --ber 1e-4 --protect one4n
+      --prompt-len 64 --gen 32 --cim --ber 1e-4 --protect one4n \\
+      --serve-path fused --inject dynamic
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -20,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import cim as cim_lib
+from repro.core.api import ReliabilityConfig
 from repro.data.synthetic import MarkovLM
 from repro.models import lm
 from repro.training import steps as steps_lib
@@ -27,8 +40,8 @@ from repro.training import steps as steps_lib
 
 def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
            key):
-    """Align -> pack -> (inject) -> read: returns the weights the macro would
-    actually serve, plus ECC statistics."""
+    """HBM path: align -> pack -> (inject) -> read. Returns the decoded fp16
+    weights the macro would serve, plus ECC statistics."""
     cfg = cim_lib.CIMConfig(n_group=n_group, index=index, protect=protect)
 
     def eligible(path, leaf):
@@ -41,6 +54,54 @@ def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
     return cim_lib.read_pytree(stores)
 
 
+def _fused_eligible(path, leaf):
+    """The fused serve path CIM-deploys the big embedding/unembedding
+    matrices (block weights are scan-stacked >2-D and were never deployable)."""
+    names = {getattr(p, "key", None) for p in path}
+    return hasattr(leaf, "ndim") and leaf.ndim == 2 and \
+        jnp.issubdtype(leaf.dtype, jnp.floating) and \
+        bool({"embed", "unembed"} & names)
+
+
+def deploy_fused(params, *, ber: float, protect: str, n_group: int,
+                 index: int, key, inject_mode: str, field: str):
+    """Fused path: align -> pack; weights STAY packed. Static faults are
+    injected into the image; dynamic faults ride in via the ``_cim`` runtime
+    (per-read seeds + thresholds consumed by the model's read hooks)."""
+    cfg = cim_lib.CIMConfig(n_group=n_group, index=index, protect=protect)
+    stores, _ = cim_lib.deploy_pytree(params, cfg, predicate=_fused_eligible)
+    if ber > 0 and inject_mode == "static":
+        stores = cim_lib.inject_pytree(key, stores, ber, field)
+    if ber > 0 and inject_mode == "dynamic":
+        from repro.kernels.fault_inject.ops import ber_to_threshold
+        thr = ber_to_threshold(ber)
+        zero = jnp.uint32(0)
+        stores["_cim"] = {
+            "seeds": cim_lib.plane_seeds(jax.random.fold_in(key, 99)),
+            "thr_man": thr if field in ("full", "mantissa") else zero,
+            "thr_meta": thr if field in ("full", "exponent_sign") else zero,
+        }
+    return stores
+
+
+def _fused_report(stores):
+    n_stores, packed_bytes, fp16_bytes = 0, 0, 0
+    corrected = uncorrectable = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            stores, is_leaf=cim_lib._is_store)[0]:
+        if cim_lib._is_store(leaf):
+            n_stores += 1
+            packed_bytes += leaf.stored_bytes
+            fp16_bytes += 2 * leaf.shape[0] * leaf.shape[1]
+            st = cim_lib.store_stats(leaf)
+            corrected += int(st["corrected"])
+            uncorrectable += int(st["uncorrectable"])
+    print(f"CIM fused serve: {n_stores} weight matrices stay packed "
+          f"({packed_bytes / 1e6:.2f} MB image vs {fp16_bytes / 1e6:.2f} MB "
+          f"decoded fp16 — never materialized); "
+          f"corrected={corrected} uncorrectable={uncorrectable}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -51,9 +112,20 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cim", action="store_true", help="serve via CIM image")
     ap.add_argument("--ber", type=float, default=0.0)
-    ap.add_argument("--protect", default="one4n", choices=["one4n", "none"])
+    ap.add_argument("--protect", default="one4n",
+                    choices=["one4n", "per_weight", "none"])
     ap.add_argument("--n-group", type=int, default=8)
     ap.add_argument("--index", type=int, default=2)
+    ap.add_argument("--serve-path", default=None, choices=["fused", "hbm"],
+                    help="fused: decode-on-read kernels off the packed image; "
+                         "hbm: decode once to fp16 copies "
+                         "(default: ReliabilityConfig.serve_path)")
+    ap.add_argument("--inject", default="static",
+                    choices=["static", "dynamic"],
+                    help="static: flip the image once; dynamic: fresh "
+                         "in-kernel faults on every weight read (fused only)")
+    ap.add_argument("--field", default="full",
+                    choices=["full", "mantissa", "exponent_sign"])
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -63,14 +135,23 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_lm(key, cfg)
 
+    serve_path = args.serve_path or ReliabilityConfig().serve_path
     stats = None
     if args.cim or args.ber > 0:
-        params, stats = deploy(params, ber=args.ber, protect=args.protect,
-                               n_group=args.n_group, index=args.index,
-                               key=jax.random.fold_in(key, 1))
-        print(f"CIM deploy: protect={args.protect} ber={args.ber:.1e} "
-              f"corrected={int(stats['corrected'])} "
-              f"uncorrectable={int(stats['uncorrectable'])}")
+        if serve_path == "fused":
+            params = deploy_fused(
+                params, ber=args.ber, protect=args.protect,
+                n_group=args.n_group, index=args.index,
+                key=jax.random.fold_in(key, 1), inject_mode=args.inject,
+                field=args.field)
+            _fused_report(params)
+        else:
+            params, stats = deploy(params, ber=args.ber, protect=args.protect,
+                                   n_group=args.n_group, index=args.index,
+                                   key=jax.random.fold_in(key, 1))
+            print(f"CIM deploy (hbm): protect={args.protect} "
+                  f"ber={args.ber:.1e} corrected={int(stats['corrected'])} "
+                  f"uncorrectable={int(stats['uncorrectable'])}")
 
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)
     prompts = data.batch(0)["tokens"]

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import cim as cim_lib
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import mlp as mlp_lib
@@ -152,16 +153,71 @@ def _prefill_block_cache(p, cfg: ModelConfig, kind: str, h, positions):
     return {"k": k, "v": v}
 
 
-def _embed_inputs(params, cfg: ModelConfig, batch: Dict):
+# distinct per-leaf salts: each CIM-deployed matrix is its own macro and must
+# draw independent fault streams (mirrors inject_pytree's per-store key split)
+_CIM_LEAF_SALTS = {"embed": 0x1001, "unembed": 0x2002}
+
+
+def _cim_read_state(params, pos, leaf):
+    """(per-plane seeds, thr_man, thr_meta) for CIM decode-on-read leaves.
+
+    ``params['_cim']`` (optional, serving only) carries the dynamic-injection
+    runtime: base counter-PRNG plane seeds plus per-field Bernoulli
+    thresholds. Seeds are folded with a per-``leaf`` salt (so embed/unembed
+    faults are uncorrelated) and with the read index ``pos`` (so every
+    prefill/decode step draws fresh soft errors) — per-read dynamic injection
+    straight off the packed SRAM image. Absent, reads are static (the image
+    serves whatever faults `cim.inject` left in it)."""
+    rt = params.get("_cim") if isinstance(params, dict) else None
+    if rt is None:
+        return None, 0, 0
+    salt = _CIM_LEAF_SALTS[leaf]
+    seeds = {k: cim_lib.fold_seed(cim_lib.fold_seed(v, salt), pos)
+             for k, v in rt["seeds"].items()}
+    return seeds, rt["thr_man"], rt["thr_meta"]
+
+
+def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0):
+    """Token embedding gather; a CIMStore leaf is decoded row-by-row on read
+    (only the gathered rows' codewords — no materialized fp16 table)."""
+    dt = cfg.cdtype()
+    emb = params["embed"]
+    if isinstance(emb, cim_lib.CIMStore):
+        seeds, tm, tt = _cim_read_state(params, pos, "embed")
+        rows = cim_lib.read_rows(emb, tokens, seeds=seeds, thr_man=tm,
+                                 thr_meta=tt)
+        return rows.astype(dt)
+    return shard(emb.astype(dt), "vocab", None)[tokens]
+
+
+def _unembed_logits(params, x, pos=0):
+    """Final projection; a CIMStore leaf routes through the fused
+    decode-on-read Pallas kernel (`kernels/cim_read`) — SECDED decode + FP16
+    reconstruction + matmul in VMEM, no decoded weight matrix in HBM."""
+    w_un = params["unembed"]
+    if isinstance(w_un, cim_lib.CIMStore):
+        from repro.kernels.cim_read import ops as cr_ops
+        seeds, tm, tt = _cim_read_state(params, pos, "unembed")
+        scalars = cr_ops.make_scalars(seeds, tm, tt) if seeds is not None \
+            else None
+        return cr_ops.cim_linear_store(x, w_un, scalars=scalars)
+    # FSDP: gather the (small, bf16) weight rather than partial-summing the
+    # contraction over its "data"-sharded D axis — the latter all-reduces the
+    # full fp32 logits (13 GB/step/device measured; the gather is 0.2 GB).
+    w = shard(w_un.astype(x.dtype), None, "vocab")
+    return x @ w
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict, pos=0):
     dt = cfg.cdtype()
     if cfg.modality == "vision_stub" and "vision_embeds" in batch:
-        tok = shard(params["embed"].astype(dt), "vocab", None)[batch["tokens"]]
+        tok = _embed_lookup(params, cfg, batch["tokens"], pos)
         vis = batch["vision_embeds"].astype(dt)
         x = jnp.concatenate([vis, tok], axis=1)
     elif cfg.modality == "audio_stub" and "embeds" in batch:
         x = batch["embeds"].astype(dt)
     else:
-        x = shard(params["embed"].astype(dt), "vocab", None)[batch["tokens"]]
+        x = _embed_lookup(params, cfg, batch["tokens"], pos)
     return shard(x, "batch", "seq", None)
 
 
@@ -210,11 +266,7 @@ def forward(params, cfg: ModelConfig, batch: Dict, remat: bool = True,
     # per device measured at olmo-1b train_4k vs a 0.27 GB bf16 gather here).
     x = shard(x, "batch", None, None)
     x = apply_norm(cfg.norm_type, params["final_norm"], x)
-    # FSDP: gather the (small, bf16) weight rather than partial-summing the
-    # contraction over its "data"-sharded D axis — the latter all-reduces the
-    # full fp32 logits (13 GB/step/device measured; the gather is 0.2 GB).
-    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
-    logits = x @ w_un
+    logits = _unembed_logits(params, x)
     return shard(logits, "batch", None, "vocab"), aux, None
 
 
@@ -264,8 +316,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict, unroll: bool = False):
         tail_caches.append(c)
 
     x = apply_norm(cfg.norm_type, params["final_norm"], x[:, -1:])
-    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
-    logits = (x @ w_un)[:, 0]
+    logits = _unembed_logits(params, x)[:, 0]
     return logits, {"groups": group_caches, "tail": tuple(tail_caches),
                     "pos": jnp.asarray(s, jnp.int32)}
 
@@ -341,7 +392,10 @@ def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
     if pos is None:
         pos = caches["pos"]
     dt = cfg.cdtype()
-    x = params["embed"].astype(dt)[tokens]
+    if isinstance(params["embed"], cim_lib.CIMStore):
+        x = _embed_lookup(params, cfg, tokens, pos=pos)
+    else:
+        x = params["embed"].astype(dt)[tokens]
     x = shard(x, "batch", None, None)
 
     new_group_caches = None
@@ -377,7 +431,6 @@ def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
         new_tail.append(c)
 
     x = apply_norm(cfg.norm_type, params["final_norm"], x)
-    w_un = shard(params["unembed"].astype(x.dtype), None, "vocab")
-    logits = (x @ w_un)[:, 0]
+    logits = _unembed_logits(params, x, pos=pos)[:, 0]
     return logits, {"groups": new_group_caches, "tail": tuple(new_tail),
                     "pos": pos + 1}

@@ -26,7 +26,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import fault as fault_lib
-from repro.core.ecc import residual_ber_after_secded
 from repro.distributed import checkpoint as ckpt_lib
 from repro.distributed.elastic import StragglerWatchdog
 from repro.training import steps as steps_lib
@@ -37,11 +36,9 @@ def make_fault_schedule(run: RunConfig):
     rel = run.reliability
     if rel.mode != "cim" or rel.ber <= 0 or rel.inject != "dynamic":
         return None
-    codec = rel.cim_cfg.codec
-    if rel.protect == "one4n":
-        exp_ber = residual_ber_after_secded(rel.ber, codec.code.n)
-    else:
-        exp_ber = rel.ber
+    # post-ECC residual rate of the ACTIVE codec (closed form; derives the
+    # codeword length from the configured n_group/row_weights)
+    exp_ber = rel.residual_exp_ber
 
     def corrupt(params, key):
         k1, k2 = jax.random.split(key)

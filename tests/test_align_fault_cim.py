@@ -153,8 +153,8 @@ def test_cim_single_error_per_segment_fully_corrected():
     w = _rand_w(jax.random.PRNGKey(6), 32, 16)
     w_al, _ = align.align_matrix(w, align.AlignmentConfig())
     store = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
-    cw = store.codewords
-    cw = cw.at[..., 3].set(1 - cw[..., 3])  # one flip in every segment
+    cw = store.codewords                     # packed uint32 [B, G, seg, W]
+    cw = cw.at[..., 0].set(cw[..., 0] ^ jnp.uint32(1 << 3))  # 1 flip/segment
     store_f = cim.CIMStore(store.man, store.sign, store.exp, cw, store.shape, store.cfg)
     out, stats = cim.read(store_f)
     assert (np.asarray(out) == np.asarray(w_al, np.float32)).all()
@@ -166,7 +166,7 @@ def test_cim_protection_beats_unprotected():
     near-exact while unprotected weights blow up."""
     w = _rand_w(jax.random.PRNGKey(8), 128, 64)
     w_al, _ = align.align_matrix(w, align.AlignmentConfig())
-    key = jax.random.PRNGKey(9)
+    key = jax.random.PRNGKey(0)
     errs = {}
     for protect in ("one4n", "none"):
         store = cim.pack(w_al, cim.CIMConfig(protect=protect))
@@ -205,11 +205,14 @@ def test_cim_deploy_pytree_and_stats():
 def test_cim_store_is_pytree():
     w = _rand_w(jax.random.PRNGKey(0), 16, 16)
     w_al, _ = align.align_matrix(w, align.AlignmentConfig())
+    # protected: the ONLY exponent/sign copy lives in the codeword plane
     store = cim.pack(w_al, cim.CIMConfig())
-    leaves = jax.tree_util.tree_leaves(store)
-    assert len(leaves) == 4
+    assert len(jax.tree_util.tree_leaves(store)) == 2      # man + codewords
     mapped = jax.tree_util.tree_map(lambda x: x, store)
     assert isinstance(mapped, cim.CIMStore)
+    # unprotected: mantissa + packed sign + exponent planes
+    raw = cim.pack(w_al, cim.CIMConfig(protect="none"))
+    assert len(jax.tree_util.tree_leaves(raw)) == 3
 
 
 def test_cim_per_weight_traditional_mode():
@@ -221,16 +224,17 @@ def test_cim_per_weight_traditional_mode():
     store = cim.pack(w16, cim.CIMConfig(protect="per_weight"))
     out, stats = cim.read(store)
     assert (np.asarray(out) == np.asarray(w16)).all()
-    # flip one bit in every codeword -> fully corrected
-    cw = store.codewords.at[..., 4].set(1 - store.codewords[..., 4])
+    # flip one bit in every (uint16-packed) codeword -> fully corrected
+    cw = store.codewords ^ jnp.uint16(1 << 4)
     out2, st2 = cim.read(cim.CIMStore(store.man, store.sign, store.exp, cw,
                                       store.shape, store.cfg))
     assert (np.asarray(out2) == np.asarray(w16)).all()
     assert int(st2["corrected"]) == 64 * 48
-    # 40x check-bit ratio vs One4N (Table III)
+    # 40x check-bit ratio vs One4N (Table III), from logical stored bits
     w_al, _ = align.align_matrix(w, align.AlignmentConfig())
     s_pw = cim.pack(w_al, cim.CIMConfig(protect="per_weight"))
     s_o4 = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
-    pw_check = s_pw.codewords.size - 64 * 48 * 6
-    o4_check = s_o4.codewords.size - (64 // 8 * 3) * (5 * 16 + 8 * 16)
+    pw_check = s_pw.codewords.size * (s_pw.cfg.pw_code.n - 6)
+    n_blocks = int(np.prod(s_o4.codewords.shape[:2]))
+    o4_check = n_blocks * s_o4.cfg.codec.redundant_bits_per_block
     assert pw_check / o4_check == 40.0

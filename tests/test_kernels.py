@@ -84,6 +84,24 @@ def test_cim_linear_wrapper():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("m,k,n", [(5, 72, 40), (3, 512, 130), (130, 520, 128)])
+def test_cim_linear_pads_instead_of_falling_back(m, k, n):
+    """Ragged M/K/N must be tile-padded, not silently dequantized — the
+    used_kernel signal proves the Pallas path ran."""
+    (man, exp), w_al = _packed(jax.random.PRNGKey(m + k), k, n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    out, info = bfp_ops.cim_linear(x, man, exp, with_info=True)
+    assert info["used_kernel"]
+    ref = x @ jnp.asarray(w_al, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    out2, info2 = bfp_ops.cim_linear(x, man, exp, use_kernel=False,
+                                     with_info=True)
+    assert not info2["used_kernel"]
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------- fault inject
 
 @pytest.mark.parametrize("shape", [(256, 256), (512, 384), (128, 1024)])

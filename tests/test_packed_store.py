@@ -1,0 +1,285 @@
+"""Equivalence suite for the word-packed CIM store and decode-on-read path.
+
+Contracts under test:
+
+* packed SECDED / One4N encode+decode are bit-exact with the per-bit oracle
+  codecs across codec geometries, including check-bit flips, overall-parity
+  flips and uncorrectable (>=2 flip) rows;
+* ``pack -> inject -> read`` on the packed store equals the per-bit reference
+  decode (``cim.read_reference``) bit-for-bit — weights AND corrected /
+  uncorrectable stats — across (n_group, row_weights, protect, field);
+* the fused ``cim_read`` kernel (static and per-read dynamic) equals
+  decode-then-matmul, and its in-kernel dynamic flip streams equal
+  ``cim.inject`` with the same key;
+* packed planes store >= 4x fewer bytes than the per-bit representation, and
+  the ``stored_bits`` accounting counts protected sign bits exactly once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import align, bitpack, cim
+from repro.core.ecc import One4NRowCodec, SecdedCode, residual_ber_after_secded
+from repro.kernels.cim_read import ops as cr_ops
+from repro.kernels.cim_read.ref import cim_read_ref
+from repro.kernels.fault_inject.ops import ber_to_threshold
+
+
+def _store(k, j, protect, n=8, rw=16, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, j)) * 0.1
+    if protect == "per_weight":
+        w16 = jnp.asarray(jnp.asarray(w, jnp.float16), jnp.float32)
+        return cim.pack(w16, cim.CIMConfig(n_group=n, row_weights=rw,
+                                           protect=protect)), w16
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig(n_group=n, index=2))
+    return cim.pack(w_al, cim.CIMConfig(n_group=n, row_weights=rw,
+                                        protect=protect)), w_al
+
+
+def _assert_same(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert ((a == b) | (np.isnan(a) & np.isnan(b))).all()
+
+
+# ---------------------------------------------------------------- ecc packed
+
+@pytest.mark.parametrize("d", [6, 10, 96, 104, 160])
+def test_secded_packed_matches_perbit(d):
+    """Packed encode/decode == per-bit oracle under 0..3 random flips."""
+    rng = np.random.default_rng(d)
+    code = SecdedCode(d)
+    data = jnp.asarray(rng.integers(0, 2, (32, d)), jnp.uint8)
+    cw_bits = code.encode(data)
+    cw_packed = code.encode_packed(bitpack.pack_bits_words(data, d))
+    assert (np.asarray(bitpack.unpack_words(cw_packed, code.n))
+            == np.asarray(cw_bits)).all()
+    flips = np.zeros((32, code.n), np.uint8)
+    for row in range(32):
+        nf = rng.integers(0, 4)
+        flips[row, rng.choice(code.n, size=nf, replace=False)] = 1
+    d1, s1 = code.decode(cw_bits ^ jnp.asarray(flips))
+    d2, s2 = code.decode_packed(
+        cw_packed ^ bitpack.pack_bits_words(jnp.asarray(flips), code.n))
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert (np.asarray(d1) == np.asarray(bitpack.unpack_words(d2, d))).all()
+
+
+@pytest.mark.parametrize("n,rw", [(8, 16), (4, 16), (16, 16), (8, 8), (8, 24)])
+def test_one4n_packed_matches_perbit(n, rw):
+    """Row-codec packed path == per-bit across geometries, with a data-bit
+    flip in segment 0 and an overall-parity flip in the last segment."""
+    rng = np.random.default_rng(n * 100 + rw)
+    codec = One4NRowCodec(n_group=n, row_weights=rw, sign_bits_per_row=rw)
+    exp_row = jnp.asarray(rng.integers(0, 32, (3, 2, rw)), jnp.uint8)
+    signs = jnp.asarray(rng.integers(0, 2, (3, 2, n, rw)), jnp.uint8)
+    cw_bits = codec.encode(exp_row, signs)
+    cw_packed = codec.encode_packed(exp_row, codec.pack_signs(signs))
+    assert (np.asarray(bitpack.unpack_words(cw_packed, codec.code.n))
+            == np.asarray(cw_bits)).all()
+    flip = np.zeros(cw_bits.shape, np.uint8)
+    flip[..., 0, 5] = 1
+    flip[..., codec.n_segments - 1, codec.code.n - 1] = 1
+    e1, s1, st1 = codec.decode(cw_bits ^ jnp.asarray(flip))
+    e2, sw2, st2 = codec.decode_packed(
+        cw_packed ^ bitpack.pack_bits_words(jnp.asarray(flip), codec.code.n))
+    assert (np.asarray(st1) == np.asarray(st2)).all()
+    assert (np.asarray(e1) == np.asarray(e2)).all()
+    assert (np.asarray(s1) == np.asarray(codec.unpack_signs(sw2))).all()
+
+
+# ------------------------------------------------- store-level equivalence
+
+@pytest.mark.parametrize("n,rw", [(8, 16), (4, 16), (16, 16), (8, 8)])
+@pytest.mark.parametrize("protect", ["one4n", "none", "per_weight"])
+def test_pack_read_roundtrip_geometries(protect, n, rw):
+    store, w_ref = _store(4 * n, 3 * rw, protect, n=n, rw=rw)
+    out, stats = cim.read(store)
+    assert (np.asarray(out) == np.asarray(w_ref, np.float32)).all()
+    assert int(stats["uncorrectable"]) == 0
+
+
+@pytest.mark.parametrize("field", ["full", "mantissa", "exponent_sign"])
+@pytest.mark.parametrize("protect", ["one4n", "none", "per_weight"])
+def test_packed_inject_read_matches_perbit_oracle(protect, field):
+    """The headline contract: packed pack->inject->read is bit-exact against
+    the per-bit reference decode, including ECC stats, at BERs high enough to
+    produce corrected AND uncorrectable rows (check-bit flips included —
+    every codeword bit is a target cell)."""
+    store, _ = _store(64, 48, protect)
+    saw_corrected = saw_uncorrectable = False
+    for i, ber in enumerate((1e-3, 1e-2, 0.05)):
+        faulty = cim.inject(jax.random.PRNGKey(i), store, ber, field)
+        a, sa = cim.read(faulty)
+        b, sb = cim.read_reference(faulty)
+        _assert_same(a, b)
+        assert int(sa["corrected"]) == int(sb["corrected"])
+        assert int(sa["uncorrectable"]) == int(sb["uncorrectable"])
+        saw_corrected |= int(sa["corrected"]) > 0
+        saw_uncorrectable |= int(sa["uncorrectable"]) > 0
+    if protect != "none" and field != "mantissa":
+        assert saw_corrected and saw_uncorrectable
+
+
+@pytest.mark.parametrize("n,rw", [(8, 16), (4, 16), (8, 8)])
+def test_packed_inject_read_matches_oracle_geometries(n, rw):
+    store, _ = _store(4 * n, 3 * rw, "one4n", n=n, rw=rw, seed=3)
+    faulty = cim.inject(jax.random.PRNGKey(1), store, 0.02, "full")
+    a, sa = cim.read(faulty)
+    b, sb = cim.read_reference(faulty)
+    _assert_same(a, b)
+    assert int(sa["corrected"]) == int(sb["corrected"])
+    assert int(sa["uncorrectable"]) == int(sb["uncorrectable"])
+
+
+def test_inject_rate_and_confinement_on_packed_planes():
+    """Flip rate on codeword words matches Bernoulli(ber) over STORED bits
+    only (padding lanes never flip), and mantissa-field injection leaves the
+    codeword plane untouched."""
+    store, _ = _store(256, 256, "one4n", seed=5)
+    ber = 0.02
+    faulty = cim.inject(jax.random.PRNGKey(2), store, ber, "exponent_sign")
+    xor = np.asarray(faulty.codewords) ^ np.asarray(store.codewords)
+    masks = store.cfg.codec.code.code_word_masks
+    assert (xor & ~masks).max() == 0, "padding lanes must never flip"
+    n_bits = int(np.prod(store.codewords.shape[:-1])) * store.cfg.codec.code.n
+    rate = np.unpackbits(xor.view(np.uint8)).sum() / n_bits
+    assert abs(rate - ber) < 5 * np.sqrt(ber * (1 - ber) / n_bits)
+    assert (np.asarray(faulty.man) == np.asarray(store.man)).all()
+    man_only = cim.inject(jax.random.PRNGKey(2), store, ber, "mantissa")
+    assert (np.asarray(man_only.codewords) == np.asarray(store.codewords)).all()
+    mxor = np.asarray(man_only.man) ^ np.asarray(store.man)
+    assert (mxor & ~np.uint16(0x3FF)).max() == 0
+
+
+def test_stored_bits_counts_protected_signs_once():
+    """Regression (satellite): with protect='one4n' sign bits live inside the
+    codewords ONLY — the overhead accounting must not add a sign plane."""
+    store, _ = _store(64, 48, "one4n")
+    b, g = 8, 3
+    codec = store.cfg.codec
+    assert store.stored_bits == 64 * 48 * 10 + b * g * codec.n_segments * codec.code.n
+    raw, _ = _store(64, 48, "none")
+    assert raw.stored_bits == 64 * 48 * 10 + 64 * 48 + b * 48 * 5
+    # One4N overhead over unprotected = check bits only (paper Table III)
+    assert store.stored_bits - (64 * 48 * 10 + 64 * 48 + b * 48 * 5) \
+        == b * g * codec.redundant_bits_per_block
+
+
+def test_packed_codeword_plane_bytes_at_least_4x_smaller():
+    """Acceptance: >= 4x fewer bytes than one uint8 per codeword bit."""
+    store, _ = _store(256, 256, "one4n")
+    packed = store.codewords.size * store.codewords.dtype.itemsize
+    perbit = int(np.prod(store.codewords.shape[:-1])) * store.cfg.codec.code.n
+    assert perbit >= 4 * packed
+    pw, _ = _store(64, 48, "per_weight")
+    assert pw.cfg.pw_code.n >= 4 * pw.codewords.dtype.itemsize
+
+
+def test_read_rows_matches_full_read():
+    """Embedding-path row gather == rows of the full decode, static and
+    dynamic (same counter streams as inject with the same key)."""
+    idx = jnp.asarray([[0, 7, 13], [63, 32, 1]])
+    key = jax.random.PRNGKey(11)
+    thr = ber_to_threshold(0.01)
+    for protect in ("one4n", "none", "per_weight"):
+        store, _ = _store(64, 48, protect)
+        rows = cim.read_rows(store, idx)
+        full, _ = cim.read(store)
+        _assert_same(rows, np.asarray(full)[np.asarray(idx)])
+        rows_d = cim.read_rows(store, idx, seeds=cim.plane_seeds(key),
+                               thr_man=thr, thr_meta=thr)
+        full_d, _ = cim.read(cim.inject(key, store, 0.01, "full"))
+        _assert_same(rows_d, np.asarray(full_d)[np.asarray(idx)])
+
+
+def test_residual_ber_default_derives_from_codec():
+    assert residual_ber_after_secded(1e-3) == \
+        residual_ber_after_secded(1e-3, One4NRowCodec().code.n)
+    custom = One4NRowCodec(n_group=4)
+    assert residual_ber_after_secded(1e-3, codec=custom) == \
+        residual_ber_after_secded(1e-3, custom.code.n)
+    assert custom.code.n != One4NRowCodec().code.n
+
+
+# ------------------------------------------------- fused decode-on-read
+
+@pytest.mark.parametrize("shape", [(512, 128), (128, 256), (96, 48), (40, 24)])
+@pytest.mark.parametrize("protect", ["one4n", "none"])
+def test_fused_kernel_static_matches_reference(protect, shape):
+    k, j = shape
+    store, _ = _store(k, j, protect, seed=k + j)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, k))
+    out, info = cr_ops.cim_linear_store(x, store, with_info=True)
+    assert info["used_kernel"], "padding must keep the kernel path live"
+    ref, _ = cim_read_ref(x, store)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_kernel_dynamic_matches_injected_reference():
+    """In-kernel per-read flips == inject_with_seeds -> decode -> matmul."""
+    seeds = cim.plane_seeds(jax.random.PRNGKey(3))
+    thr = ber_to_threshold(0.003)
+    sc = cr_ops.make_scalars(seeds, thr, thr)
+    for protect in ("one4n", "none"):
+        store, _ = _store(512, 128, protect, seed=9)
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, 512))
+        out = cr_ops.cim_linear_store(x, store, scalars=sc)
+        ref, _ = cim_read_ref(x, store, seeds=seeds, thr_man=thr, thr_meta=thr)
+        # corrupted exponents make |w| huge; tolerate fp32 summation-order
+        # noise relative to the row scale (weights themselves are checked
+        # bit-exact via test_fused_dynamic_equals_static_injected_same_key)
+        scale = float(np.abs(np.asarray(ref)).max())
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4 + 1e-6 * scale)
+
+
+def test_fused_dynamic_equals_static_injected_same_key():
+    """The serving contract: inject(key) into the image then serve statically
+    == serve dynamically with plane_seeds(key) — identical PRNG streams."""
+    key = jax.random.PRNGKey(7)
+    thr = ber_to_threshold(0.003)
+    store, _ = _store(512, 128, "one4n", seed=2)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 512))
+    a = cr_ops.cim_linear_store(x, cim.inject(key, store, 0.003, "full"))
+    b = cr_ops.cim_linear_store(
+        x, store, scalars=cr_ops.make_scalars(cim.plane_seeds(key), thr, thr))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_per_weight_falls_back_with_signal():
+    store, _ = _store(64, 48, "per_weight")
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    out, info = cr_ops.cim_linear_store(x, store, with_info=True)
+    assert not info["used_kernel"]
+    ref, _ = cim_read_ref(x, store)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lm_serves_from_packed_store():
+    """End-to-end fused serving: CIMStore embed/unembed leaves drive prefill
+    and decode, matching the decoded-weights (HBM) baseline exactly when the
+    image is clean."""
+    from repro.configs import get_config
+    from repro.launch.serve import deploy_fused
+    from repro.models import lm
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    stores = deploy_fused(params, ber=0.0, protect="one4n", n_group=8,
+                          index=2, key=key, inject_mode="static", field="full")
+    # baseline: decode the stores back to fp16 weights, serve those
+    decoded, _ = cim.read_pytree(stores)
+    tokens = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]])
+    lf, cf = lm.prefill(stores, cfg, {"tokens": tokens})
+    lb, cb = lm.prefill(decoded, cfg, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lb),
+                               rtol=2e-5, atol=2e-5)
+    tok = jnp.argmax(lf, -1)[:, None]
+    lf2, _ = lm.decode(stores, cfg, cf, tok)
+    lb2, _ = lm.decode(decoded, cfg, cb, tok)
+    np.testing.assert_allclose(np.asarray(lf2), np.asarray(lb2),
+                               rtol=2e-5, atol=2e-5)
