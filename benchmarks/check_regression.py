@@ -1,0 +1,188 @@
+"""Bench regression gate: compare fresh ``--json`` bench artifacts against a
+committed baseline (``benchmarks/baselines/BENCH_baseline.json``).
+
+Two metric classes:
+
+* **ratio metrics** (packed-vs-legacy speedup, loop-vs-vectorized speedup,
+  decode-on-read vs HBM tok/s ratio) are machine-relative — they gate at the
+  given ``--tolerance`` (fail if fresh < baseline / tol);
+* **absolute wall-clock metrics** (seconds per cell, wall seconds) vary with
+  runner hardware, so they gate at ``2 x tolerance`` (fail if fresh >
+  baseline * 2 * tol) — a coarse guard against order-of-magnitude
+  regressions that ratio metrics cannot see (e.g. both arms slowing down).
+
+Usage (CI smoke, after the benches wrote their artifacts):
+
+  PYTHONPATH=src:. python benchmarks/check_regression.py \\
+      --baseline benchmarks/baselines/BENCH_baseline.json \\
+      --cim-store artifacts/cim_store_bench.json \\
+      --sweep artifacts/sweep_bench.json \\
+      --tolerance 1.5 --report artifacts/bench_regression_report.json
+
+Refresh the committed baseline after an intentional perf change:
+
+  ... check_regression.py --cim-store ... --sweep ... \\
+      --write-baseline benchmarks/baselines/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+LOWER = "lower_is_better"     # absolute wall-clock
+HIGHER = "higher_is_better"   # machine-relative speedup ratio
+
+
+def _flatten_cim_store(d: dict) -> dict:
+    out = {}
+    for protect, g in (d.get("grid") or {}).items():
+        if not isinstance(g, dict) or "speedup" not in g:
+            continue
+        out[f"cim_store.inject_read.{protect}.packed_s_per_cell"] = \
+            (LOWER, g["packed_s_per_cell"])
+        out[f"cim_store.inject_read.{protect}.speedup"] = \
+            (HIGHER, g["speedup"])
+    serving = d.get("serving") or {}
+    if serving.get("hbm_remat_tok_s"):
+        out["cim_store.serve.fused_vs_hbm_ratio"] = \
+            (HIGHER, serving["decode_on_read_tok_s"]
+             / serving["hbm_remat_tok_s"])
+    return out
+
+
+def _flatten_sweep(d: dict) -> dict:
+    out = {}
+    for grid in ("fields", "protection"):
+        g = d.get(grid) or {}
+        if "speedup" not in g:
+            continue
+        out[f"sweep.{grid}.vectorized_wall_s"] = \
+            (LOWER, g["vectorized_wall_s"])
+        out[f"sweep.{grid}.speedup"] = (HIGHER, g["speedup"])
+    return out
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect_metrics(args):
+    """-> (metrics, quick): flattened metrics plus the artifacts' BENCH_QUICK
+    provenance (grid sizes differ between quick and full runs, so baselines
+    are only comparable against artifacts of the same kind)."""
+    metrics, quick = {}, set()
+    for path, flatten in ((args.cim_store, _flatten_cim_store),
+                          (args.sweep, _flatten_sweep)):
+        if path:
+            d = _load(path)
+            metrics.update(flatten(d))
+            quick.add(bool(d.get("quick")))
+    if len(quick) > 1:
+        raise SystemExit("check_regression: mixed quick/full artifacts — "
+                         "run both benches with the same BENCH_QUICK setting")
+    return metrics, (quick.pop() if quick else None)
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float):
+    """-> (failures, lines). A fresh metric absent from the baseline is
+    reported but never fails (forward compatibility for new benches); a
+    BASELINE metric missing from the fresh artifacts fails — a bench that
+    silently stops emitting a gated number must not turn the gate green."""
+    failures, lines = [], []
+    base_metrics = baseline.get("metrics", {})
+    for name in sorted(set(base_metrics) - set(fresh)):
+        lines.append(f"  FAIL {name}: in baseline but missing from the "
+                     f"fresh artifacts")
+        failures.append(name)
+    for name, (direction, value) in sorted(fresh.items()):
+        base = base_metrics.get(name)
+        if base is None:
+            lines.append(f"  NEW  {name} = {value:.4g} (no baseline)")
+            continue
+        bval = base["value"]
+        if direction == HIGHER:
+            bound = bval / tolerance
+            ok = value >= bound
+            verdict = f">= {bound:.4g} (baseline {bval:.4g} / tol)"
+        else:
+            bound = bval * 2 * tolerance
+            ok = value <= bound
+            verdict = f"<= {bound:.4g} (baseline {bval:.4g} * 2*tol)"
+        tag = "ok  " if ok else "FAIL"
+        lines.append(f"  {tag} {name} = {value:.4g}  want {verdict}")
+        if not ok:
+            failures.append(name)
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_baseline.json")
+    ap.add_argument("--cim-store", default=None,
+                    help="fresh cim_store_bench.py --json artifact")
+    ap.add_argument("--sweep", default=None,
+                    help="fresh sweep_bench.py --json artifact")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="ratio metrics fail below baseline/tol; absolute "
+                         "wall-clock fails above baseline*2*tol")
+    ap.add_argument("--report", default=None,
+                    help="write the comparison as a JSON artifact")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write the fresh metrics out as a new baseline "
+                         "instead of comparing")
+    args = ap.parse_args(argv)
+
+    fresh, quick = collect_metrics(args)
+    if not fresh:
+        print("check_regression: no artifacts given (nothing to compare)")
+        return 2
+
+    if args.write_baseline:
+        payload = {"tolerance_default": args.tolerance,
+                   "quick": quick,
+                   "metrics": {name: {"direction": direction, "value": value}
+                               for name, (direction, value)
+                               in sorted(fresh.items())}}
+        os.makedirs(os.path.dirname(args.write_baseline) or ".",
+                    exist_ok=True)
+        with open(args.write_baseline, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote baseline with {len(fresh)} metrics to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = _load(args.baseline)
+    if baseline.get("quick") is not None and quick is not None \
+            and baseline["quick"] != quick:
+        print(f"check_regression: baseline is a "
+              f"{'quick' if baseline['quick'] else 'full'}-grid run but the "
+              f"fresh artifacts are {'quick' if quick else 'full'} — grid "
+              f"sizes differ, numbers are not comparable. Refresh the "
+              f"baseline with --write-baseline under the same BENCH_QUICK.")
+        return 2
+    failures, lines = compare(baseline, fresh, args.tolerance)
+    print(f"bench regression gate (tolerance {args.tolerance}x) "
+          f"vs {args.baseline}:")
+    print("\n".join(lines))
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump({"tolerance": args.tolerance,
+                       "failures": failures,
+                       "metrics": {k: {"direction": d, "value": v}
+                                   for k, (d, v) in sorted(fresh.items())}},
+                      f, indent=2)
+        print(f"wrote {args.report}")
+    if failures:
+        print(f"REGRESSION: {len(failures)} metric(s) out of tolerance: "
+              + ", ".join(failures))
+        return 1
+    print(f"all {len(fresh)} metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

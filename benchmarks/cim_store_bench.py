@@ -259,8 +259,9 @@ def main(argv=None):
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         payload = {"size": SIZE, "bers": BERS, "trials": TRIALS,
-                   "grid": grid, "serving": serving,
-                   "packed_wins": ok, "backend": jax.default_backend()}
+                   "quick": QUICK, "grid": grid, "serving": serving,
+                   "packed_wins": ok, "backend": jax.default_backend(),
+                   "devices": len(jax.devices())}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

@@ -9,21 +9,28 @@ Pallas fault-inject route (interpret mode off-TPU).
 Rows: sweep.<grid>.{loop,vectorized}     us_per_cell, wall seconds
       sweep.<grid>.speedup               loop_wall / vectorized_wall
       sweep.<grid>.compiles_per_arm      max over arms (must be 1)
+
+Run:  PYTHONPATH=src:. python benchmarks/sweep_bench.py --json out.json
+Quick (CI smoke): BENCH_QUICK=1 ... --json artifacts/sweep_bench.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 
-from benchmarks.common import cnn_setup, emit
+from benchmarks.common import QUICK, cnn_setup, emit
 from repro.core import resilience
 from repro.core import sweep as sweep_lib
 
-BERS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2)
-FIELDS = ("sign", "exponent", "mantissa", "full")
+BERS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2) if not QUICK else (1e-4, 1e-2)
+FIELDS = ("sign", "exponent", "mantissa", "full") if not QUICK \
+    else ("exponent", "full")
 PROTECTS = ("none", "per_weight", "one4n")
-N_TRIALS = 10
+N_TRIALS = 10 if not QUICK else 4
 
 
 def _wall(fn):
@@ -41,9 +48,16 @@ def _mean_diff(a, b):
     return 0.0 if a_nan else abs(a.mean - b.mean)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the results as a JSON artifact")
+    args = ap.parse_args(argv)
+
     params, eval_fn, _ = cnn_setup()
     rows = []
+    payload = {"quick": QUICK, "backend": jax.default_backend(),
+               "bers": list(BERS), "n_trials": N_TRIALS}
 
     # Timing methodology: the engine is warmed once (it caches compiled
     # executors across calls), so its timed run is compile-free. The loop
@@ -76,6 +90,10 @@ def main():
          f"{compiles} (contract: 1):{compiles == 1}"),
         ("sweep.fields.check.loop_vec_agree", None, f"max_mean_diff={agree:.1e}"),
     ]
+    payload["fields"] = {"loop_wall_s": wall_loop,
+                         "vectorized_wall_s": wall_vec,
+                         "speedup": wall_loop / wall_vec,
+                         "compiles_per_arm": compiles}
 
     # ---------------------------------------------------- Fig. 6-style grid
     n_cells = len(PROTECTS) * len(BERS) * N_TRIALS
@@ -99,6 +117,10 @@ def main():
         ("sweep.protection.compiles_per_arm", None,
          f"{compiles} (contract: 1):{compiles == 1}"),
     ]
+    payload["protection"] = {"loop_wall_s": wall_loop,
+                             "vectorized_wall_s": wall_vec,
+                             "speedup": wall_loop / wall_vec,
+                             "compiles_per_arm": compiles}
 
     # ------------------------------- kernel-backed route (interpret off-TPU)
     key = jax.random.PRNGKey(23)
@@ -109,7 +131,14 @@ def main():
                  f"wall_s={wall_pal:.2f};backend={engine_k.backend};"
                  f"interpret={engine_k.interpret};"
                  f"acc@1e-2={res[-1].mean:.3f}"))
+    payload["pallas_route_wall_s"] = wall_pal
     emit(rows)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
     return rows
 
 

@@ -485,6 +485,159 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
     return jnp.asarray(w[..., :store.shape[1]], jnp.float32)
 
 
+def _plane_dict(store: CIMStore) -> dict:
+    """The store's populated planes by name (sharding / shard_map plumbing)."""
+    planes = {"man": store.man, "sign": store.sign, "exp": store.exp,
+              "cw": store.codewords}
+    return {k: v for k, v in planes.items() if v is not None}
+
+
+def _restore_planes(store: CIMStore, planes: dict) -> CIMStore:
+    return CIMStore(man=planes["man"], sign=planes.get("sign"),
+                    exp=planes.get("exp"), codewords=planes.get("cw"),
+                    shape=store.shape, cfg=store.cfg)
+
+
+def can_shard_store(store: CIMStore, n_shards: int, dim: str = "j") -> bool:
+    """Whether every plane splits evenly into ``n_shards`` along ``dim``.
+
+    ``dim='j'`` splits output columns in whole ``row_weights`` groups (one
+    shard ≈ one macro column group); ``dim='k'`` splits word lines in whole
+    exponent blocks (and whole 32-row sign words for ``protect='none'``).
+    """
+    if n_shards == 1:
+        return True
+    k_pad, j_pad = store.man.shape
+    cfg = store.cfg
+    if dim == "j":
+        return j_pad % (n_shards * cfg.row_weights) == 0
+    if dim == "k":
+        if k_pad % (n_shards * cfg.n_group) != 0:
+            return False
+        return store.sign is None or k_pad % (n_shards * 32) == 0
+    raise ValueError(f"dim must be 'j' or 'k', got {dim!r}")
+
+
+def store_plane_specs(store: CIMStore, axis: str = "model", dim: str = "j"):
+    """Per-plane ``PartitionSpec``s of the packed SRAM image.
+
+    Every plane carries its shard axis in the same position: dimension 1
+    (columns / column groups) for ``dim='j'``, dimension 0 (K rows, exponent
+    blocks, sign words) for ``dim='k'`` — C-order strides are unchanged, so
+    the counter-PRNG flip contract keeps holding shard by shard.
+    """
+    from jax.sharding import PartitionSpec as P
+    sdim = 0 if dim == "k" else 1
+    return {name: P(*[axis if d == sdim else None for d in range(p.ndim)])
+            for name, p in _plane_dict(store).items()}
+
+
+def store_shardings(store: CIMStore, mesh, *, axis: str = "model",
+                    dim: str = "j") -> CIMStore:
+    """A CIMStore-shaped pytree of ``NamedSharding``s for the packed planes
+    (jit ``in_shardings`` / ``device_put`` target). Planes that do not split
+    evenly fall back to replication — callers degrade cleanly on any mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n_sh = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+    if can_shard_store(store, n_sh, dim):
+        specs = store_plane_specs(store, axis, dim)
+    else:
+        specs = {name: P() for name in _plane_dict(store)}
+    named = {name: NamedSharding(mesh, spec) for name, spec in specs.items()}
+    return CIMStore(man=named["man"], sign=named.get("sign"),
+                    exp=named.get("exp"), codewords=named.get("cw"),
+                    shape=store.shape, cfg=store.cfg)
+
+
+def shard_store(store: CIMStore, mesh, *, axis: str = "model",
+                dim: str = "j") -> CIMStore:
+    """Place the packed planes on ``mesh`` with the model axis split along
+    ``dim`` (one shard ≈ one macro column group). The arrays stay global-view
+    jax arrays: ``stored_bits`` / ``stored_bytes`` / ``read_reference`` are
+    unchanged, and GSPMD partitions the pure-jnp paths automatically."""
+    return jax.device_put(store, store_shardings(store, mesh, axis=axis,
+                                                 dim=dim))
+
+
+def _global_elem(local_shape, global_shape, sdim: int, start) -> jnp.ndarray:
+    """C-order flat indices into the GLOBAL plane for a local shard block
+    whose ``sdim`` dimension starts at (traced) offset ``start``."""
+    elem = jnp.zeros(local_shape, jnp.uint32)
+    stride = 1
+    for d in reversed(range(len(global_shape))):
+        idx = jax.lax.broadcasted_iota(jnp.uint32, local_shape, d)
+        if d == sdim:
+            idx = idx + jnp.asarray(start, jnp.uint32)
+        elem = elem + idx * jnp.uint32(stride)
+        stride *= int(global_shape[d])
+    return elem
+
+
+def inject_sharded(key, store: CIMStore, ber, field: str = "full", *, mesh,
+                   axis: str = "model", dim: str = "j") -> CIMStore:
+    """``shard_map`` twin of :func:`inject` for a mesh-sharded store.
+
+    Each shard draws flips for its LOCAL plane block at the block's GLOBAL
+    C-order element indices (``axis_index * local_extent`` offset along the
+    shard dimension), so the flip streams are bit-identical to the
+    single-device image for the same key — no resharding, no all-gather.
+
+    Call under ``jit`` on hot paths: the per-bit-lane mask loop is ~100 tiny
+    ops, and eager ``shard_map`` dispatch of those across many host devices
+    is orders of magnitude slower than the compiled executable.
+    """
+    if isinstance(ber, (int, float)) and ber <= 0.0:
+        return store
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.fault_inject.ops import ber_to_threshold
+
+    cfg = store.cfg
+    n_sh = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+    assert can_shard_store(store, n_sh, dim), \
+        f"store {store.man.shape} does not split {n_sh}-way along {dim!r}"
+    thr = ber_to_threshold(ber)
+    zero = jnp.uint32(0)
+    rt = {"seeds": plane_seeds(key),
+          "thr_man": thr if field in ("full", "mantissa") else zero,
+          "thr_meta": thr if field in ("full", "exponent_sign") else zero}
+
+    planes = _plane_dict(store)
+    gshapes = {name: p.shape for name, p in planes.items()}
+    sdim = 0 if dim == "k" else 1
+    mb, eb = cfg.fmt.man_bits, cfg.fmt.exp_bits
+    valids = {"man": (1 << mb) - 1}
+    seed_of = {"man": "man", "cw": "cw", "exp": "meta", "sign": "cw"}
+    if "cw" in planes:
+        valids["cw"] = codeword_valid_masks(cfg)
+    else:
+        valids["exp"] = (1 << eb) - 1
+        k_pad = store.man.shape[0]
+        smasks = bitpack.word_masks(k_pad, store.sign.shape[0])
+        # dim='k' splits the sign word rows; divisibility by 32*n_sh (checked
+        # above) guarantees no ragged word, so the scalar mask is exact
+        valids["sign"] = np.uint32(0xFFFFFFFF) if dim == "k" and n_sh > 1 \
+            else smasks[:, None]
+
+    def local(planes_loc, rt_loc):
+        i = jax.lax.axis_index(axis)
+        out = {}
+        for name, words in planes_loc.items():
+            t = rt_loc["thr_man"] if name == "man" else rt_loc["thr_meta"]
+            elem = _global_elem(words.shape, gshapes[name], sdim,
+                                i * words.shape[sdim])
+            out[name] = _flip_gathered(words, elem,
+                                       rt_loc["seeds"][seed_of[name]], t,
+                                       valids[name])
+        return out
+
+    pspecs = store_plane_specs(store, axis, dim)
+    rt_specs = jax.tree_util.tree_map(lambda _: P(), rt)
+    flipped = shard_map(local, mesh=mesh, in_specs=(pspecs, rt_specs),
+                        out_specs=pspecs, check_rep=False)(planes, rt)
+    return _restore_planes(store, flipped)
+
+
 def _flip_gathered(words, elem, seed, threshold, valid):
     """Counter-PRNG flips on gathered cells, streams identical to
     :func:`counter_flip_words` at the same flat ``elem`` indices.

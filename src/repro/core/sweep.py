@@ -13,6 +13,10 @@ single compiled executable:
 * the **trial axis is sharded** across available devices via a 1-D
   ``("trial",)`` mesh from :mod:`repro.launch.mesh` — fault-injection trials
   are embarrassingly parallel;
+* on a 2-D ``("trial", "model")`` sweep mesh (``make_sweep_mesh``) the CIM
+  deployment itself is **column-sharded over "model"**
+  (:func:`repro.core.cim.shard_store`), composing trial parallelism with the
+  mesh-sharded SRAM image — one Fig. 6 arm spans the whole mesh;
 * the inner bit-flip step routes through the trial-batched
   :mod:`repro.kernels.fault_inject` Pallas kernel when the backend supports it
   (TPU, or interpret mode for CPU testing), with the pure-JAX
@@ -233,17 +237,34 @@ class SweepEngine:
         return self._mesh
 
     def _shard_trials(self, arr, trial_axis: int = 1):
-        """Place ``arr`` with its trial axis split across the mesh. The
-        executors' outputs then inherit trial-sharded layouts from jit."""
+        """Place ``arr`` with its trial axis split across the mesh's "trial"
+        axis (the whole mesh for the 1-D trial mesh, one axis of a 2-D
+        ``("trial", "model")`` sweep mesh). The executors' outputs then
+        inherit trial-sharded layouts from jit."""
         mesh = self.mesh
         if mesh is None:
             return arr
-        n = int(np.prod(mesh.devices.shape))
+        n = int(mesh.shape["trial"]) if "trial" in mesh.axis_names \
+            else int(np.prod(mesh.devices.shape))
         if arr.shape[trial_axis] % n != 0:
             return arr                       # ragged trial count: replicate
         spec = [None] * arr.ndim
-        spec[trial_axis] = "trial"
+        spec[trial_axis] = "trial" if "trial" in mesh.axis_names else None
         return jax.device_put(arr, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    def _shard_stores(self, stores):
+        """Model-axis placement of a CIM deployment: on a 2-D sweep mesh
+        (:func:`repro.launch.mesh.make_sweep_mesh`) every store's packed
+        planes are column-sharded over "model" — one Fig. 6 arm then spans
+        trials x macro column groups, the whole mesh. Stores that do not
+        split evenly stay replicated (``shard_store`` degrades per plane)."""
+        mesh = self.mesh
+        if mesh is None or "model" not in mesh.axis_names:
+            return stores
+        return jax.tree_util.tree_map(
+            lambda s: cim_lib.shard_store(s, mesh, axis="model", dim="j")
+            if cim_lib._is_store(s) else s,
+            stores, is_leaf=cim_lib._is_store)
 
     def _executor(self, cache_key, build: Callable):
         # Keys include id(eval_fn); the cached plane closes over eval_fn so
@@ -358,6 +379,7 @@ class SweepEngine:
             cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(),
                                       protect=protect)
             stores, _ = cim_lib.deploy_pytree(params, cfg)
+            stores = self._shard_stores(stores)
             key, rand = self._trial_randomness(key, len(plan.bers))
             plane = self._executor(
                 ("protect", protect, self.backend, id(eval_fn)),

@@ -41,12 +41,19 @@ from repro.kernels.fault_inject.kernel import hash_u32
 # jax renamed TPUCompilerParams -> CompilerParams across releases.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-# SMEM scalar layout (uint32[5]); thresholds of 0 mean "no flips".
+# SMEM scalar layout (uint32[7]); thresholds of 0 mean "no flips".
 SCALAR_THR_MAN = 0     # mantissa-field Bernoulli threshold
 SCALAR_THR_META = 1    # exponent_sign-field Bernoulli threshold
 SCALAR_SEED_MAN = 2    # mantissa-plane seed
 SCALAR_SEED_META = 3   # raw-exponent-plane seed   (protect='none')
 SCALAR_SEED_CW = 4     # codeword-plane seed (protected) / sign-plane seed
+SCALAR_OFF_K = 5       # global K-row offset of this shard's plane block
+SCALAR_OFF_J = 6       # global J-column offset of this shard's plane block
+# The offsets put the dynamic flip streams in GLOBAL store coordinates when
+# the planes are mesh-sharded (ops.cim_linear_store_sharded): each shard's
+# kernel sees only its local block, but elem indices — and therefore the
+# counter-PRNG draws — match the single-device image bit for bit. They are
+# traced SMEM values, so every shard runs the same compiled program.
 
 
 def _flip_mask(elem: jnp.ndarray, seed, threshold, positions) -> jnp.ndarray:
@@ -105,18 +112,20 @@ def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref, *,
         thr_meta = scalars_ref[SCALAR_THR_META]
         seed_man = scalars_ref[SCALAR_SEED_MAN]
         seed_cw = scalars_ref[SCALAR_SEED_CW]
+        off_k = scalars_ref[SCALAR_OFF_K]
+        off_j = scalars_ref[SCALAR_OFF_J]
         j = pl.program_id(1)
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
-            + jnp.uint32(kk * block_k)
+            + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
-            + jnp.uint32(j * block_n)
-        elem = rows * jnp.uint32(store_j) + cols     # store coordinates
+            + jnp.uint32(j * block_n) + off_j
+        elem = rows * jnp.uint32(store_j) + cols     # GLOBAL store coordinates
         man = man ^ _flip_mask(elem, seed_man, thr_man,
                                tuple(range(man_bits))).astype(man.dtype)
         b_idx = jax.lax.broadcasted_iota(jnp.uint32, (bkb, bng), 0) \
-            + jnp.uint32(kk * bkb)
+            + jnp.uint32(kk * bkb) + off_k // jnp.uint32(n_group)
         g_idx = jax.lax.broadcasted_iota(jnp.uint32, (bkb, bng), 1) \
-            + jnp.uint32(j * bng)
+            + jnp.uint32(j * bng) + off_j // jnp.uint32(rw)
         s_, w_ = codec.n_segments, codec.codeword_words
         masks = codec.code.code_word_masks
         base = (b_idx * jnp.uint32(store_g) + g_idx) * jnp.uint32(s_ * w_)
@@ -176,26 +185,28 @@ def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
         seed_man = scalars_ref[SCALAR_SEED_MAN]
         seed_meta = scalars_ref[SCALAR_SEED_META]
         seed_sign = scalars_ref[SCALAR_SEED_CW]
+        off_k = scalars_ref[SCALAR_OFF_K]
+        off_j = scalars_ref[SCALAR_OFF_J]
         j = pl.program_id(1)
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
-            + jnp.uint32(kk * block_k)
+            + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
-            + jnp.uint32(j * block_n)
+            + jnp.uint32(j * block_n) + off_j
         elem = rows * jnp.uint32(store_j) + cols
         man = man ^ _flip_mask(elem, seed_man, thr_man,
                                tuple(range(man_bits))).astype(man.dtype)
         bkb = block_k // n_group
         b_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 0) \
-            + jnp.uint32(kk * bkb)
+            + jnp.uint32(kk * bkb) + off_k // jnp.uint32(n_group)
         b_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 1) \
-            + jnp.uint32(j * block_n)
+            + jnp.uint32(j * block_n) + off_j
         e_elem = b_rows * jnp.uint32(store_j) + b_cols
         e_block = e_block ^ _flip_mask(e_elem, seed_meta, thr_meta,
                                        tuple(range(exp_bits))).astype(e_block.dtype)
         w_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 0) \
-            + jnp.uint32(kk * bkw)
+            + jnp.uint32(kk * bkw) + off_k // jnp.uint32(32)
         w_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 1) \
-            + jnp.uint32(j * block_n)
+            + jnp.uint32(j * block_n) + off_j
         s_elem = w_rows * jnp.uint32(store_j) + w_cols
         smask = _flip_mask(s_elem, seed_sign, thr_meta, tuple(range(32)))
         # lanes beyond the store's K rows are not cells: mask them off
@@ -222,7 +233,8 @@ def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
                           block_m: int, block_n: int, block_k: int,
                           dynamic: bool, interpret: bool = True):
     """x [M, K] float; man uint16 [K, N]; cw uint32 [K//n, N//rw, S, W];
-    scalars uint32 [5] -> [M, N] f32, decode fused into the matmul."""
+    scalars uint32 [7] (see SCALAR_*) -> [M, N] f32, decode fused into the
+    matmul."""
     m, k = x.shape
     k2, n = man.shape
     rw = codec.row_weights
@@ -259,7 +271,8 @@ def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
                         man_bits: int, exp_bits: int, bias: int, store_k: int,
                         store_j: int, block_m: int, block_n: int,
                         block_k: int, dynamic: bool, interpret: bool = True):
-    """protect='none' variant: exp uint8 [K//n, N], signw uint32 [K//32, N]."""
+    """protect='none' variant: exp uint8 [K//n, N], signw uint32 [K//32, N];
+    scalars uint32 [7] (see SCALAR_*)."""
     m, k = x.shape
     k2, n = man.shape
     assert k == k2 and exp.shape == (k // n_group, n)

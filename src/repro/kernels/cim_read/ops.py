@@ -37,11 +37,15 @@ def _pad2(a, r, c):
     return jnp.pad(a, ((0, r - a.shape[0]), (0, c - a.shape[1])))
 
 
-def make_scalars(seeds=None, thr_man=0, thr_meta=0) -> jnp.ndarray:
+def make_scalars(seeds=None, thr_man=0, thr_meta=0, off_k=0,
+                 off_j=0) -> jnp.ndarray:
     """SMEM scalar vector for the fused kernel (see kernel.SCALAR_*).
 
     ``seeds`` is a :func:`repro.core.cim.plane_seeds` dict; zero thresholds
     mean static serving (no in-kernel flips are drawn on that field).
+    ``off_k``/``off_j`` place a mesh shard's plane block at its global store
+    coordinates (:func:`cim_linear_store_sharded` sets them per shard); zero
+    offsets are the single-device image.
     """
     z = jnp.uint32(0)
     seeds = seeds or {}
@@ -51,6 +55,8 @@ def make_scalars(seeds=None, thr_man=0, thr_meta=0) -> jnp.ndarray:
         jnp.asarray(seeds.get("man", z), jnp.uint32),
         jnp.asarray(seeds.get("meta", z), jnp.uint32),
         jnp.asarray(seeds.get("cw", z), jnp.uint32),
+        jnp.asarray(off_k, jnp.uint32),
+        jnp.asarray(off_j, jnp.uint32),
     ])
 
 
@@ -83,7 +89,7 @@ def _raw_call(x, man, exp, signw, scalars, *, n_group, man_bits, exp_bits,
 def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
                      block_n: int = 128, block_k: int = 512,
                      interpret: bool | None = None, use_kernel: bool = True,
-                     with_info: bool = False):
+                     with_info: bool = False, global_dims=None):
     """Fused linear layer on a packed CIM store: ``x [..., K] -> [..., J]``.
 
     Static serving: ``scalars=None`` (or zero thresholds). Per-read dynamic
@@ -96,6 +102,11 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
     so padding never changes the result); outputs are sliced back. Returns
     the output array, or ``(out, info)`` with ``info['used_kernel']`` when
     ``with_info=True``.
+
+    ``global_dims=(k_pad_global, j_pad_global)`` tells the kernel the store
+    is one shard of a larger image: dynamic elem indices are computed against
+    the GLOBAL padded dims (offsets ride in via the scalars vector), so the
+    per-shard flip streams equal the single-device image's.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -109,12 +120,15 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
     supported = use_kernel and cfg.protect in ("one4n", "none") \
         and cfg.fmt.name == "fp16"
     if not supported:
+        assert global_dims is None, \
+            "sharded (global_dims) calls require the kernel route"
         out = _fallback(x2, store, scalars)
         out = out.reshape(*b_shape, j_log)
         return (out, {"used_kernel": False}) if with_info else out
 
     n, rw = cfg.n_group, cfg.row_weights
     k_pad, j_pad = store.man.shape
+    gk_pad, gj_pad = global_dims or (k_pad, j_pad)
     m = x2.shape[0]
 
     lcm_k = n if cfg.protect == "one4n" else (n * 32 // math.gcd(n, 32))
@@ -139,16 +153,107 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
         cw = jnp.pad(cw, ((0, b_t - cw.shape[0]), (0, g_t - cw.shape[1]),
                           (0, 0), (0, 0)))
         out = _one4n_call(xp, man, cw, scalars, codec=cfg.codec, n_group=n,
-                          store_g=j_pad // rw, store_j=j_pad, **common)
+                          store_g=gj_pad // rw, store_j=gj_pad, **common)
     else:
         b_t = k_t // n
         exp = _pad2(store.exp, b_t, j_t)
         sw_t = k_t // 32
         signw = _pad2(store.sign, sw_t, j_t)
         out = _raw_call(xp, man, exp, signw, scalars, n_group=n,
-                        store_k=k_pad, store_j=j_pad, **common)
+                        store_k=gk_pad, store_j=gj_pad, **common)
     out = out[:m, :j_log].reshape(*b_shape, j_log)
     return (out, {"used_kernel": True}) if with_info else out
+
+
+def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
+                             axis: str = "model", dim: str = "j",
+                             block_m: int = 128, block_n: int = 128,
+                             block_k: int = 512,
+                             interpret: bool | None = None,
+                             with_info: bool = False):
+    """Mesh-sharded fused linear layer: each model-axis shard decodes and
+    multiplies only ITS slab of the packed SRAM image (one shard ≈ one macro
+    column group), under ``shard_map``.
+
+    * ``dim='j'`` (default): planes column-sharded; every shard computes its
+      ``[M, J/n]`` output slice — no collective on the contraction, the
+      output stays J-sharded (``P(batch, axis)``).
+    * ``dim='k'``: planes word-line-sharded; each shard contracts its K slab
+      and the partial products are combined with a ``psum`` over ``axis``.
+
+    Dynamic per-read injection stays bit-identical to the single-device
+    image: each shard's kernel gets its global (row, col) offset via the
+    SMEM scalars, so the counter-PRNG elem indices are global store
+    coordinates. Falls back to the plain (GSPMD) :func:`cim_linear_store`
+    when there is no mesh / no model axis, when the store does not split
+    evenly, or for stores the kernel cannot tile (``per_weight``, non-fp16) —
+    a 1-device mesh degrades to a single-shard ``shard_map``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.cim_read.kernel import SCALAR_OFF_J, SCALAR_OFF_K
+
+    if mesh is None:
+        from repro.distributed import sharding as shlib
+        mesh = shlib.get_mesh()
+    cfg = store.cfg
+    n_sh = int(mesh.shape[axis]) if mesh is not None \
+        and axis in mesh.axis_names else 0
+    k_log, j_log = store.shape
+    k_pad, j_pad = store.man.shape
+    supported = n_sh > 0 and cfg.protect in ("one4n", "none") \
+        and cfg.fmt.name == "fp16" \
+        and cim_lib.can_shard_store(store, n_sh, dim) \
+        and (dim == "j" or k_log == k_pad)   # K shards must tile whole slabs
+    if not supported:
+        out = cim_linear_store(x, store, scalars=scalars, block_m=block_m,
+                               block_n=block_n, block_k=block_k,
+                               interpret=interpret, with_info=with_info)
+        if with_info:
+            out, info = out
+            return out, dict(info, sharded=False)
+        return out
+
+    dynamic = scalars is not None
+    sc = scalars if dynamic else make_scalars()
+    b_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    m = x2.shape[0]
+    planes = cim_lib._plane_dict(store)
+    pspecs = cim_lib.store_plane_specs(store, axis, dim)
+    data_ax = "data" if "data" in mesh.axis_names \
+        and m % int(mesh.shape["data"]) == 0 else None
+    j_loc, k_loc = j_pad // n_sh, k_pad // n_sh
+
+    def body(x_loc, planes_loc, sc_loc):
+        i = jax.lax.axis_index(axis)
+        if dim == "j":
+            sc_i = sc_loc.at[SCALAR_OFF_J].set(jnp.uint32(i * j_loc))
+            shape = (k_log, j_loc)
+        else:
+            sc_i = sc_loc.at[SCALAR_OFF_K].set(jnp.uint32(i * k_loc))
+            shape = (k_loc, j_log)
+        loc = cim_lib.CIMStore(
+            man=planes_loc["man"], sign=planes_loc.get("sign"),
+            exp=planes_loc.get("exp"), codewords=planes_loc.get("cw"),
+            shape=shape, cfg=cfg)
+        out = cim_linear_store(x_loc, loc, scalars=sc_i if dynamic else None,
+                               block_m=block_m, block_n=block_n,
+                               block_k=block_k, interpret=interpret,
+                               global_dims=(k_pad, j_pad))
+        if dim == "k":
+            out = jax.lax.psum(out, axis)
+        return out
+
+    x_spec = P(data_ax, None) if dim == "j" else P(data_ax, axis)
+    out_spec = P(data_ax, axis) if dim == "j" else P(data_ax, None)
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(x_spec, pspecs, P(None)),
+                    out_specs=out_spec, check_rep=False)(x2, planes, sc)
+    out = out[:, :j_log].reshape(*b_shape, j_log)
+    if with_info:
+        return out, {"used_kernel": True, "sharded": True}
+    return out
 
 
 def _fallback(x2, store, scalars):

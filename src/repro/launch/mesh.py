@@ -32,3 +32,16 @@ def make_trial_mesh(n_devices: int = 0):
     """
     n = n_devices or len(jax.devices())
     return jax.make_mesh((n,), ("trial",))
+
+
+def make_sweep_mesh(model_axis: int = 1, n_devices: int = 0):
+    """2-D ``("trial", "model")`` mesh: Monte-Carlo trials x macro columns.
+
+    One Fig. 6 arm then spans the whole mesh — the sweep engine splits its
+    trial batch over "trial" while each CIM deployment's packed planes are
+    column-sharded over "model" (``cim.shard_store``), i.e. every trial's
+    inject+decode runs across ``model_axis`` emulated macro column groups.
+    """
+    n = n_devices or len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("trial", "model"))

@@ -18,9 +18,17 @@ Two serve paths (``--serve-path``):
   weights, serve those (the baseline ``benchmarks/cim_store_bench.py``
   compares against).
 
+Multi-device serving (``--mesh DATAxMODEL``, e.g. ``--mesh 2x4``): requests
+are data-parallel (each "data" row of the mesh serves its own batch shard)
+while every CIM store's packed planes are column-sharded over "model" — one
+shard ≈ one macro column group, served through the ``shard_map``'d fused
+kernel (``kernels/cim_read.ops.cim_linear_store_sharded``). tok/s is
+reported per device and aggregate. ``--rounds`` turns the single batch into
+a serving loop over successive request batches.
+
   python -m repro.launch.serve --arch olmo-1b --reduced --batch 4 \\
       --prompt-len 64 --gen 32 --cim --ber 1e-4 --protect one4n \\
-      --serve-path fused --inject dynamic
+      --serve-path fused --inject dynamic --mesh 2x4 --rounds 2
 """
 from __future__ import annotations
 
@@ -29,11 +37,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core import cim as cim_lib
 from repro.core.api import ReliabilityConfig
 from repro.data.synthetic import MarkovLM
+from repro.distributed import sharding as shlib
 from repro.models import lm
 from repro.training import steps as steps_lib
 
@@ -84,6 +95,30 @@ def deploy_fused(params, *, ber: float, protect: str, n_group: int,
     return stores
 
 
+def make_serve_mesh(spec: str) -> Mesh:
+    """``"DxM"`` -> a ``("data", "model")`` mesh over the first D*M devices."""
+    d_ax, m_ax = (int(v) for v in spec.lower().split("x"))
+    devs = jax.devices()
+    assert d_ax * m_ax <= len(devs), \
+        f"mesh {spec} needs {d_ax * m_ax} devices, have {len(devs)}"
+    return Mesh(np.asarray(devs[:d_ax * m_ax]).reshape(d_ax, m_ax),
+                ("data", "model"))
+
+
+def place_on_mesh(params, mesh: Mesh):
+    """Serving placement: CIM stores column-sharded over "model" (one shard
+    per macro column group, :func:`repro.core.cim.shard_store`); every other
+    leaf — block weights, norms, the ``_cim`` dynamic runtime — replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def place(leaf):
+        if cim_lib._is_store(leaf):
+            return cim_lib.shard_store(leaf, mesh, axis="model", dim="j")
+        return jax.device_put(leaf, rep)
+
+    return jax.tree_util.tree_map(place, params, is_leaf=cim_lib._is_store)
+
+
 def _fused_report(stores):
     n_stores, packed_bytes, fp16_bytes = 0, 0, 0
     corrected = uncorrectable = 0
@@ -126,8 +161,23 @@ def main(argv=None):
                          "in-kernel faults on every weight read (fused only)")
     ap.add_argument("--field", default="full",
                     choices=["full", "mantissa", "exponent_sign"])
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data, model) device mesh, e.g. 2x4: "
+                         "request batches shard over 'data', CIM stores "
+                         "column-shard over 'model'")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="number of successive request batches to serve")
     args = ap.parse_args(argv)
+    assert args.rounds >= 1, "--rounds must be >= 1"
 
+    mesh = make_serve_mesh(args.mesh) if args.mesh else None
+    if mesh is None:
+        return _serve(args, None)
+    with shlib.use_mesh(mesh):   # restores the global mesh on any exit
+        return _serve(args, mesh)
+
+
+def _serve(args, mesh):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -153,40 +203,59 @@ def main(argv=None):
                   f"ber={args.ber:.1e} corrected={int(stats['corrected'])} "
                   f"uncorrectable={int(stats['uncorrectable'])}")
 
+    if mesh is not None:
+        params = place_on_mesh(params, mesh)
+
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)
-    prompts = data.batch(0)["tokens"]
+
+    def place_batch(tokens):
+        if mesh is None:
+            return tokens
+        # per-device request shards: each "data" row serves its own slice
+        spec = P("data", None) if args.batch % mesh.shape["data"] == 0 else P()
+        return jax.device_put(tokens, NamedSharding(mesh, spec))
 
     prefill = jax.jit(steps_lib.make_prefill_step(cfg))
     serve = jax.jit(steps_lib.make_serve_step(cfg))
 
-    t0 = time.time()
-    logits, caches = prefill(params, {"tokens": prompts})
-    # grow attention caches to hold the generated tokens
-    total = args.prompt_len + args.gen
-
     def grow(a):
+        # grow attention caches to hold the generated tokens
         if a.ndim >= 4 and a.shape[-3] == args.prompt_len:
             pad = [(0, 0)] * a.ndim
             pad[-3] = (0, args.gen)
             return jnp.pad(a, pad)
         return a
-    caches = jax.tree_util.tree_map(grow, caches)
-    prefill_s = time.time() - t0
 
-    toks = jnp.argmax(logits, -1)[:, None]
-    out = [toks]
-    t1 = time.time()
-    for _ in range(args.gen - 1):
-        logits, caches = serve(params, caches, toks)
+    gen = None
+    prefill_s = decode_s = 0.0
+    for r in range(args.rounds):
+        prompts = place_batch(data.batch(r)["tokens"])
+        t0 = time.time()
+        logits, caches = prefill(params, {"tokens": prompts})
+        caches = jax.tree_util.tree_map(grow, caches)
+        jax.block_until_ready(logits)
+        prefill_s += time.time() - t0
+
         toks = jnp.argmax(logits, -1)[:, None]
-        out.append(toks)
-    jax.block_until_ready(toks)
-    decode_s = time.time() - t1
+        out = [toks]
+        t1 = time.time()
+        for _ in range(args.gen - 1):
+            logits, caches = serve(params, caches, toks)
+            toks = jnp.argmax(logits, -1)[:, None]
+            out.append(toks)
+        jax.block_until_ready(toks)
+        decode_s += time.time() - t1
+        gen = jnp.concatenate(out, axis=1)
 
-    gen = jnp.concatenate(out, axis=1)
-    tok_per_s = args.batch * (args.gen - 1) / max(decode_s, 1e-9)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {prefill_s*1e3:.0f} ms; "
-          f"decode: {tok_per_s:.1f} tok/s; sample: {gen[0, :16].tolist()}")
+    n_tok = args.rounds * args.batch * (args.gen - 1)
+    tok_per_s = n_tok / max(decode_s, 1e-9)
+    msg = (f"prefill: {args.rounds}x{args.batch}x{args.prompt_len} in "
+           f"{prefill_s*1e3:.0f} ms; decode: {tok_per_s:.1f} tok/s")
+    if mesh is not None:
+        msg += (f" aggregate / {tok_per_s / mesh.size:.1f} tok/s/device "
+                f"(mesh {mesh.shape['data']}x{mesh.shape['model']} "
+                f"data x model, {mesh.size} devices)")
+    print(msg + f"; sample: {gen[0, :16].tolist()}")
     return gen, stats
 
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import cim as cim_lib
+from repro.distributed import sharding as shlib
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import mlp as mlp_lib
@@ -200,6 +201,11 @@ def _unembed_logits(params, x, pos=0):
         seeds, tm, tt = _cim_read_state(params, pos, "unembed")
         scalars = cr_ops.make_scalars(seeds, tm, tt) if seeds is not None \
             else None
+        if shlib.model_axis() is not None:
+            # mesh-native serving: each model-axis shard decodes only its
+            # macro column group of the packed image (shard_map + fused
+            # kernel); logits come back vocab-sharded
+            return cr_ops.cim_linear_store_sharded(x, w_un, scalars=scalars)
         return cr_ops.cim_linear_store(x, w_un, scalars=scalars)
     # FSDP: gather the (small, bf16) weight rather than partial-summing the
     # contraction over its "data"-sharded D axis — the latter all-reduces the

@@ -1,0 +1,141 @@
+"""End-to-end serve-path equivalence: ``--serve-path fused`` vs ``hbm``.
+
+The kernels suite checks the fused decode-on-read matmul against its oracle
+one matrix at a time; here the WHOLE serving stack is compared at batch
+level. Prefill + decode logits of a CIM-deployed LM served
+
+* ``fused`` — packed stores all the way down (row-decoded embed gather +
+  fused unembed kernel), and
+* ``hbm``  — inject once, ECC-decode, rematerialize fp16 weights
+
+must agree with a clean image and under static injection with the same key
+(identical counter-PRNG streams hit identical cells on both paths, so the
+decoded weights are bit-equal and only matmul summation order differs).
+
+A 1-device mesh case drives the mesh-sharded serving path
+(``cim_linear_store_sharded`` under ``shard_map``) to check it degrades
+cleanly; the real multi-device equivalence runs in
+``tests/test_sharded_store.py`` under 8 forced host devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import align, cim
+from repro.distributed import sharding as shlib
+from repro.kernels.cim_read import ops as cr_ops
+from repro.kernels.fault_inject.ops import ber_to_threshold
+from repro.launch import serve as serve_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+
+
+def _deployments(ber, protect="one4n"):
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    stores = serve_lib.deploy_fused(params, ber=ber, protect=protect,
+                                    n_group=8, index=2, key=dkey,
+                                    inject_mode="static", field="full")
+    hbm, _ = serve_lib.deploy(params, ber=ber, protect=protect, n_group=8,
+                              index=2, key=dkey)
+    return cfg, stores, hbm
+
+
+def _grow(caches, plen, gen):
+    def g(a):
+        if a.ndim >= 4 and a.shape[-3] == plen:
+            pad = [(0, 0)] * a.ndim
+            pad[-3] = (0, gen)
+            return jnp.pad(a, pad)
+        return a
+    return jax.tree_util.tree_map(g, caches)
+
+
+@pytest.mark.parametrize("ber", [0.0, 1e-3])
+def test_fused_vs_hbm_batch_logits(ber):
+    """Batch-level logits parity, no-fault and static-inject (same key =>
+    same faults on both paths; fp16-scale tolerance for summation order)."""
+    cfg, stores, hbm = _deployments(ber)
+    plen = 12
+    tokens = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (4, plen)))
+    lf, cf = lm.prefill(stores, cfg, {"tokens": tokens})
+    lb, cb = lm.prefill(hbm, cfg, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lb),
+                               rtol=1e-4, atol=1e-4)
+    cf, cb = _grow(cf, plen, 2), _grow(cb, plen, 2)
+    toks = jnp.argmax(lf, -1)[:, None]
+    for _ in range(2):
+        lf, cf = lm.decode(stores, cfg, cf, toks)
+        lb, cb = lm.decode(hbm, cfg, cb, toks)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-4)
+        toks = jnp.argmax(lf, -1)[:, None]
+
+
+def test_fused_serve_under_one_device_mesh():
+    """The sharded serving path must degrade cleanly on a 1-device mesh: the
+    unembed routes through shard_map + the fused kernel and the logits match
+    the meshless fused path."""
+    cfg, stores, _ = _deployments(1e-3)
+    tokens = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]])
+    ref, _ = lm.prefill(stores, cfg, {"tokens": tokens})
+    mesh = make_host_mesh(model_axis=1)
+    placed = serve_lib.place_on_mesh(stores, mesh)
+    with shlib.use_mesh(mesh):
+        got, caches = lm.prefill(placed, cfg, {"tokens": tokens})
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        caches = _grow(caches, tokens.shape[1], 1)
+        toks = jnp.argmax(got, -1)[:, None]
+        got2, _ = lm.decode(placed, cfg, caches, toks)
+    assert np.isfinite(np.asarray(got2)).all()
+
+
+def test_sharded_linear_one_device_mesh_both_dims():
+    """cim_linear_store_sharded == cim_linear_store on a 1-device mesh for
+    both shard layouts — 'j' (column groups) and 'k' (psum over the
+    contraction) — static and per-read dynamic."""
+    mesh = make_host_mesh(model_axis=1)
+    key = jax.random.PRNGKey(3)
+    thr = ber_to_threshold(0.003)
+    seeds = cim.plane_seeds(key)
+    sc = cr_ops.make_scalars(seeds, thr, thr)
+    for protect in ("one4n", "none"):
+        w = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.1
+        w, _ = align.align_matrix(w, align.AlignmentConfig(8, 2))
+        store = cim.pack(w, cim.CIMConfig(protect=protect))
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, 256))
+        ref_s = cr_ops.cim_linear_store(x, store)
+        ref_d = cr_ops.cim_linear_store(x, store, scalars=sc)
+        for dim in ("j", "k"):
+            st = cim.shard_store(store, mesh, dim=dim)
+            out, info = cr_ops.cim_linear_store_sharded(
+                x, st, mesh=mesh, dim=dim, with_info=True)
+            assert info["sharded"] and info["used_kernel"]
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref_s),
+                                       rtol=1e-5, atol=1e-5)
+            out_d = cr_ops.cim_linear_store_sharded(x, st, scalars=sc,
+                                                    mesh=mesh, dim=dim)
+            np.testing.assert_allclose(np.asarray(out_d), np.asarray(ref_d),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_linear_falls_back_without_kernel_support():
+    """per_weight stores cannot tile the fused kernel: the sharded entry
+    point must fall back (GSPMD path) with the info signal saying so."""
+    mesh = make_host_mesh(model_axis=1)
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 48)) * 0.1
+    w16 = jnp.asarray(jnp.asarray(w, jnp.float16), jnp.float32)
+    store = cim.pack(w16, cim.CIMConfig(protect="per_weight"))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    out, info = cr_ops.cim_linear_store_sharded(x, store, mesh=mesh,
+                                                with_info=True)
+    assert not info["sharded"] and not info["used_kernel"]
+    ref = cr_ops.cim_linear_store(x, store)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
