@@ -49,6 +49,12 @@ def _flatten_cim_store(d: dict) -> dict:
         out["cim_store.serve.fused_vs_hbm_ratio"] = \
             (HIGHER, serving["decode_on_read_tok_s"]
              / serving["hbm_remat_tok_s"])
+    dispatch = d.get("dispatch") or {}
+    if dispatch.get("overhead_ratio"):
+        # deployment.linear vs direct kernel call on the same store: the
+        # unified API layer must stay measurement-noise close to 1.0
+        out["cim_store.dispatch.overhead_ratio"] = \
+            (LOWER, dispatch["overhead_ratio"])
     return out
 
 

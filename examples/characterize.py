@@ -17,6 +17,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import PolicyRule, ReliabilityPolicy
 from repro.configs import RunConfig, get_config
 from repro.core import resilience
 from repro.data.synthetic import GaussianBlobs, MarkovLM
@@ -73,17 +74,40 @@ def main():
     ap.add_argument("--trials", type=int, default=5)
     ap.add_argument("--loop", action="store_true",
                     help="use the per-trial loop harness (baseline)")
+    ap.add_argument("--policies", action="store_true",
+                    help="also sweep mixed per-layer protection policies on "
+                         "the LM (Fig. 6 arms as ReliabilityPolicies)")
     args = ap.parse_args()
     bers = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2]
     characterize = (resilience.characterize_fields_loop if args.loop
                     else resilience.characterize_fields)
 
-    for name, (params, eval_fn) in (("lm", train_lm()),
+    lm_trained = train_lm()
+    for name, (params, eval_fn) in (("lm", lm_trained),
                                     ("cnn", train_cnn())):
         clean = float(eval_fn(params))
         print(f"\n== {name}: clean accuracy {clean:.3f} ==")
         results = characterize(
             jax.random.PRNGKey(7), params, eval_fn, bers,
+            n_trials=args.trials)
+        print(resilience.format_table(results))
+
+    if args.policies:
+        # Fig. 6 arms as deployment POLICIES: uniform protection vs the
+        # paper's co-design split (One4N where exponent sensitivity lives —
+        # the embeds — bare mantissa-dominated blocks elsewhere).
+        params, eval_fn = lm_trained
+        arms = {
+            "all_one4n": ReliabilityPolicy(default=PolicyRule(protect="one4n")),
+            "all_none": ReliabilityPolicy(default=PolicyRule(protect="none")),
+            "embeds_one4n": ReliabilityPolicy(
+                rules=(PolicyRule("embed", protect="one4n"),
+                       PolicyRule("unembed", protect="one4n")),
+                default=PolicyRule(protect="none")),
+        }
+        print("\n== lm: mixed-protection policy arms ==")
+        results = resilience.characterize_policies(
+            jax.random.PRNGKey(11), params, eval_fn, bers, arms,
             n_trials=args.trials)
         print(resilience.format_table(results))
 

@@ -9,14 +9,11 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
+from repro import CIMDeployment, PolicyRule, ReliabilityConfig, ReliabilityPolicy
 from repro.configs import RunConfig, get_config
-from repro.core import cim as cim_lib
-from repro.core.api import ReliabilityConfig
 from repro.data.synthetic import MarkovLM
 from repro.models import lm
 from repro.models.losses import lm_loss
@@ -49,14 +46,17 @@ def main():
     print(f"  clean eval accuracy: {base_acc:.3f}")
 
     # --- 3+4: CIM deployment under soft errors -----------------------------
+    # One policy per protection arm; CIMDeployment owns pack -> inject ->
+    # decode for the whole pytree (ReliabilityConfig(...).policy is the
+    # uniform single-rule bridge from the legacy global-config surface).
     key = jax.random.PRNGKey(42)
     for ber in (1e-6, 1e-4, 1e-3):
         row = [f"BER {ber:.0e}:"]
         for protect in ("one4n", "none"):
-            ccfg = cim_lib.CIMConfig(n_group=8, index=2, protect=protect)
-            stores, _ = cim_lib.deploy_pytree(state.params, ccfg)
-            faulty = cim_lib.inject_pytree(key, stores, ber)
-            restored, stats = cim_lib.read_pytree(faulty)
+            rel = ReliabilityConfig(mode="cim", n_group=8, index=2,
+                                    protect=protect)
+            dep = CIMDeployment.deploy(state.params, rel.policy)
+            restored, stats = dep.inject(key, ber).read()
             acc = evaluate(restored, cfg, data)
             row.append(f"{protect}: acc {acc:.3f} "
                        f"(corrected {int(stats['corrected'])}, "
@@ -64,6 +64,20 @@ def main():
         print("  " + "  |  ".join(row))
     print("One4N keeps accuracy at BERs where unprotected weights degrade — "
           "the paper's Fig. 6 at container scale.")
+
+    # --- 5: per-layer protection in ONE deployment -------------------------
+    # The paper's co-design insight, expressed as a policy: spend ECC on the
+    # sensitive unembed exponents, leave MLP mantissa-heavy blocks bare.
+    policy = ReliabilityPolicy(
+        rules=(PolicyRule("unembed", protect="one4n"),
+               PolicyRule("embed", protect="one4n"),
+               PolicyRule("*", protect="none")))
+    dep = CIMDeployment.deploy(state.params, policy)
+    restored, stats = dep.inject(jax.random.PRNGKey(7), 1e-4).read()
+    acc = evaluate(restored, cfg, data)
+    print(f"mixed policy (One4N embeds, rest unprotected) @ BER 1e-4: "
+          f"acc {acc:.3f} (corrected {int(stats['corrected'])}, "
+          f"uncorrectable {int(stats['uncorrectable'])})")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,19 @@
-"""Batched serving on emulated CIM macros with the fused decode-on-read path.
+"""Batched serving on emulated CIM macros through the unified deployment API.
 
 Shows the paper's deployment story end to end:
-  * weights exponent-aligned and packed into the word-packed SRAM image,
-  * static soft-error injection at a configurable BER (every stored cell —
-    check bits included — is a target),
-  * the fused ``kernels/cim_read`` Pallas kernel consuming the packed planes
-    directly: SECDED decode + FP16 reconstruction + matmul in VMEM, exactly
-    like the macro's read path — the decoded weight matrix never exists in
-    HBM,
+  * a :class:`repro.ReliabilityPolicy` maps each weight to its protection
+    level — here One4N vs unprotected arms of the same matrix, then a mixed
+    per-layer deployment,
+  * ``CIMDeployment.deploy`` exponent-aligns and packs the weights into the
+    word-packed SRAM image; ``.inject`` flips stored cells (check bits
+    included) at a configurable BER,
+  * ``.linear`` auto-dispatches the matmul: the fused ``kernels/cim_read``
+    Pallas kernel consumes the packed planes directly (SECDED decode + FP16
+    reconstruction + matmul in VMEM, exactly like the macro's read path —
+    the decoded weight matrix never exists in HBM), with shard_map/GSPMD
+    routes taking over under mesh placement,
   * per-read dynamic injection: the same kernel draws fresh counter-PRNG
-    faults in-kernel, bit-identical to ``cim.inject`` with the same key.
+    faults in-kernel, bit-identical to ``.inject`` with the same key.
 
 Run:  PYTHONPATH=src python examples/serve_cim.py --ber 1e-4
 """
@@ -19,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import CIMDeployment, PolicyRule, ReliabilityPolicy
 from repro.core import align as align_lib
 from repro.core import cim as cim_lib
 from repro.kernels.cim_read import ops as cr_ops
@@ -41,12 +46,14 @@ def main():
     clean = x @ jnp.asarray(w_al, jnp.float32)
 
     for protect in ("one4n", "none"):
-        store = cim_lib.pack(w_al, cim_lib.CIMConfig(protect=protect))
-        faulty = cim_lib.inject(jax.random.PRNGKey(2), store, args.ber,
-                                "exponent_sign")
-        stats = cim_lib.store_stats(faulty)
-        # fused serve: decode-on-read straight off the packed image
-        out, info = cr_ops.cim_linear_store(x, faulty, with_info=True)
+        policy = ReliabilityPolicy(default=PolicyRule(protect=protect))
+        dep = CIMDeployment.deploy({"proj": w_al}, policy)
+        faulty = dep.inject(jax.random.PRNGKey(2), args.ber,
+                            field="exponent_sign")
+        stats = faulty.stats()
+        # fused serve: decode-on-read straight off the packed image, route
+        # picked by the deployment dispatch table
+        out, info = faulty.linear(x, "proj", with_info=True)
         err = float(jnp.max(jnp.abs(out - clean)))
         rel = err / float(jnp.max(jnp.abs(clean)))
         print(f"protect={protect:6s} ber={args.ber:.0e}  "
@@ -55,21 +62,41 @@ def main():
               f"kernel={info['used_kernel']}  "
               f"max output err {err:.3e} (rel {rel:.2e})")
 
-    # dynamic mode: per-read faults drawn in-kernel — same streams as the
-    # static injection above when keyed identically
-    store = cim_lib.pack(w_al, cim_lib.CIMConfig(protect="one4n"))
+    # a mixed per-layer deployment: One4N on the output projection, bare
+    # mantissa-only faults on the hidden one — heterogeneous protection in
+    # one CIMDeployment (the paper's spend-ECC-where-sensitivity-lives)
+    w2 = jax.random.normal(jax.random.PRNGKey(5), (args.d_in, args.d_in)) * 0.05
+    w2_al, _ = align_lib.align_matrix(w2, align_lib.AlignmentConfig(8, 2))
+    mixed = ReliabilityPolicy(
+        rules=(PolicyRule("out_proj", protect="one4n"),
+               PolicyRule("hidden", protect="none", field="mantissa")))
+    dep = CIMDeployment.deploy({"hidden": w2_al, "out_proj": w_al}, mixed)
+    dep = dep.inject(jax.random.PRNGKey(3), args.ber)
+    h = dep.linear(x, "hidden")
+    out = dep.linear(jnp.tanh(h), "out_proj")
+    print(f"\nmixed policy: {len(dep.store_leaves())} stores, "
+          f"per-layer rules:\n{dep.report()}\n"
+          f"pipeline output finite: {bool(jnp.isfinite(out).all())}")
+
+    # dynamic mode: per-read faults drawn in-kernel — same streams as static
+    # injection with the same key
+    dep = CIMDeployment.deploy(
+        {"proj": w_al}, ReliabilityPolicy(default=PolicyRule(protect="one4n")))
     thr = ber_to_threshold(args.ber)
-    scalars = cr_ops.make_scalars(cim_lib.plane_seeds(jax.random.PRNGKey(2)),
+    # .inject splits its key across the deployment's flat leaves (one macro =
+    # one independent stream); replay the same split to seed the in-kernel
+    # dynamic draws identically
+    (leaf_key,) = jax.random.split(jax.random.PRNGKey(2), 1)
+    scalars = cr_ops.make_scalars(cim_lib.plane_seeds(leaf_key),
                                   thr_man=0, thr_meta=thr)
-    dyn = cr_ops.cim_linear_store(x, store, scalars=scalars)
-    stat = cr_ops.cim_linear_store(
-        x, cim_lib.inject(jax.random.PRNGKey(2), store, args.ber,
-                          "exponent_sign"))
-    print("\nPer-read dynamic == static inject with the same key:",
+    dyn = dep.linear(x, "proj", scalars=scalars)
+    stat = dep.inject(jax.random.PRNGKey(2), args.ber,
+                      field="exponent_sign").linear(x, "proj")
+    print("Per-read dynamic == static inject with the same key:",
           bool(np.allclose(np.asarray(dyn), np.asarray(stat),
                            rtol=1e-5, atol=1e-5)))
 
-    clean_out = cr_ops.cim_linear_store(x, store)
+    clean_out = dep.linear(x, "proj")
     print("Kernel sanity: fused decode-on-read == x @ w on a clean image:",
           bool(np.allclose(np.asarray(clean_out), np.asarray(clean),
                            rtol=1e-5, atol=1e-5)))

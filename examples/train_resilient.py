@@ -38,6 +38,9 @@ PRESETS = {
 
 
 def arm_config(preset, mode, ber):
+    """Each arm is a validated ReliabilityConfig — a thin single-rule policy
+    factory: its ``.policy`` is the uniform ReliabilityPolicy the training
+    fault schedule (repro.core.deployment) applies every step."""
     if mode == "clean":
         return ReliabilityConfig(mode="align")
     protect = "one4n" if mode == "one4n" else "none"
@@ -73,6 +76,9 @@ def main():
                         checkpoint_every=max(p["steps"] // 4, 10),
                         reliability=rel)
         print(f"\n=== arm: {mode} (ber={0 if mode=='clean' else args.ber:.0e}) ===")
+        if rel.mode == "cim":
+            print(f"  policy: {rel.policy.default.protect} on every leaf "
+                  f"(residual exp/sign BER {rel.residual_exp_ber:.2e})")
         every = max(p["steps"] // 6, 1)
 
         def log(s, m, every=every):

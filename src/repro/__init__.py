@@ -1,2 +1,66 @@
-"""repro — Unicorn-CIM reliability framework for JAX (multi-pod)."""
+"""repro — Unicorn-CIM reliability framework for JAX (multi-pod).
+
+Stable top-level namespace. Everything in ``__all__`` is the public API
+surface — ``tests/test_public_api.py`` snapshots it, so additions and
+removals are deliberate, reviewed events rather than accidental drift.
+
+The one entry point for putting a model on the emulated macro is the
+deployment API::
+
+    import repro
+
+    policy = repro.ReliabilityPolicy(
+        rules=(repro.PolicyRule("unembed", protect="one4n"),
+               repro.PolicyRule("*mlp*", protect="none")),
+        default=repro.PolicyRule(deploy=False))
+    dep = repro.CIMDeployment.deploy(params, policy)
+"""
 __version__ = "0.1.0"
+
+# deployment API (the public entry point)
+from repro.core.deployment import (CIMDeployment, PolicyRule,  # noqa: F401
+                                   ReliabilityPolicy, dispatch_linear,
+                                   dispatch_read_rows)
+# configuration surface
+from repro.core.api import ReliabilityConfig  # noqa: F401
+from repro.core.align import AlignmentConfig  # noqa: F401
+from repro.core.cim import CIMConfig, CIMStore  # noqa: F401
+from repro.core.fault import FaultModel  # noqa: F401
+# characterization engine (paper Fig. 2 / Fig. 6 grids)
+from repro.core.resilience import (characterize_fields,  # noqa: F401
+                                   characterize_policies,
+                                   characterize_protection)
+from repro.core.sweep import SweepEngine, SweepPlan, SweepResult  # noqa: F401
+# kernel ops (fused decode-on-read serving + trial-batched fault injection)
+from repro.kernels.cim_read.ops import (cim_linear_store,  # noqa: F401
+                                        cim_linear_store_sharded)
+from repro.kernels.fault_inject.ops import (ber_to_threshold,  # noqa: F401
+                                            fault_inject_bits)
+
+__all__ = [
+    "__version__",
+    # deployment
+    "CIMDeployment",
+    "PolicyRule",
+    "ReliabilityPolicy",
+    "dispatch_linear",
+    "dispatch_read_rows",
+    # configuration
+    "AlignmentConfig",
+    "CIMConfig",
+    "CIMStore",
+    "FaultModel",
+    "ReliabilityConfig",
+    # characterization
+    "SweepEngine",
+    "SweepPlan",
+    "SweepResult",
+    "characterize_fields",
+    "characterize_policies",
+    "characterize_protection",
+    # kernel ops
+    "ber_to_threshold",
+    "cim_linear_store",
+    "cim_linear_store_sharded",
+    "fault_inject_bits",
+]

@@ -1,4 +1,8 @@
 # The paper's primary contribution: FP fault injection, exponent alignment,
-# One4N ECC, and bit-accurate CIM weight-memory emulation.
-from repro.core import align, api, bitops, cim, ecc, fault, resilience, sweep  # noqa: F401
+# One4N ECC, bit-accurate CIM weight-memory emulation, and the unified
+# policy-driven deployment surface.
+from repro.core import (align, api, bitops, cim, deployment, ecc, fault,  # noqa: F401
+                        resilience, sweep)
 from repro.core.api import ReliabilityConfig  # noqa: F401
+from repro.core.deployment import (CIMDeployment, PolicyRule,  # noqa: F401
+                                   ReliabilityPolicy)

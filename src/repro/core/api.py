@@ -3,6 +3,13 @@
 ``ReliabilityConfig`` is carried by every training/serving config in the
 framework; the launcher wires it into the optimizer (frozen-exponent
 projection), the weight path (CIM emulation + ECC) and the fault scheduler.
+
+Since the unified deployment API (:mod:`repro.core.deployment`), this config
+is a thin **single-rule policy factory**: ``.policy`` compiles it into a
+uniform :class:`~repro.core.deployment.ReliabilityPolicy` — one rule, every
+leaf — which is exactly what the legacy one-global-``CIMConfig`` surface
+could express. Heterogeneous per-layer protection is written directly as a
+multi-rule policy and handed to ``CIMDeployment.deploy``.
 """
 from __future__ import annotations
 
@@ -13,6 +20,10 @@ from repro.core.align import AlignmentConfig
 from repro.core.bitops import FORMATS, FP16
 from repro.core.cim import CIMConfig
 from repro.core.fault import FaultModel
+
+# fault.FaultModel accepts the per-field characterization axes on top of the
+# CIM cell classes (Fig. 2 sweeps go through the same config surface)
+_FAULT_FIELDS = ("full", "mantissa", "exponent_sign", "sign", "exponent")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,7 +39,7 @@ class ReliabilityConfig:
     mode: str = "off"                 # off | align | cim
     n_group: int = 8                  # N
     index: int = 2                    # exponent rank (1-based)
-    protect: str = "one4n"            # one4n | none  (cim mode)
+    protect: str = "one4n"            # one4n | per_weight | none  (cim mode)
     ber: float = 0.0                  # bit error rate of the emulated SRAM
     field: str = "full"               # fault target field
     inject: str = "dynamic"           # static | dynamic
@@ -38,6 +49,34 @@ class ReliabilityConfig:
                                       #          kernels, no fp16 weight
                                       #          matrices in HBM);
                                       # hbm    — decode once, serve fp16 copies
+    policy_override: Optional[object] = None
+                                      # a full ReliabilityPolicy for per-layer
+                                      # protection; when set, `.policy` (and
+                                      # therefore the training fault schedule)
+                                      # uses it instead of the uniform
+                                      # single-rule bridge built from the
+                                      # scalar fields above
+
+    def __post_init__(self):
+        # Fail on typos ("one4N", "dynamyc") at construction with the allowed
+        # vocabulary, not deep inside cim.py once a store is half-built.
+        from repro.core import deployment as dep_lib
+        where = "ReliabilityConfig"
+        dep_lib.check_enum("mode", self.mode, dep_lib.VALID_MODES, where)
+        dep_lib.check_enum("protect", self.protect, dep_lib.VALID_PROTECTS,
+                           where)
+        dep_lib.check_enum("field", self.field, _FAULT_FIELDS, where)
+        dep_lib.check_enum("inject", self.inject, dep_lib.VALID_INJECTS, where)
+        dep_lib.check_enum("serve_path", self.serve_path,
+                           dep_lib.VALID_SERVE_PATHS, where)
+        dep_lib.check_enum("fmt_name", self.fmt_name, tuple(FORMATS), where)
+        if self.ber < 0:
+            raise ValueError(f"{where}: ber must be >= 0, got {self.ber}")
+        if self.policy_override is not None and \
+                not isinstance(self.policy_override, dep_lib.ReliabilityPolicy):
+            raise TypeError(f"{where}: policy_override must be a "
+                            f"ReliabilityPolicy, got "
+                            f"{type(self.policy_override).__name__}")
 
     @property
     def fmt(self):
@@ -53,6 +92,26 @@ class ReliabilityConfig:
                          protect=self.protect, fmt=self.fmt)
 
     @property
+    def policy(self):
+        """The :class:`ReliabilityPolicy` of this config: ``policy_override``
+        when set (per-layer rules on the standard launcher/training path),
+        else the uniform single-rule bridge built from the scalar fields.
+        A Fig. 2 characterization axis ('sign'/'exponent') maps to the
+        'exponent_sign' cell class — sign and exponent cells share one
+        stored class in the packed image — never silently widening the
+        fault set onto mantissa cells."""
+        from repro.core import deployment as dep_lib
+        if self.policy_override is not None:
+            return self.policy_override
+        field = self.field if field_is_cell_class(self.field) \
+            else "exponent_sign"
+        rule = dep_lib.PolicyRule(
+            pattern="*", deploy=True, protect=self.protect, field=field,
+            n_group=self.n_group, index=self.index, fmt_name=self.fmt_name,
+            serve_path=self.serve_path)
+        return dep_lib.ReliabilityPolicy(rules=(), default=rule)
+
+    @property
     def fault_model(self) -> FaultModel:
         return FaultModel(ber=self.ber, field=self.field, fmt=self.fmt,
                           mode=self.inject)
@@ -64,7 +123,18 @@ class ReliabilityConfig:
         from repro.core.ecc import residual_ber_after_secded
         if self.protect == "one4n":
             return residual_ber_after_secded(self.ber, codec=self.cim_cfg.codec)
+        if self.protect == "per_weight":
+            return residual_ber_after_secded(
+                self.ber, codeword_bits=self.cim_cfg.pw_code.n)
         return self.ber
 
     def enabled(self) -> bool:
         return self.mode != "off"
+
+
+def field_is_cell_class(field: str) -> bool:
+    """Whether ``field`` names a stored-cell class of the packed image
+    (mantissa plane vs exponent/sign/check cells) rather than a Fig. 2
+    characterization axis."""
+    from repro.core import deployment as dep_lib
+    return field in dep_lib.VALID_FIELDS

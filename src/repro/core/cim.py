@@ -666,7 +666,19 @@ def _flip_gathered(words, elem, seed, threshold, valid):
 
 # ---------------------------------------------------------------------------
 # Pytree-level API: deploy a whole model onto emulated CIM macros.
+#
+# The public entry point is now :class:`repro.core.deployment.CIMDeployment`
+# (per-layer reliability policies, placement, dispatch); the free functions
+# below are kept as deprecation shims over the private ``*_impl`` twins,
+# which internal callers (deployment, sweep engine, benches) use directly.
 # ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    import warnings
+    warnings.warn(
+        f"repro.core.cim.{old} is deprecated; use {new} "
+        f"(repro.core.deployment) instead", DeprecationWarning, stacklevel=3)
+
 
 def _deployable(path, leaf) -> bool:
     return hasattr(leaf, "ndim") and leaf.ndim == 2 and \
@@ -674,6 +686,13 @@ def _deployable(path, leaf) -> bool:
 
 
 def deploy_pytree(params, cfg: CIMConfig, align_cfg=None, predicate=_deployable):
+    """Deprecated shim: use ``CIMDeployment.deploy`` with a policy."""
+    _deprecated("deploy_pytree", "CIMDeployment.deploy")
+    return deploy_pytree_impl(params, cfg, align_cfg, predicate)
+
+
+def deploy_pytree_impl(params, cfg: CIMConfig, align_cfg=None,
+                       predicate=_deployable):
     """Align (optionally) + pack every 2-D weight; other leaves pass through.
 
     Returns (stores_pytree, aligned_params). Leaves >2-D are reshaped to 2-D
@@ -702,6 +721,12 @@ def _is_store(x) -> bool:
 
 
 def inject_pytree(key, stores, ber, field: str = "full"):
+    """Deprecated shim: use ``CIMDeployment.inject``."""
+    _deprecated("inject_pytree", "CIMDeployment.inject")
+    return inject_pytree_impl(key, stores, ber, field)
+
+
+def inject_pytree_impl(key, stores, ber, field: str = "full"):
     """Fresh faults into every store of a deployed model."""
     flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=_is_store)
     keys = jax.random.split(key, len(flat))
@@ -711,6 +736,12 @@ def inject_pytree(key, stores, ber, field: str = "full"):
 
 
 def read_pytree(stores):
+    """Deprecated shim: use ``CIMDeployment.read``."""
+    _deprecated("read_pytree", "CIMDeployment.read")
+    return read_pytree_impl(stores)
+
+
+def read_pytree_impl(stores):
     """Decode every store -> (params, aggregated stats)."""
     flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=_is_store)
     out, corrected, uncorrectable = [], 0, 0

@@ -1,0 +1,614 @@
+"""Unified deployment API: put a model on the emulated CIM macro, once.
+
+Unicorn-CIM's co-design insight is that protection should be spent where
+sensitivity lives — exponent bits, and by extension the layers whose exponent
+distributions matter most. A :class:`ReliabilityPolicy` expresses exactly
+that: an ordered list of pytree-path rules (glob or regex, first match wins,
+with a default rule) mapping each weight matrix to its own protection level
+(``protect`` ∈ {none, one4n, per_weight}), injection field, BER scale, number
+format and grouping — so e.g. the unembed gets One4N while MLP mantissas go
+unprotected, in ONE deployment.
+
+The policy compiles into a pytree-registered :class:`CIMDeployment` that owns
+the packed stores and passthrough leaves, optional mesh placement, fault
+state and cumulative ECC statistics, and exposes the whole lifecycle::
+
+    policy = ReliabilityPolicy(
+        rules=(PolicyRule("unembed", protect="one4n"),
+               PolicyRule("embed",   protect="per_weight"),
+               PolicyRule("*mlp*",   protect="none", field="mantissa")),
+        default=PolicyRule(deploy=False))
+    dep = CIMDeployment.deploy(params, policy)      # align + pack per rule
+    dep = dep.shard(mesh)                           # optional mesh placement
+    dep = dep.inject(key, ber)                      # static soft errors
+    logits = dep.linear(x, "unembed")               # auto-dispatched matmul
+    restored, stats = dep.read()                    # decode + ECC stats
+
+``linear`` dispatches automatically from the store's placement and dtype
+(see :func:`dispatch_linear`):
+
+    ==========================  =============================================
+    store placement / dtype      route
+    ==========================  =============================================
+    mesh with a "model" axis    ``cim_linear_store_sharded`` — shard_map'd
+                                fused kernel, one shard per macro column
+                                group (falls through to the rows below when
+                                the store cannot shard or tile)
+    fp16, one4n/none            ``cim_linear_store`` — fused Pallas decode-
+                                on-read kernel, packed planes straight to
+                                VMEM
+    per_weight / non-fp16       GSPMD reference path (packed jnp decode
+                                fused by XLA into the matmul)
+    rule.serve_path == 'hbm'    decode once to fp16, plain ``x @ w``
+    passthrough leaf            plain ``x @ w``
+    ==========================  =============================================
+
+Counter-PRNG contract: ``CIMDeployment.inject`` splits its key across the
+flat leaves of the deployment exactly like the legacy ``cim.inject_pytree``,
+so a mixed-protection policy deployment is bit-identical — stores, inject
+streams, decoded reads, ECC stats — to manually composing per-leaf
+``deploy_pytree`` calls with the same per-rule configs (tested in
+``tests/test_deployment.py``, single-device and on a forced-8-device mesh).
+
+``cim.deploy_pytree`` / ``inject_pytree`` / ``read_pytree`` remain as
+deprecation shims forwarding here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import align as align_lib
+from repro.core import cim as cim_lib
+from repro.core.bitops import FORMATS
+
+# ---------------------------------------------------------------------------
+# Validated vocabularies of every enum-like policy field. A typo like
+# protect="one4N" must fail at construction with a clear message, not deep
+# inside cim.py.
+# ---------------------------------------------------------------------------
+
+VALID_PROTECTS = ("one4n", "per_weight", "none")
+VALID_FIELDS = ("full", "mantissa", "exponent_sign")
+VALID_SERVE_PATHS = ("fused", "hbm")
+VALID_MODES = ("off", "align", "cim")
+VALID_INJECTS = ("static", "dynamic")
+
+
+def check_enum(name: str, value, allowed: Sequence[str], where: str) -> None:
+    """Raise ``ValueError`` with the allowed vocabulary on a bad enum value."""
+    if value not in allowed:
+        raise ValueError(
+            f"{where}: {name}={value!r} is not valid; expected one of "
+            f"{', '.join(repr(a) for a in allowed)}")
+
+
+def path_str(path) -> str:
+    """A ``tree_flatten_with_path`` key path as a '/'-joined match string.
+
+    ``{'groups': {'blk0': {'attn': {'wq': ...}}}}`` flattens to
+    ``"groups/blk0/attn/wq"`` — the string policy rules glob against.
+    """
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One per-layer reliability setting, keyed by a pytree-path pattern.
+
+    ``pattern`` is an ``fnmatch`` glob against the '/'-joined leaf path
+    (``"unembed"``, ``"groups/*/attn/*"``); prefix with ``re:`` for a full
+    regex (``"re:.*mlp\\.(w1|w2)"``). Matching is whole-string for globs
+    unless the pattern contains no wildcard, in which case it matches any
+    path *segment* equal to it (so ``"embed"`` hits ``"embed"`` but not
+    ``"unembed"``).
+
+    ``deploy=False`` makes matching leaves pass through undeployed;
+    ``ber_scale`` scales the deployment-level BER for matching stores (cells
+    with tighter retention margins); ``field`` restricts which stored cells
+    the faults land in.
+    """
+
+    pattern: str = "*"
+    deploy: bool = True
+    protect: str = "one4n"           # one4n | per_weight | none
+    field: str = "full"              # full | mantissa | exponent_sign
+    ber_scale: float = 1.0
+    n_group: int = 8
+    index: int = 2
+    row_weights: int = 16
+    fmt_name: str = "fp16"
+    serve_path: str = "fused"        # fused | hbm
+
+    def __post_init__(self):
+        where = f"PolicyRule(pattern={self.pattern!r})"
+        check_enum("protect", self.protect, VALID_PROTECTS, where)
+        check_enum("field", self.field, VALID_FIELDS, where)
+        check_enum("serve_path", self.serve_path, VALID_SERVE_PATHS, where)
+        check_enum("fmt_name", self.fmt_name, tuple(FORMATS), where)
+        if self.ber_scale < 0:
+            raise ValueError(f"{where}: ber_scale must be >= 0, "
+                             f"got {self.ber_scale}")
+
+    @property
+    def fmt(self):
+        return FORMATS[self.fmt_name]
+
+    @property
+    def cim_cfg(self) -> cim_lib.CIMConfig:
+        return cim_lib.CIMConfig(n_group=self.n_group, index=self.index,
+                                 protect=self.protect, fmt=self.fmt,
+                                 row_weights=self.row_weights)
+
+    @property
+    def align_cfg(self) -> align_lib.AlignmentConfig:
+        return align_lib.AlignmentConfig(n_group=self.n_group,
+                                         index=self.index, fmt=self.fmt)
+
+    def matches(self, leaf_path: str) -> bool:
+        if self.pattern.startswith("re:"):
+            return re.fullmatch(self.pattern[3:], leaf_path) is not None
+        if not any(c in self.pattern for c in "*?["):
+            return self.pattern == leaf_path or \
+                self.pattern in leaf_path.split("/")
+        return fnmatch.fnmatchcase(leaf_path, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityPolicy:
+    """Ordered pytree-path rules (first match wins) plus a default rule.
+
+    The default rule catches every leaf no rule matches; a policy with no
+    ``rules`` applies the default uniformly — that is exactly what the legacy
+    one-global-``CIMConfig`` API could express
+    (:attr:`repro.core.api.ReliabilityConfig.policy` builds it).
+    """
+
+    rules: Tuple[PolicyRule, ...] = ()
+    default: PolicyRule = PolicyRule()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        for r in tuple(self.rules) + (self.default,):
+            if not isinstance(r, PolicyRule):
+                raise TypeError(f"policy rules must be PolicyRule, got "
+                                f"{type(r).__name__}")
+
+    def rule_for(self, leaf_path: str) -> PolicyRule:
+        for rule in self.rules:
+            if rule.matches(leaf_path):
+                return rule
+        return self.default
+
+    @property
+    def uniform(self) -> bool:
+        """True when every leaf sees the same settings (no per-layer rules)."""
+        return not self.rules
+
+    def deploy(self, params, predicate=None) -> "CIMDeployment":
+        return CIMDeployment.deploy(params, self, predicate=predicate)
+
+
+# single definition of leaf deployability, shared with the legacy cim shims
+_deployable = cim_lib._deployable
+
+
+def _zero_stats():
+    return {"corrected": jnp.zeros((), jnp.int32),
+            "uncorrectable": jnp.zeros((), jnp.int32)}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class CIMDeployment:
+    """A model deployed on the emulated macro under a reliability policy.
+
+    Children: ``stores`` (the params pytree with deployed leaves replaced by
+    packed :class:`~repro.core.cim.CIMStore`\\ s) and ``ecc_stats``
+    (cumulative corrected/uncorrectable counters, accumulated by ``read``).
+    Aux: the policy, the per-flat-leaf rule/path assignment, and the mesh
+    placement — all hashable, so a deployment passes through ``jax.jit``.
+    """
+
+    stores: object
+    ecc_stats: dict
+    policy: ReliabilityPolicy
+    rules: Tuple[Optional[PolicyRule], ...]   # per flat leaf; None=passthrough
+    paths: Tuple[str, ...]
+    placement: Optional[tuple] = None         # (mesh, axis, dim) or None
+
+    def tree_flatten(self):
+        return ((self.stores, self.ecc_stats),
+                (self.policy, self.rules, self.paths, self.placement))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        stores, ecc_stats = children
+        policy, rules, paths, placement = aux
+        return cls(stores, ecc_stats, policy, rules, paths, placement)
+
+    # ------------------------------------------------------------ lifecycle
+
+    @classmethod
+    def deploy(cls, params, policy: ReliabilityPolicy,
+               predicate: Optional[Callable] = None) -> "CIMDeployment":
+        """Align + pack every leaf per its first matching rule.
+
+        A leaf is deployed when its rule says ``deploy=True``, it is a 2-D
+        float matrix, and ``predicate(path, leaf)`` (if given) holds; every
+        other leaf passes through untouched. Per-leaf packing is identical to
+        ``cim.deploy_pytree`` with the rule's config, so mixed policies are
+        bit-identical to manual per-leaf composition.
+        """
+        leaves_wp, treedef = jax.tree_util.tree_flatten_with_path(params)
+        out, rules, paths = [], [], []
+        for path, leaf in leaves_wp:
+            p = path_str(path)
+            rule = policy.rule_for(p)
+            paths.append(p)
+            if rule.deploy and _deployable(path, leaf) and \
+                    (predicate is None or predicate(path, leaf)):
+                w_al, _ = align_lib.align_matrix(leaf, rule.align_cfg)
+                out.append(cim_lib.pack(w_al, rule.cim_cfg))
+                rules.append(rule)
+            else:
+                out.append(leaf)
+                rules.append(None)
+        return cls(stores=jax.tree_util.tree_unflatten(treedef, out),
+                   ecc_stats=_zero_stats(), policy=policy,
+                   rules=tuple(rules), paths=tuple(paths))
+
+    @property
+    def mesh(self):
+        return self.placement[0] if self.placement else None
+
+    def _flat(self):
+        return jax.tree_util.tree_flatten(self.stores,
+                                          is_leaf=cim_lib._is_store)
+
+    def _replace_stores(self, stores) -> "CIMDeployment":
+        # each derived deployment owns its cumulative counters — reads on one
+        # branch must not bleed into siblings or the base
+        return CIMDeployment(stores, dict(self.ecc_stats), self.policy,
+                             self.rules, self.paths, self.placement)
+
+    def store_leaves(self):
+        """[(path, rule, store)] of the deployed leaves, tree order."""
+        flat, _ = self._flat()
+        return [(p, r, s) for p, r, s in zip(self.paths, self.rules, flat)
+                if cim_lib._is_store(s)]
+
+    # ------------------------------------------------------------ fault state
+
+    def inject(self, key, ber, field: Optional[str] = None) -> "CIMDeployment":
+        """Fresh soft errors into every store at ``ber * rule.ber_scale`` in
+        the rule's ``field`` (or the ``field`` override for all stores).
+
+        The key splits across the flat leaves exactly like the legacy
+        ``cim.inject_pytree``; sharded placements route through
+        ``cim.inject_sharded`` (bit-identical streams, PR-3 contract).
+        """
+        if field is not None:
+            # a Fig. 2 axis like 'exponent' would silently inject NOTHING
+            # downstream (both cim.inject threshold gates test False)
+            check_enum("field", field, VALID_FIELDS, "CIMDeployment.inject")
+        flat, treedef = self._flat()
+        keys = jax.random.split(key, len(flat))
+        out = []
+        for k, leaf, rule in zip(keys, flat, self.rules):
+            if cim_lib._is_store(leaf):
+                leaf_ber = ber * rule.ber_scale
+                leaf_field = field if field is not None else rule.field
+                out.append(self._inject_one(k, leaf, leaf_ber, leaf_field))
+            else:
+                out.append(leaf)
+        return self._replace_stores(jax.tree_util.tree_unflatten(treedef, out))
+
+    def _inject_one(self, key, store, ber, field):
+        if self.placement is not None:
+            mesh, axis, dim = self.placement
+            n_sh = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+            if n_sh > 1 and cim_lib.can_shard_store(store, n_sh, dim):
+                return cim_lib.inject_sharded(key, store, ber, field,
+                                              mesh=mesh, axis=axis, dim=dim)
+        return cim_lib.inject(key, store, ber, field)
+
+    def runtime(self, key, ber, field: str = "full") -> dict:
+        """Per-read dynamic-injection runtime (the ``_cim`` entry the serving
+        model folds per leaf and per read index): base counter-PRNG plane
+        seeds plus per-cell-class Bernoulli thresholds."""
+        from repro.kernels.fault_inject.ops import ber_to_threshold
+        check_enum("field", field, VALID_FIELDS, "CIMDeployment.runtime")
+        thr = ber_to_threshold(ber)
+        zero = jnp.uint32(0)
+        return {"seeds": cim_lib.plane_seeds(key),
+                "thr_man": thr if field in ("full", "mantissa") else zero,
+                "thr_meta": thr if field in ("full", "exponent_sign") else zero}
+
+    # ------------------------------------------------------------ read paths
+
+    def _accumulate(self, stats) -> None:
+        # Cumulative ECC accounting. Eager calls fold into the running
+        # counters in place; under a trace the counters cannot absorb tracer
+        # values, so traced reads simply return their stats to the caller.
+        if any(isinstance(v, jax.core.Tracer) for v in stats.values()) or \
+                any(isinstance(v, jax.core.Tracer)
+                    for v in self.ecc_stats.values()):
+            return
+        for k_ in ("corrected", "uncorrectable"):
+            self.ecc_stats[k_] = self.ecc_stats[k_] + stats[k_]
+
+    def read(self):
+        """Decode every store -> (params pytree, {'corrected','uncorrectable'}).
+
+        Eager reads also fold the stats into the deployment's cumulative
+        ``ecc_stats`` counters."""
+        flat, treedef = self._flat()
+        out, stats = [], _zero_stats()
+        for leaf in flat:
+            if cim_lib._is_store(leaf):
+                w, st = cim_lib.read(leaf)
+                out.append(w)
+                stats = {k_: stats[k_] + st[k_] for k_ in stats}
+            else:
+                out.append(leaf)
+        self._accumulate(stats)
+        return jax.tree_util.tree_unflatten(treedef, out), stats
+
+    def stats(self) -> dict:
+        """Aggregate ECC status counts without reconstructing any weights."""
+        agg = _zero_stats()
+        for _, _, s in self.store_leaves():
+            st = cim_lib.store_stats(s)
+            agg = {k_: agg[k_] + st[k_] for k_ in agg}
+        return agg
+
+    def _leaf(self, path: str):
+        for i, p in enumerate(self.paths):
+            if p == path:
+                return self._flat()[0][i], self.rules[i]
+        raise KeyError(f"no leaf at path {path!r}; deployment has "
+                       f"{sorted(self.paths)}")
+
+    def read_rows(self, idx, path: str = "embed", *, seeds=None, thr_man=0,
+                  thr_meta=0):
+        """Decode-on-read row gather of the store at ``path`` (embedding
+        serving: only the gathered rows' codewords are decoded). ``seeds``
+        (see ``cim.plane_seeds``) turns on per-read dynamic injection."""
+        leaf, _ = self._leaf(path)
+        if not cim_lib._is_store(leaf):
+            return jnp.asarray(leaf, jnp.float32)[idx]
+        return cim_lib.read_rows(leaf, idx, seeds=seeds, thr_man=thr_man,
+                                 thr_meta=thr_meta)
+
+    def linear(self, x, path: str, *, scalars=None, with_info: bool = False):
+        """``x [..., K] @ leaf(path) -> [..., J]``, route auto-dispatched.
+
+        A passthrough leaf is a plain matmul. A store follows the module
+        dispatch table (:func:`dispatch_linear`) — fused Pallas, sharded
+        shard_map, or the GSPMD reference — except when its rule pins
+        ``serve_path='hbm'``, which decodes once and matmuls the fp16 copy
+        (stats fold into the cumulative ECC counters on eager calls).
+        """
+        leaf, rule = self._leaf(path)
+        if not cim_lib._is_store(leaf):
+            if scalars is not None:
+                raise ValueError(
+                    f"linear({path!r}): scalars (per-read dynamic injection) "
+                    f"given, but the leaf is a passthrough — no stored cells "
+                    f"to fault")
+            out = x @ leaf.astype(x.dtype)
+            return (out, {"route": "passthrough"}) if with_info else out
+        if rule.serve_path == "hbm":
+            if scalars is not None:
+                raise ValueError(
+                    f"linear({path!r}): scalars given, but the rule pins "
+                    f"serve_path='hbm' (decode-once) — per-read dynamic "
+                    f"injection only exists on the fused/GSPMD routes")
+            w, st = cim_lib.read(leaf)
+            self._accumulate(st)
+            out = x.astype(jnp.float32) @ w
+            return (out, {"route": "hbm"}) if with_info else out
+        _, axis, dim = self.placement or (None, "model", "j")
+        return dispatch_linear(x, leaf, scalars=scalars, mesh=self.mesh,
+                               axis=axis, dim=dim, with_info=with_info)
+
+    # ------------------------------------------------------------ placement
+
+    def shard(self, mesh, *, axis: str = "model", dim: str = "j"
+              ) -> "CIMDeployment":
+        """Mesh placement: every store's packed planes split over ``axis``
+        along ``dim`` (one shard ≈ one macro column group,
+        ``cim.shard_store``); every passthrough leaf replicated. Subsequent
+        ``inject`` calls draw per-shard counter-PRNG streams at global store
+        coordinates; ``linear`` routes through the shard_map'd fused kernel."""
+        stores = place_stores(self.stores, mesh, axis=axis, dim=dim)
+        return CIMDeployment(stores, dict(self.ecc_stats), self.policy,
+                             self.rules, self.paths, (mesh, axis, dim))
+
+    # ------------------------------------------------------------ serving
+
+    def serving_params(self, *, dynamic_key=None, ber: float = 0.0,
+                       field: str = "full"):
+        """The params pytree handed to the jitted model steps.
+
+        Fused rules keep their stores packed; ``serve_path='hbm'`` rules are
+        decoded to fp16 up front (stats fold into ``ecc_stats``). With
+        ``dynamic_key`` set, the ``_cim`` per-read dynamic-injection runtime
+        rides along (dict pytrees only).
+        """
+        flat, treedef = self._flat()
+        out = []
+        for leaf, rule in zip(flat, self.rules):
+            if cim_lib._is_store(leaf) and rule.serve_path == "hbm":
+                w, st = cim_lib.read(leaf)
+                self._accumulate(st)
+                out.append(w)
+            else:
+                out.append(leaf)
+        params = jax.tree_util.tree_unflatten(treedef, out)
+        if dynamic_key is not None and ber > 0:
+            if not isinstance(params, dict):
+                raise TypeError("dynamic serving runtime needs a dict params "
+                                f"pytree, got {type(params).__name__}")
+            params = dict(params)
+            rt = self.runtime(dynamic_key, ber, field)
+            if self.placement is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                rep = NamedSharding(self.placement[0], P())
+                rt = jax.tree_util.tree_map(
+                    lambda a: jax.device_put(a, rep), rt)
+            params["_cim"] = rt
+        return params
+
+    # ------------------------------------------------------------ reporting
+
+    def report(self) -> str:
+        """One line per deployed leaf: path, rule, image bytes."""
+        lines = []
+        for p, rule, s in self.store_leaves():
+            lines.append(
+                f"{p}: protect={rule.protect} field={rule.field} "
+                f"ber_scale={rule.ber_scale:g} fmt={rule.fmt_name} "
+                f"N={rule.n_group} {s.shape[0]}x{s.shape[1]} "
+                f"packed={s.stored_bytes}B")
+        if not lines:
+            return "(no deployed leaves)"
+        return "\n".join(lines)
+
+
+def place_stores(stores, mesh, *, axis: str = "model", dim: str = "j"):
+    """Mesh placement of a stores pytree: every packed store split over
+    ``axis`` along ``dim`` (``cim.shard_store``, replication degrade per
+    plane); every other leaf replicated. The single placement rule behind
+    ``CIMDeployment.shard`` and ``launch.serve.place_on_mesh``."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+
+    def place(leaf):
+        if cim_lib._is_store(leaf):
+            return cim_lib.shard_store(leaf, mesh, axis=axis, dim=dim)
+        return jax.device_put(leaf, rep)
+
+    return jax.tree_util.tree_map(place, stores, is_leaf=cim_lib._is_store)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: the single place that picks the execution route for a CIM matmul
+# or row gather. models/lm.py and launch/serve.py call these instead of
+# branching on mesh/dtype themselves.
+# ---------------------------------------------------------------------------
+
+
+def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
+                    dim: str = "j", with_info: bool = False):
+    """Route ``x @ store`` by placement and dtype (module dispatch table).
+
+    With a mesh carrying ``axis`` (default: the ambient mesh's "model" axis),
+    the shard_map'd fused kernel runs one program per macro column group —
+    degrading internally to GSPMD when the store cannot shard or tile.
+    Otherwise the single-device fused Pallas kernel runs, itself falling back
+    to the packed-jnp reference for ``per_weight`` / non-fp16 stores.
+    ``scalars`` (``cim_read.ops.make_scalars``) turns on per-read dynamic
+    injection on either route.
+    """
+    from repro.distributed import sharding as shlib
+    from repro.kernels.cim_read import ops as cr_ops
+    if mesh is None:
+        mesh = shlib.get_mesh()
+    if mesh is not None and axis in mesh.axis_names:
+        return cr_ops.cim_linear_store_sharded(
+            x, store, scalars=scalars, mesh=mesh, axis=axis, dim=dim,
+            with_info=with_info)
+    return cr_ops.cim_linear_store(x, store, scalars=scalars,
+                                   with_info=with_info)
+
+
+def dispatch_read_rows(store, idx, *, seeds=None, thr_man=0, thr_meta=0):
+    """Row-gather route: decode-on-read off the packed image (no sharded
+    variant — gathers are data-local; GSPMD partitions the jnp decode)."""
+    return cim_lib.read_rows(store, idx, seeds=seeds, thr_man=thr_man,
+                             thr_meta=thr_meta)
+
+
+# ---------------------------------------------------------------------------
+# Training-time dynamic fault schedule (paper Fig. 7), policy-aware.
+# ---------------------------------------------------------------------------
+
+
+def training_fault_schedule(rel) -> Optional[Callable]:
+    """Per-step weight corruption for dynamic-injection training, or None.
+
+    With a uniform policy this is byte-for-byte the legacy schedule (same
+    ``fault.inject_pytree`` key splits — training streams unchanged): the
+    exponent/sign field sees the post-ECC residual rate of the active codec,
+    mantissas the raw BER. With per-layer rules each leaf sees ITS rule's
+    residual rate and BER scale.
+    """
+    from repro.core import fault as fault_lib
+    if rel.mode != "cim" or rel.ber <= 0 or rel.inject != "dynamic":
+        return None
+    policy = getattr(rel, "policy", None)
+    if policy is None or policy.uniform:
+        exp_ber = rel.residual_exp_ber
+
+        def corrupt(params, key):
+            k1, k2 = jax.random.split(key)
+            params = fault_lib.inject_pytree(
+                k1, params, fault_lib.FaultModel(ber=exp_ber,
+                                                 field="exponent_sign",
+                                                 fmt=rel.fmt))
+            params = fault_lib.inject_pytree(
+                k2, params, fault_lib.FaultModel(ber=rel.ber, field="mantissa",
+                                                 fmt=rel.fmt))
+            return params
+
+        return corrupt
+
+    def residual(rule: PolicyRule) -> float:
+        from repro.core.ecc import residual_ber_after_secded
+        b = rel.ber * rule.ber_scale
+        if rule.protect == "one4n":
+            return residual_ber_after_secded(b, codec=rule.cim_cfg.codec)
+        if rule.protect == "per_weight":
+            return residual_ber_after_secded(b, codeword_bits=rule.cim_cfg
+                                             .pw_code.n)
+        return b
+
+    def corrupt(params, key):
+        k1, k2 = jax.random.split(key)
+        leaves_wp, treedef = jax.tree_util.tree_flatten_with_path(params)
+        keys1 = jax.random.split(k1, len(leaves_wp))
+        keys2 = jax.random.split(k2, len(leaves_wp))
+        out = []
+        for ka, kb, (path, leaf) in zip(keys1, keys2, leaves_wp):
+            rule = policy.rule_for(path_str(path))
+            if rule.deploy and fault_lib._is_injectable(path, leaf):
+                # honor the rule's cell-class restriction, matching
+                # CIMDeployment.inject on the same policy
+                if rule.field in ("full", "exponent_sign"):
+                    leaf = fault_lib.inject(ka, leaf, residual(rule),
+                                            "exponent_sign", rule.fmt)
+                if rule.field in ("full", "mantissa"):
+                    leaf = fault_lib.inject(kb, leaf,
+                                            rel.ber * rule.ber_scale,
+                                            "mantissa", rule.fmt)
+            out.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return corrupt

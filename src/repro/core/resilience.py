@@ -67,6 +67,27 @@ def characterize_protection(key, params, eval_fn: Callable, bers: Sequence[float
     return engine.run_protection(key, params, eval_fn, cim_cfg)
 
 
+def characterize_policies(key, params, eval_fn: Callable, bers: Sequence[float],
+                          policies, n_trials: int = 10,
+                          engine: Optional[sweep_lib.SweepEngine] = None
+                          ) -> List[SweepResult]:
+    """Fig. 6 arms as per-layer reliability POLICIES (mixed protection).
+
+    ``policies`` is a dict or sequence of ``(name, ReliabilityPolicy)``: each
+    arm deploys the whole pytree under its policy
+    (:class:`repro.core.deployment.CIMDeployment`) — e.g. One4N on the
+    unembed while MLP mantissas go unprotected — and sweeps the (BER x
+    trial) plane in one compiled executable per arm. ``results[i].protect``
+    carries the arm name."""
+    if engine is None:
+        plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials)
+        engine = sweep_lib.SweepEngine(plan)
+    else:
+        _check_engine_grid(engine, bers=tuple(float(b) for b in bers),
+                           n_trials=n_trials)
+    return engine.run_policies(key, params, eval_fn, policies)
+
+
 def _check_engine_grid(engine: sweep_lib.SweepEngine, **expected) -> None:
     """A prebuilt engine runs ITS plan's grid — refuse silently diverging
     explicit arguments instead of ignoring them."""
@@ -114,12 +135,12 @@ def characterize_protection_loop(key, params, eval_fn: Callable, bers: Sequence[
     results = []
     for protect in protects:
         cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(), protect=protect)
-        stores, _ = cim_lib.deploy_pytree(params, cfg)
+        stores, _ = cim_lib.deploy_pytree_impl(params, cfg)
 
         @jax.jit
         def trial(key, ber, stores=stores):
-            faulty = cim_lib.inject_pytree(key, stores, ber)
-            restored, stats = cim_lib.read_pytree(faulty)
+            faulty = cim_lib.inject_pytree_impl(key, stores, ber)
+            restored, stats = cim_lib.read_pytree_impl(faulty)
             return eval_fn(restored), stats
 
         for ber in bers:

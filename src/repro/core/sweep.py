@@ -351,13 +351,13 @@ class SweepEngine:
                                                     interpret)
 
                 def decode_eval(st):
-                    restored, stats = cim_lib.read_pytree(st)
+                    restored, stats = cim_lib.read_pytree_impl(st)
                     return eval_fn(restored), stats
                 return jax.vmap(decode_eval)(batched)
         else:
             def one_trial(stores, k, ber):
-                faulty = cim_lib.inject_pytree(k, stores, ber)
-                restored, stats = cim_lib.read_pytree(faulty)
+                faulty = cim_lib.inject_pytree_impl(k, stores, ber)
+                restored, stats = cim_lib.read_pytree_impl(faulty)
                 return eval_fn(restored), stats
 
             ber_step = jax.vmap(one_trial, in_axes=(None, 0, None))
@@ -378,7 +378,7 @@ class SweepEngine:
         for protect in plan.protects:
             cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(),
                                       protect=protect)
-            stores, _ = cim_lib.deploy_pytree(params, cfg)
+            stores, _ = cim_lib.deploy_pytree_impl(params, cfg)
             stores = self._shard_stores(stores)
             key, rand = self._trial_randomness(key, len(plan.bers))
             plane = self._executor(
@@ -392,5 +392,73 @@ class SweepEngine:
                 results.append(SweepResult(
                     ber, "exponent_sign+mantissa", protect,
                     [float(a) for a in accs[i]],
+                    float(corr[i].mean()), float(unc[i].mean())))
+        return results
+
+    # ------------------------------------------------- policy (mixed) sweeps
+
+    def _build_policy_plane(self, dep, eval_fn: Callable):
+        """One compiled (BER x trial) plane for a policy arm.
+
+        The inject route is the packed counter-PRNG jnp path
+        (``CIMDeployment.inject``) — per-leaf rules carry their own field and
+        BER scale, which the uniform-threshold batched kernel cannot express;
+        it is fully vmappable so the one-compile-per-arm contract holds on
+        every backend.
+        """
+        def one_trial(stores, k, ber):
+            d = dep._replace_stores(stores)
+            faulty = d.inject(k, ber)
+            restored, stats = faulty.read()
+            return eval_fn(restored), stats
+
+        ber_step = jax.vmap(one_trial, in_axes=(None, 0, None))
+
+        @jax.jit
+        def plane(stores, randomness, bers):
+            return jax.lax.map(lambda rb: ber_step(stores, rb[0], rb[1]),
+                               (randomness, bers))
+        return plane
+
+    def run_policies(self, key, params, eval_fn: Callable, policies
+                     ) -> List[SweepResult]:
+        """Fig. 6 arms as reliability POLICIES: each arm is a (possibly
+        mixed-protection) :class:`repro.core.deployment.ReliabilityPolicy`
+        deployed over the whole pytree — e.g. One4N on the unembed while MLP
+        mantissas go unprotected — swept over the plan's (BER x trial) grid
+        in one compiled executable per arm.
+
+        ``policies`` is a sequence of ``(name, ReliabilityPolicy)`` pairs (or
+        a dict); results carry ``protect=name``.
+        """
+        from repro.core import deployment as dep_lib
+        plan = self.plan
+        if isinstance(policies, dict):
+            policies = list(policies.items())
+        bers_arr = jnp.asarray(plan.bers, jnp.float32)
+        results = []
+        for name, policy in policies:
+            if not isinstance(policy, dep_lib.ReliabilityPolicy):
+                raise TypeError(f"arm {name!r}: expected ReliabilityPolicy, "
+                                f"got {type(policy).__name__}")
+            dep = dep_lib.CIMDeployment.deploy(params, policy)
+            dep = dep._replace_stores(self._shard_stores(dep.stores))
+            key, subs = _split_schedule(key, len(plan.bers) * plan.n_trials)
+            rand = self._shard_trials(
+                subs.reshape((len(plan.bers), plan.n_trials) + subs.shape[1:]))
+            # the plane closes over the deployment's per-leaf rule/path table
+            # (dep._replace_stores), so the cache key must carry it: a second
+            # params pytree with the same arm name must not inherit the first
+            # deployment's leaf->rule assignment
+            plane = self._executor(
+                ("policy", name, policy, dep.rules, dep.paths, id(eval_fn)),
+                lambda: self._build_policy_plane(dep, eval_fn))
+            accs, stats = plane(dep.stores, rand, bers_arr)
+            accs = np.asarray(jax.device_get(accs))
+            corr = np.asarray(jax.device_get(stats["corrected"]), np.float64)
+            unc = np.asarray(jax.device_get(stats["uncorrectable"]), np.float64)
+            for i, ber in enumerate(plan.bers):
+                results.append(SweepResult(
+                    ber, "policy", name, [float(a) for a in accs[i]],
                     float(corr[i].mean()), float(unc[i].mean())))
         return results

@@ -111,10 +111,17 @@ def sanitize_spec(mesh, spec: P, shape) -> P:
 
 
 def shard(x, *names):
-    """Apply a logical sharding constraint (identity when no mesh is set)."""
+    """Apply a logical sharding constraint (identity when no mesh is set).
+
+    Outside a trace, ``with_sharding_constraint`` degenerates to a
+    ``device_put``, which (unlike in-jit constraints) demands exact
+    divisibility — so eager calls drop spec axes the concrete shape cannot
+    split (e.g. a batch of 1 on an 8-way "data" axis in an eager serve)."""
     if _CURRENT_MESH is None:
         return x
     spec = logical(*names)
+    if not isinstance(x, jax.core.Tracer):
+        spec = sanitize_spec(_CURRENT_MESH, spec, x.shape)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(_CURRENT_MESH, spec))
 

@@ -33,6 +33,7 @@ a serving loop over successive request batches.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -42,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core import cim as cim_lib
+from repro.core import deployment as dep_lib
 from repro.core.api import ReliabilityConfig
 from repro.data.synthetic import MarkovLM
 from repro.distributed import sharding as shlib
@@ -49,50 +51,68 @@ from repro.models import lm
 from repro.training import steps as steps_lib
 
 
+def serving_policy(*, protect: str, n_group: int, index: int,
+                   field: str = "full", serve_path: str = "fused"
+                   ) -> dep_lib.ReliabilityPolicy:
+    """The serving launcher's deployment policy.
+
+    ``fused``: only the big embedding/unembedding matrices deploy (block
+    weights are scan-stacked >2-D and were never deployable) and stay
+    packed. ``hbm``: every 2-D float matrix deploys, to be decoded once.
+    """
+    rule = dep_lib.PolicyRule(pattern="*", protect=protect, n_group=n_group,
+                              index=index, field=field, serve_path=serve_path)
+    if serve_path == "hbm":
+        return dep_lib.ReliabilityPolicy(rules=(), default=rule)
+    return dep_lib.ReliabilityPolicy(
+        rules=(dataclasses.replace(rule, pattern="embed"),
+               dataclasses.replace(rule, pattern="unembed")),
+        default=dep_lib.PolicyRule(deploy=False))
+
+
 def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
            key):
-    """HBM path: align -> pack -> (inject) -> read. Returns the decoded fp16
-    weights the macro would serve, plus ECC statistics."""
-    cfg = cim_lib.CIMConfig(n_group=n_group, index=index, protect=protect)
-
-    def eligible(path, leaf):
-        return hasattr(leaf, "ndim") and leaf.ndim == 2 and \
-            jnp.issubdtype(leaf.dtype, jnp.floating)
-
-    stores, aligned = cim_lib.deploy_pytree(params, cfg, predicate=eligible)
+    """HBM path through :class:`CIMDeployment`: align -> pack -> (inject) ->
+    read. Returns the decoded fp16 weights the macro would serve, plus ECC
+    statistics."""
+    policy = serving_policy(protect=protect, n_group=n_group, index=index,
+                            serve_path="hbm")
+    dep = dep_lib.CIMDeployment.deploy(params, policy)
     if ber > 0:
-        stores = cim_lib.inject_pytree(key, stores, ber)
-    return cim_lib.read_pytree(stores)
-
-
-def _fused_eligible(path, leaf):
-    """The fused serve path CIM-deploys the big embedding/unembedding
-    matrices (block weights are scan-stacked >2-D and were never deployable)."""
-    names = {getattr(p, "key", None) for p in path}
-    return hasattr(leaf, "ndim") and leaf.ndim == 2 and \
-        jnp.issubdtype(leaf.dtype, jnp.floating) and \
-        bool({"embed", "unembed"} & names)
+        dep = dep.inject(key, ber, field="full")
+    return dep.read()
 
 
 def deploy_fused(params, *, ber: float, protect: str, n_group: int,
                  index: int, key, inject_mode: str, field: str):
-    """Fused path: align -> pack; weights STAY packed. Static faults are
-    injected into the image; dynamic faults ride in via the ``_cim`` runtime
-    (per-read seeds + thresholds consumed by the model's read hooks)."""
-    cfg = cim_lib.CIMConfig(n_group=n_group, index=index, protect=protect)
-    stores, _ = cim_lib.deploy_pytree(params, cfg, predicate=_fused_eligible)
+    """Fused path through :class:`CIMDeployment`: align -> pack; weights STAY
+    packed. Static faults are injected into the image; dynamic faults ride in
+    via the ``_cim`` runtime (per-read seeds + thresholds consumed by the
+    model's read hooks). Returns the serving params pytree; the deployment
+    object itself comes from :func:`make_deployment`."""
+    dep = make_deployment(params, ber=ber, protect=protect, n_group=n_group,
+                          index=index, key=key, inject_mode=inject_mode,
+                          field=field)
+    return _serving_params(dep, ber=ber, key=key, inject_mode=inject_mode,
+                           field=field)
+
+
+def make_deployment(params, *, ber: float, protect: str, n_group: int,
+                    index: int, key, inject_mode: str, field: str
+                    ) -> dep_lib.CIMDeployment:
+    policy = serving_policy(protect=protect, n_group=n_group, index=index,
+                            field=field, serve_path="fused")
+    dep = dep_lib.CIMDeployment.deploy(params, policy)
     if ber > 0 and inject_mode == "static":
-        stores = cim_lib.inject_pytree(key, stores, ber, field)
-    if ber > 0 and inject_mode == "dynamic":
-        from repro.kernels.fault_inject.ops import ber_to_threshold
-        thr = ber_to_threshold(ber)
-        zero = jnp.uint32(0)
-        stores["_cim"] = {
-            "seeds": cim_lib.plane_seeds(jax.random.fold_in(key, 99)),
-            "thr_man": thr if field in ("full", "mantissa") else zero,
-            "thr_meta": thr if field in ("full", "exponent_sign") else zero,
-        }
-    return stores
+        dep = dep.inject(key, ber, field=field)
+    return dep
+
+
+def _serving_params(dep, *, ber, key, inject_mode, field):
+    dynamic = ber > 0 and inject_mode == "dynamic"
+    return dep.serving_params(
+        dynamic_key=jax.random.fold_in(key, 99) if dynamic else None,
+        ber=ber if dynamic else 0.0, field=field)
 
 
 def make_serve_mesh(spec: str) -> Mesh:
@@ -107,16 +127,10 @@ def make_serve_mesh(spec: str) -> Mesh:
 
 def place_on_mesh(params, mesh: Mesh):
     """Serving placement: CIM stores column-sharded over "model" (one shard
-    per macro column group, :func:`repro.core.cim.shard_store`); every other
-    leaf — block weights, norms, the ``_cim`` dynamic runtime — replicated."""
-    rep = NamedSharding(mesh, P())
-
-    def place(leaf):
-        if cim_lib._is_store(leaf):
-            return cim_lib.shard_store(leaf, mesh, axis="model", dim="j")
-        return jax.device_put(leaf, rep)
-
-    return jax.tree_util.tree_map(place, params, is_leaf=cim_lib._is_store)
+    per macro column group); every other leaf — block weights, norms, the
+    ``_cim`` dynamic runtime — replicated. One rule, shared with
+    ``CIMDeployment.shard`` (:func:`repro.core.deployment.place_stores`)."""
+    return dep_lib.place_stores(params, mesh, axis="model", dim="j")
 
 
 def _fused_report(stores):
@@ -188,22 +202,28 @@ def _serve(args, mesh):
     serve_path = args.serve_path or ReliabilityConfig().serve_path
     stats = None
     if args.cim or args.ber > 0:
+        dkey = jax.random.fold_in(key, 1)
         if serve_path == "fused":
-            params = deploy_fused(
+            dep = make_deployment(
                 params, ber=args.ber, protect=args.protect,
-                n_group=args.n_group, index=args.index,
-                key=jax.random.fold_in(key, 1), inject_mode=args.inject,
-                field=args.field)
+                n_group=args.n_group, index=args.index, key=dkey,
+                inject_mode=args.inject, field=args.field)
+            if mesh is not None:
+                dep = dep.shard(mesh, axis="model", dim="j")
+            params = _serving_params(dep, ber=args.ber, key=dkey,
+                                     inject_mode=args.inject,
+                                     field=args.field)
             _fused_report(params)
         else:
             params, stats = deploy(params, ber=args.ber, protect=args.protect,
                                    n_group=args.n_group, index=args.index,
-                                   key=jax.random.fold_in(key, 1))
+                                   key=dkey)
             print(f"CIM deploy (hbm): protect={args.protect} "
                   f"ber={args.ber:.1e} corrected={int(stats['corrected'])} "
                   f"uncorrectable={int(stats['uncorrectable'])}")
-
-    if mesh is not None:
+            if mesh is not None:
+                params = place_on_mesh(params, mesh)
+    elif mesh is not None:
         params = place_on_mesh(params, mesh)
 
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)

@@ -51,7 +51,8 @@ def build_argparser():
     ap.add_argument("--n-group", type=int, default=8)
     ap.add_argument("--index", type=int, default=2)
     ap.add_argument("--ber", type=float, default=0.0)
-    ap.add_argument("--protect", default="one4n", choices=["one4n", "none"])
+    ap.add_argument("--protect", default="one4n",
+                    choices=["one4n", "per_weight", "none"])
     ap.add_argument("--inject", default="dynamic", choices=["static", "dynamic"])
     ap.add_argument("--grad-compression", action="store_true")
     return ap
@@ -70,6 +71,9 @@ def main(argv=None):
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
 
+    # validated at construction (typos fail here with the allowed vocabulary);
+    # rel.policy is the uniform single-rule ReliabilityPolicy the training
+    # fault schedule (repro.core.deployment.training_fault_schedule) applies
     rel = ReliabilityConfig(mode=args.rel_mode, n_group=args.n_group,
                             index=args.index, ber=args.ber,
                             protect=args.protect, inject=args.inject)

@@ -180,33 +180,34 @@ def _cim_read_state(params, pos, leaf):
 
 def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0):
     """Token embedding gather; a CIMStore leaf is decoded row-by-row on read
-    (only the gathered rows' codewords — no materialized fp16 table)."""
+    (only the gathered rows' codewords — no materialized fp16 table). The
+    route lives in :func:`repro.core.deployment.dispatch_read_rows`."""
     dt = cfg.cdtype()
     emb = params["embed"]
     if isinstance(emb, cim_lib.CIMStore):
+        from repro.core import deployment as dep_lib
         seeds, tm, tt = _cim_read_state(params, pos, "embed")
-        rows = cim_lib.read_rows(emb, tokens, seeds=seeds, thr_man=tm,
-                                 thr_meta=tt)
+        rows = dep_lib.dispatch_read_rows(emb, tokens, seeds=seeds,
+                                          thr_man=tm, thr_meta=tt)
         return rows.astype(dt)
     return shard(emb.astype(dt), "vocab", None)[tokens]
 
 
 def _unembed_logits(params, x, pos=0):
-    """Final projection; a CIMStore leaf routes through the fused
-    decode-on-read Pallas kernel (`kernels/cim_read`) — SECDED decode + FP16
-    reconstruction + matmul in VMEM, no decoded weight matrix in HBM."""
+    """Final projection; a CIMStore leaf routes through
+    :func:`repro.core.deployment.dispatch_linear` — the single dispatch
+    point that picks the fused decode-on-read Pallas kernel, its
+    shard_map'd mesh twin (one program per macro column group, logits back
+    vocab-sharded) or the GSPMD reference from the store's placement and
+    dtype. No decoded weight matrix in HBM on any route."""
     w_un = params["unembed"]
     if isinstance(w_un, cim_lib.CIMStore):
+        from repro.core import deployment as dep_lib
         from repro.kernels.cim_read import ops as cr_ops
         seeds, tm, tt = _cim_read_state(params, pos, "unembed")
         scalars = cr_ops.make_scalars(seeds, tm, tt) if seeds is not None \
             else None
-        if shlib.model_axis() is not None:
-            # mesh-native serving: each model-axis shard decodes only its
-            # macro column group of the packed image (shard_map + fused
-            # kernel); logits come back vocab-sharded
-            return cr_ops.cim_linear_store_sharded(x, w_un, scalars=scalars)
-        return cr_ops.cim_linear_store(x, w_un, scalars=scalars)
+        return dep_lib.dispatch_linear(x, w_un, scalars=scalars)
     # FSDP: gather the (small, bf16) weight rather than partial-summing the
     # contraction over its "data"-sharded D axis — the latter all-reduces the
     # full fp32 logits (13 GB/step/device measured; the gather is 0.2 GB).

@@ -25,32 +25,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import fault as fault_lib
 from repro.distributed import checkpoint as ckpt_lib
 from repro.distributed.elastic import StragglerWatchdog
 from repro.training import steps as steps_lib
 
 
 def make_fault_schedule(run: RunConfig):
-    """Per-step weight corruption for dynamic injection (or None)."""
-    rel = run.reliability
-    if rel.mode != "cim" or rel.ber <= 0 or rel.inject != "dynamic":
-        return None
-    # post-ECC residual rate of the ACTIVE codec (closed form; derives the
-    # codeword length from the configured n_group/row_weights)
-    exp_ber = rel.residual_exp_ber
+    """Per-step weight corruption for dynamic injection (or None).
 
-    def corrupt(params, key):
-        k1, k2 = jax.random.split(key)
-        params = fault_lib.inject_pytree(
-            k1, params, fault_lib.FaultModel(ber=exp_ber, field="exponent_sign",
-                                             fmt=rel.fmt))
-        params = fault_lib.inject_pytree(
-            k2, params, fault_lib.FaultModel(ber=rel.ber, field="mantissa",
-                                             fmt=rel.fmt))
-        return params
-
-    return corrupt
+    Delegates to :func:`repro.core.deployment.training_fault_schedule`: with
+    the (uniform) policy of ``run.reliability`` every leaf sees the post-ECC
+    residual rate on exponent/sign and the raw BER on mantissas — the legacy
+    schedule, stream-for-stream; a multi-rule policy gives each layer ITS
+    rule's residual rate and BER scale."""
+    from repro.core import deployment as dep_lib
+    return dep_lib.training_fault_schedule(run.reliability)
 
 
 def run_training(cfg: ModelConfig, run: RunConfig, batches: Iterable[Dict],

@@ -190,13 +190,17 @@ def test_cim_mantissa_errors_bounded():
 
 
 def test_cim_deploy_pytree_and_stats():
+    import pytest
     params = {"a": _rand_w(jax.random.PRNGKey(0), 32, 16),
               "norm": jnp.ones((16,))}
-    stores, aligned = cim.deploy_pytree(params, cim.CIMConfig())
+    with pytest.deprecated_call():
+        stores, aligned = cim.deploy_pytree(params, cim.CIMConfig())
     assert isinstance(stores["a"], cim.CIMStore)
     assert not isinstance(stores["norm"], cim.CIMStore)
-    faulty = cim.inject_pytree(jax.random.PRNGKey(1), stores, 1e-3)
-    restored, stats = cim.read_pytree(faulty)
+    with pytest.deprecated_call():
+        faulty = cim.inject_pytree(jax.random.PRNGKey(1), stores, 1e-3)
+    with pytest.deprecated_call():
+        restored, stats = cim.read_pytree(faulty)
     assert restored["a"].shape == (32, 16)
     assert (np.asarray(restored["norm"]) == 1).all()
     assert "corrected" in stats

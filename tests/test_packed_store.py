@@ -272,7 +272,7 @@ def test_lm_serves_from_packed_store():
     stores = deploy_fused(params, ber=0.0, protect="one4n", n_group=8,
                           index=2, key=key, inject_mode="static", field="full")
     # baseline: decode the stores back to fp16 weights, serve those
-    decoded, _ = cim.read_pytree(stores)
+    decoded, _ = cim.read_pytree_impl(stores)
     tokens = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]])
     lf, cf = lm.prefill(stores, cfg, {"tokens": tokens})
     lb, cb = lm.prefill(decoded, cfg, {"tokens": tokens})

@@ -1,0 +1,70 @@
+"""Public API surface snapshot.
+
+``repro.__all__`` is the framework's stable namespace. This test pins it to
+an explicit snapshot so additions/removals are deliberate, reviewed events:
+growing the API means updating BOTH ``src/repro/__init__.py`` and the
+snapshot below in the same change.
+"""
+import inspect
+
+import repro
+
+PUBLIC_API_SNAPSHOT = (
+    "__version__",
+    # deployment (the one entry point onto the emulated macro)
+    "CIMDeployment",
+    "PolicyRule",
+    "ReliabilityPolicy",
+    "dispatch_linear",
+    "dispatch_read_rows",
+    # configuration
+    "AlignmentConfig",
+    "CIMConfig",
+    "CIMStore",
+    "FaultModel",
+    "ReliabilityConfig",
+    # characterization
+    "SweepEngine",
+    "SweepPlan",
+    "SweepResult",
+    "characterize_fields",
+    "characterize_policies",
+    "characterize_protection",
+    # kernel ops
+    "ber_to_threshold",
+    "cim_linear_store",
+    "cim_linear_store_sharded",
+    "fault_inject_bits",
+)
+
+
+def test_public_api_matches_snapshot():
+    got = sorted(repro.__all__)
+    want = sorted(PUBLIC_API_SNAPSHOT)
+    missing = [n for n in want if n not in got]
+    extra = [n for n in got if n not in want]
+    assert got == want, (
+        f"public API drift: missing={missing} unexpected={extra} — if "
+        f"intentional, update repro.__all__ AND the snapshot here together")
+
+
+def test_public_api_names_resolve():
+    for name in repro.__all__:
+        assert hasattr(repro, name), f"repro.__all__ lists {name} but the " \
+            f"attribute does not exist"
+
+
+def test_public_api_entry_points_are_usable():
+    # classes construct with defaults; functions are callable
+    assert repro.ReliabilityPolicy().uniform
+    assert repro.PolicyRule().protect == "one4n"
+    assert repro.ReliabilityConfig().mode == "off"
+    for name in ("characterize_fields", "characterize_policies",
+                 "characterize_protection", "cim_linear_store",
+                 "cim_linear_store_sharded", "dispatch_linear",
+                 "dispatch_read_rows", "ber_to_threshold",
+                 "fault_inject_bits"):
+        assert callable(getattr(repro, name))
+    assert inspect.isclass(repro.CIMDeployment)
+    assert hasattr(repro.CIMDeployment, "deploy")
+    assert repro.__version__

@@ -56,12 +56,13 @@ def test_e2e_protection_pipeline(trained):
     key = jax.random.PRNGKey(5)
     accs = {}
     for protect in ("one4n", "none"):
-        ccfg = cim.CIMConfig(n_group=8, index=2, protect=protect)
-        stores, _ = cim.deploy_pytree(state.params, ccfg)
+        from repro import CIMDeployment, PolicyRule, ReliabilityPolicy
+        policy = ReliabilityPolicy(default=PolicyRule(
+            protect=protect, n_group=8, index=2))
+        dep = CIMDeployment.deploy(state.params, policy)
         vals = []
         for t in range(3):
-            faulty = cim.inject_pytree(jax.random.fold_in(key, t), stores, 1e-4)
-            restored, _ = cim.read_pytree(faulty)
+            restored, _ = dep.inject(jax.random.fold_in(key, t), 1e-4).read()
             vals.append(eval_fn(restored))
         accs[protect] = float(np.mean(vals))
     assert accs["one4n"] >= clean - 0.08
