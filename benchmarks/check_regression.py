@@ -4,12 +4,14 @@ committed baseline (``benchmarks/baselines/BENCH_baseline.json``).
 Two metric classes:
 
 * **ratio metrics** (packed-vs-legacy speedup, loop-vs-vectorized speedup,
-  decode-on-read vs HBM tok/s ratio) are machine-relative — they gate at the
-  given ``--tolerance`` (fail if fresh < baseline / tol);
-* **absolute wall-clock metrics** (seconds per cell, wall seconds) vary with
-  runner hardware, so they gate at ``2 x tolerance`` (fail if fresh >
-  baseline * 2 * tol) — a coarse guard against order-of-magnitude
-  regressions that ratio metrics cannot see (e.g. both arms slowing down).
+  decode-on-read vs HBM tok/s ratio, continuous-batching vs sequential
+  engine tok/s) are machine-relative — they gate at the given
+  ``--tolerance`` (fail if fresh < baseline / tol);
+* **absolute wall-clock metrics** (seconds per cell, wall seconds, engine
+  s/token and TTFT) vary with runner hardware, so they gate at
+  ``2 x tolerance`` (fail if fresh > baseline * 2 * tol) — a coarse guard
+  against order-of-magnitude regressions that ratio metrics cannot see
+  (e.g. both arms slowing down).
 
 Usage (CI smoke, after the benches wrote their artifacts):
 
@@ -17,6 +19,7 @@ Usage (CI smoke, after the benches wrote their artifacts):
       --baseline benchmarks/baselines/BENCH_baseline.json \\
       --cim-store artifacts/cim_store_bench.json \\
       --sweep artifacts/sweep_bench.json \\
+      --engine artifacts/engine_bench.json \\
       --tolerance 1.5 --report artifacts/bench_regression_report.json
 
 Refresh the committed baseline after an intentional perf change:
@@ -70,6 +73,21 @@ def _flatten_sweep(d: dict) -> dict:
     return out
 
 
+def _flatten_engine(d: dict) -> dict:
+    out = {}
+    if d.get("continuous_vs_sequential_tok_s"):
+        # continuous batching vs the single-slot degenerate engine on the
+        # same ragged request set: machine-relative, must not erode
+        out["engine.continuous_vs_sequential_tok_s"] = \
+            (HIGHER, d["continuous_vs_sequential_tok_s"])
+    eng = d.get("engine") or {}
+    if eng.get("decode_tok_s"):
+        out["engine.decode_s_per_tok"] = (LOWER, 1.0 / eng["decode_tok_s"])
+    if eng.get("ttft_s_mean"):
+        out["engine.ttft_s_mean"] = (LOWER, eng["ttft_s_mean"])
+    return out
+
+
 def _load(path):
     with open(path) as f:
         return json.load(f)
@@ -81,7 +99,8 @@ def collect_metrics(args):
     are only comparable against artifacts of the same kind)."""
     metrics, quick = {}, set()
     for path, flatten in ((args.cim_store, _flatten_cim_store),
-                          (args.sweep, _flatten_sweep)):
+                          (args.sweep, _flatten_sweep),
+                          (args.engine, _flatten_engine)):
         if path:
             d = _load(path)
             metrics.update(flatten(d))
@@ -131,6 +150,8 @@ def main(argv=None):
                     help="fresh cim_store_bench.py --json artifact")
     ap.add_argument("--sweep", default=None,
                     help="fresh sweep_bench.py --json artifact")
+    ap.add_argument("--engine", default=None,
+                    help="fresh engine_bench.py --json artifact")
     ap.add_argument("--tolerance", type=float, default=1.5,
                     help="ratio metrics fail below baseline/tol; absolute "
                          "wall-clock fails above baseline*2*tol")

@@ -1,0 +1,104 @@
+"""Continuous-batching engine throughput/latency vs sequential serving.
+
+Two arms over the SAME synthetic request set (reduced olmo-1b, fused CIM
+deployment, static injection at BER 1e-3):
+
+1. **engine** — the slot-based continuous-batching scheduler
+   (``repro.launch.engine``) at ``SLOTS`` decode slots: ragged prompts
+   chunk-prefill into per-slot KV caches, finished requests evict and free
+   slots mid-flight;
+2. **sequential** — the degenerate single-slot engine (one request at a
+   time, same code path), the baseline a lock-step launcher is stuck at
+   when request lengths are ragged.
+
+Gated metrics (``benchmarks/check_regression.py --engine``):
+
+* ``engine.continuous_vs_sequential_tok_s`` — aggregate decode tok/s ratio,
+  machine-relative (the continuous-batching win must not erode);
+* ``engine.decode_s_per_tok`` / ``engine.ttft_s_mean`` — absolute
+  wall-clock guards (coarse 2x bound, runner-dependent).
+
+Both arms run once unmeasured to absorb jit compiles (TTFT would otherwise
+be compile time, not scheduling latency).
+
+Run:  PYTHONPATH=src:. python benchmarks/engine_bench.py --json out.json
+Quick (CI smoke): BENCH_QUICK=1 ... --json artifacts/engine_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from benchmarks.common import QUICK
+from repro.configs import get_config
+from repro.launch import engine as engine_lib
+from repro.launch import serve as serve_lib
+from repro.models import lm
+
+N_REQUESTS = 32 if not QUICK else 10
+SLOTS = 4
+CHUNK = 8
+PROMPTS = (8, 24)
+GENS = (8, 16)
+BER = 1e-3
+
+
+def _setup():
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    sparams = serve_lib.deploy_fused(
+        params, ber=BER, protect="one4n", n_group=8, index=2,
+        key=jax.random.fold_in(key, 1), inject_mode="static", field="full")
+    load = engine_lib.LoadGen(n_requests=N_REQUESTS, prompt_lens=PROMPTS,
+                              gen_lens=GENS, vocab_size=cfg.vocab_size,
+                              seed=0)
+    return cfg, sparams, load
+
+
+def _arm(cfg, sparams, load, n_slots: int) -> dict:
+    def run():
+        eng = engine_lib.Engine(cfg, sparams, n_slots=n_slots,
+                                max_len=load.max_len(), chunk=CHUNK,
+                                ecc_accounting=False)
+        _, agg = eng.run(load.requests())
+        return agg
+
+    run()          # warm: compiles prefill-chunk + decode at this slot count
+    return run()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write metrics JSON")
+    args = ap.parse_args(argv)
+
+    cfg, sparams, load = _setup()
+    eng = _arm(cfg, sparams, load, SLOTS)
+    seq = _arm(cfg, sparams, load, 1)
+    ratio = eng["decode_tok_s"] / max(seq["decode_tok_s"], 1e-9)
+
+    print(f"engine ({SLOTS} slots): {eng['decode_tok_s']:.1f} tok/s, "
+          f"TTFT mean {eng['ttft_s_mean']*1e3:.0f} ms, "
+          f"occupancy {eng['slot_occupancy']:.2f}")
+    print(f"sequential (1 slot):   {seq['decode_tok_s']:.1f} tok/s, "
+          f"TTFT mean {seq['ttft_s_mean']*1e3:.0f} ms")
+    print(f"continuous-batching speedup: {ratio:.2f}x over "
+          f"{eng['n_requests']} requests / {eng['total_tokens']} tokens")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        payload = {"quick": QUICK,
+                   "n_requests": N_REQUESTS, "slots": SLOTS, "chunk": CHUNK,
+                   "engine": eng, "sequential": seq,
+                   "continuous_vs_sequential_tok_s": ratio}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,8 @@ from repro.kernels.cim_read.ops import (cim_linear_store,  # noqa: F401
                                         cim_linear_store_sharded)
 from repro.kernels.fault_inject.ops import (ber_to_threshold,  # noqa: F401
                                             fault_inject_bits)
+# serving engine (continuous batching over a deployment, per-request streams)
+from repro.launch.engine import Engine, LoadGen, Request  # noqa: F401
 
 __all__ = [
     "__version__",
@@ -63,4 +65,8 @@ __all__ = [
     "cim_linear_store",
     "cim_linear_store_sharded",
     "fault_inject_bits",
+    # serving engine
+    "Engine",
+    "LoadGen",
+    "Request",
 ]

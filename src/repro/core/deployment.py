@@ -295,18 +295,24 @@ class CIMDeployment:
 
     # ------------------------------------------------------------ fault state
 
-    def inject(self, key, ber, field: Optional[str] = None) -> "CIMDeployment":
+    def inject(self, key, ber, field: Optional[str] = None,
+               request_id: Optional[int] = None) -> "CIMDeployment":
         """Fresh soft errors into every store at ``ber * rule.ber_scale`` in
         the rule's ``field`` (or the ``field`` override for all stores).
 
         The key splits across the flat leaves exactly like the legacy
         ``cim.inject_pytree``; sharded placements route through
         ``cim.inject_sharded`` (bit-identical streams, PR-3 contract).
+        ``request_id`` folds the key per serving request before the split, so
+        a request-scoped static image draws the same streams no matter which
+        engine slot (or co-batch) serves it.
         """
         if field is not None:
             # a Fig. 2 axis like 'exponent' would silently inject NOTHING
             # downstream (both cim.inject threshold gates test False)
             check_enum("field", field, VALID_FIELDS, "CIMDeployment.inject")
+        if request_id is not None:
+            key = jax.random.fold_in(key, request_id)
         flat, treedef = self._flat()
         keys = jax.random.split(key, len(flat))
         out = []
@@ -396,7 +402,8 @@ class CIMDeployment:
         return cim_lib.read_rows(leaf, idx, seeds=seeds, thr_man=thr_man,
                                  thr_meta=thr_meta)
 
-    def linear(self, x, path: str, *, scalars=None, with_info: bool = False):
+    def linear(self, x, path: str, *, scalars=None, request=None, runtime=None,
+               with_info: bool = False):
         """``x [..., K] @ leaf(path) -> [..., J]``, route auto-dispatched.
 
         A passthrough leaf is a plain matmul. A store follows the module
@@ -404,7 +411,28 @@ class CIMDeployment:
         shard_map, or the GSPMD reference — except when its rule pins
         ``serve_path='hbm'``, which decodes once and matmuls the fp16 copy
         (stats fold into the cumulative ECC counters on eager calls).
+
+        ``request=(req_salt, pos)`` with a ``runtime`` (see :meth:`runtime`)
+        derives per-request dynamic-injection scalars for this read —
+        counter-PRNG streams keyed by (leaf, request, read index), the
+        serving engine's batch-invariance contract. Mutually exclusive with
+        an explicit ``scalars`` vector.
         """
+        if request is not None:
+            if scalars is not None:
+                raise ValueError(
+                    f"linear({path!r}): pass either scalars= or request=, "
+                    f"not both")
+            if runtime is None:
+                raise ValueError(
+                    f"linear({path!r}): request= needs the runtime= dict "
+                    f"(see CIMDeployment.runtime)")
+            from repro.kernels.cim_read import ops as cr_ops
+            req_salt, pos = request
+            seeds = request_read_seeds(runtime["seeds"], leaf_salt(path),
+                                       req_salt, pos)
+            scalars = cr_ops.make_scalars(seeds, runtime["thr_man"],
+                                          runtime["thr_meta"])
         leaf, rule = self._leaf(path)
         if not cim_lib._is_store(leaf):
             if scalars is not None:
@@ -506,6 +534,58 @@ def place_stores(stores, mesh, *, axis: str = "model", dim: str = "j"):
         return jax.device_put(leaf, rep)
 
     return jax.tree_util.tree_map(place, stores, is_leaf=cim_lib._is_store)
+
+
+# ---------------------------------------------------------------------------
+# Per-request counter-PRNG key derivation (the serving engine's contract).
+#
+# A dynamic-injection read's flip streams are keyed by the chain
+#
+#   plane seed --fold leaf_salt--> --fold request_salt--> --fold pos--> seed
+#
+# where ``pos`` is the REQUEST-LOCAL read index (its decode position), never
+# an engine-global step. Every link is cim.fold_seed, so a request's fault
+# streams depend only on (deployment key, leaf, request id, position) — bit-
+# identical whether the request is served alone or continuously co-batched,
+# and on any engine slot. With no request salt the chain degrades to the
+# PR-2 single-stream serving contract (fold leaf, fold pos).
+# ---------------------------------------------------------------------------
+
+# distinct per-leaf salts: each CIM-deployed matrix is its own macro and must
+# draw independent fault streams (mirrors inject_pytree's per-store key split)
+CIM_LEAF_SALTS = {"embed": 0x1001, "unembed": 0x2002}
+
+_REQUEST_SALT_CONST = 0x7FEED5A1
+
+
+def leaf_salt(path: str) -> int:
+    """The per-macro seed salt of a deployed leaf. The embed/unembed table
+    keeps the PR-2 serving streams bit-stable; any other path hashes to a
+    deterministic uint32 (FNV-1a over the path string)."""
+    if path in CIM_LEAF_SALTS:
+        return CIM_LEAF_SALTS[path]
+    h = 0x811C9DC5
+    for ch in path.encode():
+        h = ((h ^ ch) * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def request_salt(request_id: int):
+    """uint32 counter-PRNG salt of a serving request id (engine slots fold it
+    into every CIM read seed — slot index never enters the chain)."""
+    return cim_lib.fold_seed(jnp.uint32(_REQUEST_SALT_CONST), request_id)
+
+
+def request_read_seeds(seeds: dict, leaf_salt_: int, req_salt, pos) -> dict:
+    """Fold base plane seeds down to one (leaf, request, read) stream set.
+
+    ``req_salt=None`` skips the request link — byte-compatible with the
+    pre-engine per-read chain (fold leaf, fold pos).
+    """
+    out = {k: cim_lib.fold_seed(v, leaf_salt_) for k, v in seeds.items()}
+    if req_salt is not None:
+        out = {k: cim_lib.fold_seed(v, req_salt) for k, v in out.items()}
+    return {k: cim_lib.fold_seed(v, pos) for k, v in out.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,455 @@
+"""Continuous-batching CIM serving engine with per-request fault streams.
+
+The paper's threat model is soft errors striking the FP CIM macro *during
+inference*; this engine is where that is demonstrated under realistic load.
+It serves a stream of requests through a fixed decode batch of ``n_slots``
+slots over the :class:`~repro.core.deployment.CIMDeployment` dispatch path:
+
+* **admit** — a queued request (arrived, open-loop) takes a free slot; its
+  prompt is chunk-prefilled (``chunk`` tokens per jitted call, ragged tail
+  padded — the causal mask hides padding until later writes overwrite it)
+  into the slot's row of the batched KV caches. The final chunk's logits give
+  the first token (TTFT is measured here).
+* **decode** — one jitted :func:`repro.models.lm.decode_slots` step advances
+  every active slot at its own position.
+* **evict** — a slot that hits its request's ``max_new`` (or the cache
+  ceiling ``max_len``) frees; the next queued request reuses it, lowest slot
+  index first.
+
+**Batch-invariance contract.** Every CIM read folds its dynamic-injection
+seeds per (leaf salt, request salt, request-local position) — never per slot
+index or engine step (:func:`repro.core.deployment.request_read_seeds`).
+Dense decode math is row-independent, so a request's decoded tokens, logits
+and injected-fault streams are bit-identical whether it is served alone or
+continuously co-batched (``tests/test_engine.py``). The engine therefore
+refuses block kinds whose decode couples slots or cannot chunk
+(``lm.check_engine_kinds``); MoE is admitted with a warning — its
+capacity-based dispatch couples co-batched tokens, which voids the bitwise
+guarantee (fault-stream keying stays per-request).
+
+**Accounting.** Per request: queue wait, TTFT, decode seconds, tok/s, and
+ECC activity — every CIM read is charged the macro's corrected/uncorrectable
+codeword counts for the image that read observed (the static image's counts
+per read, or the per-(request, position) dynamically-faulted image when a
+``_cim`` runtime rides in params). Aggregate: tok/s over the decode loop and
+per-slot occupancy.
+
+``LoadGen`` drives the engine open-loop: Poisson arrivals at ``rate`` req/s
+(arrivals are wall-clock gated, independent of service) with uniform prompt
+and generation length ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import cim as cim_lib
+from repro.core import deployment as dep_lib
+from repro.models import lm
+from repro.training import steps as steps_lib
+
+
+class EngineError(RuntimeError):
+    """Non-finite logits or an inconsistent scheduler state."""
+
+
+# one jitted (prefill_chunk, decode_slots) pair per ModelConfig: every Engine
+# instance over the same arch shares the jit cache, so a fresh engine (e.g. a
+# solo-request invariance replay) costs zero recompiles at matched shapes
+_STEP_CACHE: Dict[ModelConfig, tuple] = {}
+
+
+def _jitted_steps(cfg: ModelConfig) -> tuple:
+    if cfg not in _STEP_CACHE:
+        _STEP_CACHE[cfg] = (
+            jax.jit(steps_lib.make_prefill_chunk_step(cfg)),
+            jax.jit(steps_lib.make_decode_slots_step(cfg)))
+    return _STEP_CACHE[cfg]
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    tokens: np.ndarray                 # [L] prompt token ids
+    max_new: int = 16
+    arrival: float = 0.0               # open-loop arrival time (s from start)
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        assert self.tokens.size >= 1, f"request {self.rid}: empty prompt"
+        assert self.max_new >= 1, f"request {self.rid}: max_new must be >= 1"
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Per-request serving record (the engine's JSON artifact rows)."""
+
+    rid: int
+    prompt_len: int
+    tokens: List[int]                  # generated ids (greedy)
+    finish: str                        # 'length' | 'max_len'
+    queue_s: float                     # submit/arrival -> slot admission
+    ttft_s: float                      # submit/arrival -> first token
+    decode_s: float                    # wall time inside decode steps
+    slot: int
+    ecc: Dict[str, int]                # reads / corrected / uncorrectable
+    finite: bool = True                # every served logit vector was finite
+    logits: Optional[np.ndarray] = None   # [n_tokens, V] when collected
+
+    def to_json(self) -> dict:
+        tok_s = len(self.tokens) / self.decode_s if self.decode_s > 0 else 0.0
+        return {"rid": self.rid, "prompt_len": self.prompt_len,
+                "n_tokens": len(self.tokens), "finish": self.finish,
+                "queue_s": self.queue_s, "ttft_s": self.ttft_s,
+                "decode_s": self.decode_s, "tok_s": tok_s, "slot": self.slot,
+                "ecc": {k: int(v) for k, v in self.ecc.items()},
+                "finite": self.finite}
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt_len: int
+    max_new: int
+    submit_t: float
+    admit_t: float
+    ttft_s: float = 0.0
+    decode_s: float = 0.0
+    finite: bool = True
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ecc: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"reads": 0, "corrected": 0,
+                                 "uncorrectable": 0})
+
+
+@dataclasses.dataclass
+class LoadGen:
+    """Synthetic open-loop load: Poisson arrivals, uniform length ranges.
+
+    ``rate=float('inf')`` (the default) drops every arrival at t=0 — the
+    closed "all at once" burst the tests and benches use; a finite rate
+    draws exponential inter-arrival gaps (open loop: arrivals never wait for
+    service).
+    """
+
+    n_requests: int = 32
+    rate: float = float("inf")         # requests / second
+    prompt_lens: Tuple[int, int] = (8, 32)
+    gen_lens: Tuple[int, int] = (4, 16)
+    vocab_size: int = 256
+    seed: int = 0
+
+    def requests(self) -> List[Request]:
+        rng = np.random.default_rng(self.seed)
+        if np.isinf(self.rate):
+            arrivals = np.zeros(self.n_requests)
+        else:
+            arrivals = np.cumsum(rng.exponential(1.0 / self.rate,
+                                                 self.n_requests))
+        out = []
+        for i in range(self.n_requests):
+            plen = int(rng.integers(self.prompt_lens[0],
+                                    self.prompt_lens[1] + 1))
+            gen = int(rng.integers(self.gen_lens[0], self.gen_lens[1] + 1))
+            toks = rng.integers(0, self.vocab_size, plen)
+            out.append(Request(rid=i, tokens=toks, max_new=gen,
+                               arrival=float(arrivals[i])))
+        return out
+
+    def max_len(self) -> int:
+        return self.prompt_lens[1] + self.gen_lens[1] + 1
+
+
+class Engine:
+    """Slot-based continuous-batching serving over a params pytree.
+
+    ``params`` is whatever :meth:`CIMDeployment.serving_params` produced —
+    packed stores (fused), decoded fp16 (hbm), or plain weights, plus the
+    optional ``_cim`` dynamic-injection runtime. Three jitted programs total:
+    one full-chunk prefill, one ragged-chunk prefill per distinct tail
+    length, one slot decode.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 64, chunk: int = 16,
+                 collect_logits: bool = False, ecc_accounting: bool = True,
+                 check_finite: bool = True):
+        lm.check_engine_kinds(cfg)
+        assert n_slots >= 1 and chunk >= 1 and max_len >= 2, \
+            (n_slots, chunk, max_len)
+        self.cfg = cfg
+        self.params = params
+        # a chunk never writes past the cache ceiling (an overflowing padded
+        # dynamic_update_slice would clamp backwards over real prompt rows)
+        self.n_slots, self.max_len, self.chunk = n_slots, max_len, \
+            min(chunk, max_len)
+        self.collect_logits = collect_logits
+        self.check_finite = check_finite
+        self._prefill, self._decode = _jitted_steps(cfg)
+        self.caches = lm.init_caches(cfg, n_slots, max_len)
+        self.caches["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.queue: deque[Tuple[Request, float]] = deque()
+        self._tokens = np.zeros((n_slots, 1), np.int32)
+        self._salts = np.zeros(n_slots, np.uint32)
+        self.results: Dict[int, RequestResult] = {}
+        self.steps = 0
+        self.idle_steps = 0
+        self._decode_wall = 0.0
+        self._decoded_tokens = 0
+        self._runtime = params.get("_cim") if isinstance(params, dict) \
+            else None
+        self._ecc_fns = self._build_ecc_fns() if ecc_accounting else []
+
+    # ------------------------------------------------------------ ECC
+
+    def _build_ecc_fns(self):
+        """One per-read ECC accountant per deployed store leaf.
+
+        Static image: the macro's corrected/uncorrectable counts are a
+        constant of the image — computed once, charged per read. Dynamic
+        runtime: a jitted fn re-derives the (request, position) flip streams
+        (the exact chain the model's reads use) and counts the ECC events of
+        that read's faulted image. That re-derivation decodes the FULL
+        codeword planes per active slot per step (the serving read itself
+        never surfaces ECC status), so dynamic accounting costs the same
+        order as the decode it observes — fine for reduced-arch soaks, and
+        exactly what ``ecc_accounting=False`` (``--no-ecc-accounting``)
+        switches off for throughput measurement (``engine_bench.py`` does).
+        """
+        fns = []
+        flat = jax.tree_util.tree_flatten_with_path(
+            self.params, is_leaf=cim_lib._is_store)[0]
+        rt = self._runtime
+        for path, leafv in flat:
+            if not cim_lib._is_store(leafv):
+                continue
+            salt = dep_lib.leaf_salt(dep_lib.path_str(path))
+            if rt is None:
+                st = cim_lib.store_stats(leafv)
+                const = (int(st["corrected"]), int(st["uncorrectable"]))
+                fns.append(lambda req_salt, pos, c=const: c)
+            else:
+                def dyn(req_salt, pos, store=leafv, leaf_salt=salt):
+                    seeds = dep_lib.request_read_seeds(
+                        rt["seeds"], leaf_salt, req_salt, pos)
+                    faulted = cim_lib.inject_with_seeds(
+                        store, seeds, rt["thr_man"], rt["thr_meta"])
+                    st = cim_lib.store_stats(faulted)
+                    return jnp.stack([st["corrected"], st["uncorrectable"]])
+                jfn = jax.jit(dyn)
+                fns.append(lambda req_salt, pos, f=jfn:
+                           tuple(int(v) for v in np.asarray(f(req_salt, pos))))
+        return fns
+
+    def _charge_reads(self, slot: _Slot, salt, pos: int) -> None:
+        """Charge one CIM read (all deployed macros) at read index ``pos``."""
+        if not self._ecc_fns:
+            return
+        slot.ecc["reads"] += 1
+        for fn in self._ecc_fns:
+            c, u = fn(jnp.uint32(salt), jnp.int32(pos))
+            slot.ecc["corrected"] += c
+            slot.ecc["uncorrectable"] += u
+
+    # ------------------------------------------------------------ scheduling
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        self.queue.append((req, now if now is not None else req.arrival))
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def active(self) -> np.ndarray:
+        return np.asarray([s is not None for s in self.slots])
+
+    def _admit(self, req: Request, slot_idx: int, submit_t: float) -> None:
+        """Chunk-prefill the request's prompt into ``slot_idx`` and emit its
+        first token."""
+        plen = req.tokens.size
+        if plen + req.max_new > self.max_len:
+            raise EngineError(
+                f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
+                f"exceeds the engine's max_len {self.max_len}")
+        salt = np.uint32(dep_lib.request_salt(req.rid))
+        # admit_t comes from the wall clock, never the admission gate `now`
+        # (a closed-loop run gates with now=inf — that must not leak into
+        # queue_s or the JSON artifact)
+        slot = _Slot(rid=req.rid, prompt_len=plen, max_new=req.max_new,
+                     submit_t=submit_t, admit_t=self._clock())
+        logits = None
+        pos = 0
+        for c0 in range(0, plen, self.chunk):
+            seg = req.tokens[c0:c0 + self.chunk]
+            length = seg.size
+            # the ragged tail pads only to what still fits under max_len
+            # (padding row writes must not clamp back over prompt rows);
+            # pad length never enters the fault-stream chain
+            pad_to = min(self.chunk, self.max_len - c0)
+            seg = np.pad(seg, (0, pad_to - length))
+            logits, self.caches = self._prefill(
+                self.params, self.caches, jnp.asarray(seg),
+                jnp.int32(slot_idx), jnp.int32(pos), jnp.int32(length),
+                jnp.uint32(salt))
+            self._charge_reads(slot, salt, pos)
+            pos += length
+        logits = np.asarray(logits)
+        self._check(logits, slot)
+        tok = int(np.argmax(logits))
+        slot.tokens.append(tok)
+        if self.collect_logits:
+            slot.logits.append(logits)
+        slot.ttft_s = self._clock() - submit_t
+        self.slots[slot_idx] = slot
+        self._tokens[slot_idx, 0] = tok
+        self._salts[slot_idx] = salt
+
+    def _evict(self, slot_idx: int, finish: str) -> None:
+        slot = self.slots[slot_idx]
+        res = RequestResult(
+            rid=slot.rid, prompt_len=slot.prompt_len, tokens=slot.tokens,
+            finish=finish, queue_s=slot.admit_t - slot.submit_t,
+            ttft_s=slot.ttft_s, decode_s=slot.decode_s, slot=slot_idx,
+            ecc=slot.ecc, finite=slot.finite,
+            logits=np.stack(slot.logits) if slot.logits else None)
+        self.results[slot.rid] = res
+        self.slots[slot_idx] = None
+        # reset the slot's position so the next admission prefills from 0;
+        # stale K/V rows stay causally masked until overwritten
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
+
+    def _check(self, logits: np.ndarray, slot: _Slot) -> None:
+        """Record the slot's actual finiteness verdict (the JSON artifact
+        reports it) and, when ``check_finite``, fail fast on violation."""
+        if not np.isfinite(logits).all():
+            slot.finite = False
+            if self.check_finite:
+                raise EngineError(
+                    f"non-finite logits serving request {slot.rid}")
+
+    def _clock(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------ stepping
+
+    def step(self, now: Optional[float] = None) -> dict:
+        """Admit arrived requests into free slots, then advance every active
+        slot by one token. Returns an event dict (admitted/decoded/evicted
+        rids, ``idle`` when there was nothing to do)."""
+        if not hasattr(self, "_t0"):
+            self._t0 = time.perf_counter()
+        if now is None:
+            now = self._clock()
+        admitted, evicted = [], []
+        while self.queue and self.free_slots():
+            req, submit_t = self.queue[0]
+            if submit_t > now:
+                break
+            self.queue.popleft()
+            idx = self.free_slots()[0]
+            self._admit(req, idx, submit_t)
+            admitted.append(req.rid)
+            # a 1-token request is done at TTFT
+            if len(self.slots[idx].tokens) >= req.max_new:
+                self._evict(idx, "length")
+                evicted.append(req.rid)
+
+        active = self.active
+        if not active.any():
+            self.idle_steps += 1
+            return {"idle": True, "admitted": admitted, "evicted": evicted,
+                    "decoded": []}
+
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self._tokens),
+            jnp.asarray(active), jnp.asarray(self._salts))
+        logits = np.asarray(logits)
+        dt = time.perf_counter() - t0
+        self.steps += 1
+        decoded = []
+        n_active = int(active.sum())
+        for i in np.flatnonzero(active):
+            slot = self.slots[i]
+            self._check(logits[i], slot)
+            tok = int(np.argmax(logits[i]))
+            slot.tokens.append(tok)
+            if self.collect_logits:
+                slot.logits.append(logits[i])
+            slot.decode_s += dt / n_active
+            # the read index this decode step consumed: the slot's pre-step
+            # position (prefill left it at prompt_len; each decode adds 1)
+            self._charge_reads(slot, self._salts[i],
+                               slot.prompt_len + len(slot.tokens) - 2)
+            self._tokens[i, 0] = tok
+            decoded.append(slot.rid)
+            self._decoded_tokens += 1
+        self._decode_wall += dt
+        for i in np.flatnonzero(active):
+            slot = self.slots[i]
+            done = len(slot.tokens) >= slot.max_new
+            full = slot.prompt_len + len(slot.tokens) >= self.max_len
+            if done or full:
+                self._evict(int(i), "length" if done else "max_len")
+                evicted.append(slot.rid)
+        return {"idle": False, "admitted": admitted, "decoded": decoded,
+                "evicted": evicted}
+
+    def run(self, requests, *, open_loop: bool = False
+            ) -> Tuple[Dict[int, RequestResult], dict]:
+        """Serve ``requests`` to completion -> (results by rid, aggregate).
+
+        ``open_loop=True`` gates admissions on each request's wall-clock
+        ``arrival`` offset (the Poisson load); otherwise everything is
+        admissible immediately and ``arrival`` only sets the queue order.
+        """
+        self._t0 = time.perf_counter()
+        for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            self.submit(req, now=req.arrival if open_loop else 0.0)
+        while self.queue or self.active.any():
+            ev = self.step(now=None if open_loop else float("inf"))
+            if ev["idle"] and self.queue:
+                # open loop: nothing active and the next arrival is in the
+                # future — sleep to it instead of spinning
+                nxt = self.queue[0][1]
+                wait = nxt - self._clock()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        return self.results, self.aggregate()
+
+    # ------------------------------------------------------------ reporting
+
+    def aggregate(self) -> dict:
+        res = list(self.results.values())
+        ttfts = np.asarray([r.ttft_s for r in res]) if res else np.zeros(1)
+        total_tok = sum(len(r.tokens) for r in res)
+        wall = self._clock() if hasattr(self, "_t0") else 0.0
+        return {
+            "n_requests": len(res),
+            "n_slots": self.n_slots,
+            "total_tokens": total_tok,
+            "decode_steps": self.steps,
+            "idle_steps": self.idle_steps,
+            "wall_s": wall,
+            "decode_wall_s": self._decode_wall,
+            "decode_tok_s": (self._decoded_tokens / self._decode_wall
+                             if self._decode_wall > 0 else 0.0),
+            "tok_s": total_tok / wall if wall > 0 else 0.0,
+            "ttft_s_mean": float(ttfts.mean()),
+            "ttft_s_p95": float(np.percentile(ttfts, 95)),
+            "slot_occupancy": (self._decoded_tokens
+                               / max(self.steps * self.n_slots, 1)),
+            "ecc": {k: int(sum(r.ecc[k] for r in res))
+                    for k in ("reads", "corrected", "uncorrectable")},
+        }

@@ -29,6 +29,19 @@ a serving loop over successive request batches.
   python -m repro.launch.serve --arch olmo-1b --reduced --batch 4 \\
       --prompt-len 64 --gen 32 --cim --ber 1e-4 --protect one4n \\
       --serve-path fused --inject dynamic --mesh 2x4 --rounds 2
+
+``--engine`` swaps the lock-step batch loop for the continuous-batching
+engine (``repro.launch.engine``): a synthetic open-loop Poisson load of
+``--requests`` requests at ``--rate`` req/s with ragged prompt/generation
+lengths is scheduled through ``--slots`` decode slots (chunked prefill,
+per-request counter-PRNG fault streams, per-request ECC + TTFT accounting;
+``--engine-json`` writes the per-request artifact). This file stays a thin
+frontend — the scheduler lives in ``repro.launch.engine``.
+
+  python -m repro.launch.serve --arch olmo-1b --reduced --engine \\
+      --cim --ber 1e-3 --inject dynamic --slots 4 --chunk 8 \\
+      --requests 32 --rate 64 --prompt-range 4,24 --gen-range 4,12 \\
+      --engine-json artifacts/engine.json
 """
 from __future__ import annotations
 
@@ -151,6 +164,68 @@ def _fused_report(stores):
           f"corrected={corrected} uncorrectable={uncorrectable}")
 
 
+def _parse_range(spec: str) -> tuple:
+    lo, hi = (int(v) for v in spec.split(","))
+    assert 1 <= lo <= hi, f"bad length range {spec!r}"
+    return lo, hi
+
+
+def _serve_engine(args, cfg, params, mesh):
+    """Thin frontend onto :class:`repro.launch.engine.Engine`: synthetic
+    Poisson load -> scheduler -> per-request ECC/latency artifact."""
+    from repro.launch import engine as engine_lib
+
+    load = engine_lib.LoadGen(
+        n_requests=args.requests,
+        rate=args.rate if args.rate > 0 else float("inf"),
+        prompt_lens=_parse_range(args.prompt_range),
+        gen_lens=_parse_range(args.gen_range),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    max_len = args.max_len or load.max_len()
+    eng = engine_lib.Engine(cfg, params, n_slots=args.slots,
+                            max_len=max_len, chunk=args.chunk,
+                            ecc_accounting=not args.no_ecc_accounting)
+    requests = load.requests()
+    results, agg = eng.run(requests, open_loop=args.rate > 0)
+
+    incomplete = [r.rid for r in requests if r.rid not in results]
+    assert not incomplete, f"engine dropped requests: {incomplete}"
+    print(f"engine: {agg['n_requests']} requests over {args.slots} slots "
+          f"(chunk {args.chunk}, max_len {max_len}); "
+          f"{agg['total_tokens']} tokens in {agg['decode_steps']} decode "
+          f"steps, occupancy {agg['slot_occupancy']:.2f}")
+    msg = (f"decode: {agg['decode_tok_s']:.1f} tok/s aggregate; "
+           f"TTFT mean {agg['ttft_s_mean']*1e3:.0f} ms "
+           f"p95 {agg['ttft_s_p95']*1e3:.0f} ms; "
+           f"ECC reads={agg['ecc']['reads']} "
+           f"corrected={agg['ecc']['corrected']} "
+           f"uncorrectable={agg['ecc']['uncorrectable']}")
+    if mesh is not None:
+        msg += (f" (mesh {mesh.shape['data']}x{mesh.shape['model']} "
+                f"data x model, {mesh.size} devices)")
+    print(msg)
+
+    if args.engine_json:
+        import json
+        import os
+        os.makedirs(os.path.dirname(args.engine_json) or ".", exist_ok=True)
+        payload = {
+            "config": {"arch": args.arch, "reduced": args.reduced,
+                       "slots": args.slots, "chunk": args.chunk,
+                       "max_len": max_len, "requests": args.requests,
+                       "rate": args.rate, "ber": args.ber,
+                       "protect": args.protect, "inject": args.inject,
+                       "serve_path": args.serve_path or "fused",
+                       "mesh": args.mesh, "seed": args.seed},
+            "aggregate": agg,
+            "requests": [results[r.rid].to_json() for r in requests],
+        }
+        with open(args.engine_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.engine_json}")
+    return results, agg
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -181,6 +256,32 @@ def main(argv=None):
                          "column-shard over 'model'")
     ap.add_argument("--rounds", type=int, default=1,
                     help="number of successive request batches to serve")
+    # continuous-batching engine mode (repro.launch.engine)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a synthetic open-loop request stream through "
+                         "the continuous-batching engine instead of one "
+                         "lock-step batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine decode slots (the fixed co-batch width)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="engine prefill chunk length (ragged prompts)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine per-slot KV ceiling (0: fit the load)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="engine load: number of requests")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="engine load: Poisson arrival rate in req/s "
+                         "(0: closed burst, all arrive at t=0)")
+    ap.add_argument("--prompt-range", default="8,32", metavar="LO,HI",
+                    help="engine load: uniform prompt-length range")
+    ap.add_argument("--gen-range", default="4,16", metavar="LO,HI",
+                    help="engine load: uniform generation-length range")
+    ap.add_argument("--engine-json", default=None, metavar="PATH",
+                    help="write the engine's per-request ECC/latency JSON")
+    ap.add_argument("--no-ecc-accounting", action="store_true",
+                    help="skip per-read ECC accounting (dynamic accounting "
+                         "re-decodes the codeword planes per read — "
+                         "disable when measuring throughput)")
     args = ap.parse_args(argv)
     assert args.rounds >= 1, "--rounds must be >= 1"
 
@@ -225,6 +326,9 @@ def _serve(args, mesh):
                 params = place_on_mesh(params, mesh)
     elif mesh is not None:
         params = place_on_mesh(params, mesh)
+
+    if args.engine:
+        return _serve_engine(args, cfg, params, mesh)
 
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)
 

@@ -238,38 +238,51 @@ def decode_local_attention(params, cfg, x, cache, pos, window: int):
 
 
 def decode_attention(params, cfg, x, cache, pos, window: int = 0):
-    """One-token decode. x [B,1,D]; cache k/v [B,Smax,K,hd]; pos scalar =
-    number of tokens already in the cache. Returns (out [B,1,D], new cache)."""
-    b, _, d = x.shape
+    """Cache-append decode. x [B,S,D] (S=1 token decode, S=C chunked
+    prefill); cache k/v [B,Smax,K,hd]; ``pos`` = number of tokens already in
+    the cache — a scalar, or a per-slot ``[B]`` vector (continuous batching:
+    every batch row decodes at its own position). Returns
+    (out [B,S,D], new cache).
+
+    A scalar ``pos`` keeps the original contiguous ``dynamic_update_slice``
+    write; a vector scatters each row's new K/V at its own offset. Rows
+    beyond a slot's current position hold stale values, but the causal mask
+    (``k_pos <= q_pos``) hides every row until the step that overwrites it,
+    so they never reach a softmax.
+    """
+    b, s, d = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     g = h // kh
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    per_slot = pos_arr.ndim > 0
+    base = pos_arr[:, None] if per_slot else jnp.full((b, 1), pos_arr)
+    positions = base + jnp.arange(s, dtype=jnp.int32)[None]       # [B,S]
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-    q = q.reshape(b, 1, kh, g, hd)
+    q = q.reshape(b, s, kh, g, hd)
     int8_cache = "k_scale" in cache
+
+    def write(buf, val):
+        val = val.astype(buf.dtype)
+        if per_slot:
+            return buf.at[jnp.arange(b)[:, None], positions].set(val)
+        return jax.lax.dynamic_update_slice(buf, val, (0, pos_arr, 0, 0))
 
     if int8_cache:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
         new_cache = {}
         for name, val in (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)):
-            buf = jax.lax.dynamic_update_slice(
-                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
-            new_cache[name] = shard(buf, *cache_spec(cfg))
+            new_cache[name] = shard(write(cache[name], val), *cache_spec(cfg))
         ck = _dequant_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
         cv = _dequant_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                          (0, pos, 0, 0))
-        ck = shard(ck, *cache_spec(cfg))
-        cv = shard(cv, *cache_spec(cfg))
+        ck = shard(write(cache["k"], k_new), *cache_spec(cfg))
+        cv = shard(write(cache["v"], v_new), *cache_spec(cfg))
         new_cache = {"k": ck, "v": cv}
 
     t = new_cache["k"].shape[1]
     k_pos = jnp.arange(t, dtype=jnp.int32)[None]
     mask = _causal_mask(positions, k_pos, window)[:, None, None]
     out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
-    out = out.reshape(b, 1, h * hd) @ params["wo"].astype(x.dtype)
+    out = out.reshape(b, s, h * hd) @ params["wo"].astype(x.dtype)
     return out, new_cache

@@ -154,31 +154,28 @@ def _prefill_block_cache(p, cfg: ModelConfig, kind: str, h, positions):
     return {"k": k, "v": v}
 
 
-# distinct per-leaf salts: each CIM-deployed matrix is its own macro and must
-# draw independent fault streams (mirrors inject_pytree's per-store key split)
-_CIM_LEAF_SALTS = {"embed": 0x1001, "unembed": 0x2002}
-
-
-def _cim_read_state(params, pos, leaf):
+def _cim_read_state(params, pos, leaf, req_salt=None):
     """(per-plane seeds, thr_man, thr_meta) for CIM decode-on-read leaves.
 
     ``params['_cim']`` (optional, serving only) carries the dynamic-injection
     runtime: base counter-PRNG plane seeds plus per-field Bernoulli
-    thresholds. Seeds are folded with a per-``leaf`` salt (so embed/unembed
-    faults are uncorrelated) and with the read index ``pos`` (so every
-    prefill/decode step draws fresh soft errors) — per-read dynamic injection
-    straight off the packed SRAM image. Absent, reads are static (the image
-    serves whatever faults `cim.inject` left in it)."""
+    thresholds. Seeds are folded per the deployment key-derivation chain
+    (:func:`repro.core.deployment.request_read_seeds`): a per-``leaf`` salt
+    (so embed/unembed faults are uncorrelated), an optional per-request salt
+    (the serving engine's batch-invariance contract), and the read index
+    ``pos`` (so every prefill/decode step draws fresh soft errors) — per-read
+    dynamic injection straight off the packed SRAM image. Absent, reads are
+    static (the image serves whatever faults `cim.inject` left in it)."""
     rt = params.get("_cim") if isinstance(params, dict) else None
     if rt is None:
         return None, 0, 0
-    salt = _CIM_LEAF_SALTS[leaf]
-    seeds = {k: cim_lib.fold_seed(cim_lib.fold_seed(v, salt), pos)
-             for k, v in rt["seeds"].items()}
+    from repro.core import deployment as dep_lib
+    seeds = dep_lib.request_read_seeds(rt["seeds"], dep_lib.leaf_salt(leaf),
+                                       req_salt, pos)
     return seeds, rt["thr_man"], rt["thr_meta"]
 
 
-def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0):
+def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0, req_salt=None):
     """Token embedding gather; a CIMStore leaf is decoded row-by-row on read
     (only the gathered rows' codewords — no materialized fp16 table). The
     route lives in :func:`repro.core.deployment.dispatch_read_rows`."""
@@ -186,14 +183,14 @@ def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0):
     emb = params["embed"]
     if isinstance(emb, cim_lib.CIMStore):
         from repro.core import deployment as dep_lib
-        seeds, tm, tt = _cim_read_state(params, pos, "embed")
+        seeds, tm, tt = _cim_read_state(params, pos, "embed", req_salt)
         rows = dep_lib.dispatch_read_rows(emb, tokens, seeds=seeds,
                                           thr_man=tm, thr_meta=tt)
         return rows.astype(dt)
     return shard(emb.astype(dt), "vocab", None)[tokens]
 
 
-def _unembed_logits(params, x, pos=0):
+def _unembed_logits(params, x, pos=0, req_salt=None):
     """Final projection; a CIMStore leaf routes through
     :func:`repro.core.deployment.dispatch_linear` — the single dispatch
     point that picks the fused decode-on-read Pallas kernel, its
@@ -204,7 +201,7 @@ def _unembed_logits(params, x, pos=0):
     if isinstance(w_un, cim_lib.CIMStore):
         from repro.core import deployment as dep_lib
         from repro.kernels.cim_read import ops as cr_ops
-        seeds, tm, tt = _cim_read_state(params, pos, "unembed")
+        seeds, tm, tt = _cim_read_state(params, pos, "unembed", req_salt)
         scalars = cr_ops.make_scalars(seeds, tm, tt) if seeds is not None \
             else None
         return dep_lib.dispatch_linear(x, w_un, scalars=scalars)
@@ -392,19 +389,12 @@ def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
     return x, cache
 
 
-def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
-           unroll: bool = False):
-    """One decode step. tokens [B,1] -> (logits [B,V], new caches)."""
+def _decode_stack(params, cfg: ModelConfig, caches, x, pos,
+                  unroll: bool = False):
+    """Shared decode-path block stack: x [B,S,D] appended to the caches at
+    offset ``pos`` (scalar, or per-slot [B] vector) -> (final-normed hidden
+    [B,S,D], new group caches, new tail caches)."""
     pat, n_groups, tail = _group_kinds(cfg)
-    if pos is None:
-        pos = caches["pos"]
-    dt = cfg.cdtype()
-    if isinstance(params["embed"], cim_lib.CIMStore):
-        x = _embed_lookup(params, cfg, tokens, pos=pos)
-    else:
-        x = params["embed"].astype(dt)[tokens]
-    x = shard(x, "batch", None, None)
-
     new_group_caches = None
     if n_groups:
         def body(x, xs):
@@ -438,6 +428,166 @@ def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
         new_tail.append(c)
 
     x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    return x, new_group_caches, tuple(new_tail)
+
+
+def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
+           unroll: bool = False):
+    """One decode step. tokens [B,1] -> (logits [B,V], new caches)."""
+    if pos is None:
+        pos = caches["pos"]
+    dt = cfg.cdtype()
+    if isinstance(params["embed"], cim_lib.CIMStore):
+        x = _embed_lookup(params, cfg, tokens, pos=pos)
+    else:
+        x = params["embed"].astype(dt)[tokens]
+    x = shard(x, "batch", None, None)
+    x, new_group_caches, new_tail = _decode_stack(params, cfg, caches, x, pos,
+                                                  unroll=unroll)
     logits = _unembed_logits(params, x, pos=pos)[:, 0]
-    return logits, {"groups": new_group_caches, "tail": tuple(new_tail),
+    return logits, {"groups": new_group_caches, "tail": new_tail,
                     "pos": pos + 1}
+
+
+# ------------------------------------------------- continuous-batching engine
+
+# block kinds the slot-based serving engine supports. "local"/"rwkv"/"rec"
+# decode strictly token-by-token (rolling-window slots, recurrent state), so
+# they cannot chunk-prefill; MoE *runs* (with a warning) but its
+# capacity-based dispatch couples co-batched tokens, which voids the
+# bit-invariance contract (dense blocks are row-independent — see
+# docs/architecture.md §8).
+ENGINE_KINDS = ("attn", "moe")
+
+
+def check_engine_kinds(cfg: ModelConfig) -> None:
+    pat, _, tail = _group_kinds(cfg)
+    kinds = tuple(pat) + tuple(tail)
+    bad = sorted(set(k for k in kinds if k not in ENGINE_KINDS))
+    if bad:
+        raise ValueError(
+            f"serving engine supports block kinds {ENGINE_KINDS}, but arch "
+            f"{cfg.arch_id!r} uses {bad}: local/rwkv/rec blocks decode "
+            f"strictly token-by-token and cannot chunk-prefill into slots")
+    if "moe" in kinds:
+        import warnings
+        warnings.warn(
+            f"serving engine on MoE arch {cfg.arch_id!r}: capacity-based "
+            f"expert dispatch couples co-batched tokens, so the engine's "
+            f"bitwise batch-invariance contract does NOT hold (fault-stream "
+            f"keying is still per-request)", stacklevel=2)
+
+
+def slot_caches(caches, slot):
+    """One slot's decode caches as a batch-1 view (the batch axis sits at
+    axis 1 under the scan-stacked groups, axis 0 in the tail)."""
+    g = caches["groups"]
+    if g is not None:
+        g = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), g)
+    t = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+        caches["tail"])
+    return {"groups": g, "tail": t}
+
+
+def merge_slot_caches(caches, slot, sub):
+    """Write a batch-1 slot cache view back into the batched caches."""
+    g = caches["groups"]
+    if g is not None:
+        g = jax.tree_util.tree_map(
+            lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                a, b.astype(a.dtype), slot, axis=1), g, sub["groups"])
+    t = jax.tree_util.tree_map(
+        lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+            a, b.astype(a.dtype), slot, axis=0), caches["tail"], sub["tail"])
+    return {"groups": g, "tail": t, "pos": caches["pos"]}
+
+
+def prefill_chunk(params, cfg: ModelConfig, caches, tokens, slot, pos,
+                  length=None, req_salt=None):
+    """Chunked prefill of ONE slot into the batched decode caches.
+
+    ``tokens`` [C] is one prompt chunk (the first ``length`` entries valid;
+    the ragged tail is padding — its K/V land at positions the causal mask
+    hides until a later write overwrites them, so padding never reaches a
+    softmax). ``slot`` indexes the batch row, ``pos`` is the slot's current
+    token count, ``req_salt`` keys this request's dynamic-injection streams
+    (the chunk reads the CIM image once, at read index ``pos``).
+
+    Returns (last-valid-token logits [V], updated caches with
+    ``caches['pos'][slot] = pos + length``). Both ``slot`` and ``pos`` are
+    traced, so one jit covers every slot and offset per chunk shape.
+    """
+    check_engine_kinds(cfg)
+    if length is None:
+        length = tokens.shape[0]
+    length = jnp.asarray(length, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    dt = cfg.cdtype()
+    toks = tokens[None]                                       # [1, C]
+    if isinstance(params["embed"], cim_lib.CIMStore):
+        x = _embed_lookup(params, cfg, toks, pos=pos, req_salt=req_salt)
+    else:
+        x = params["embed"].astype(dt)[toks]
+    x = shard(x, "batch", None, None)
+    sub = slot_caches(caches, slot)
+    x, gc, tc = _decode_stack(params, cfg, sub, x, pos)
+    h = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)  # [1,1,D]
+    logits = _unembed_logits(params, h, pos=pos, req_salt=req_salt)[:, 0]
+    out = merge_slot_caches(caches, slot, {"groups": gc, "tail": tc})
+    out["pos"] = caches["pos"].at[slot].set(pos + length)
+    return logits[0], out
+
+
+def decode_slots(params, cfg: ModelConfig, caches, tokens, active,
+                 req_salts=None):
+    """One continuous-batching decode step across the slot batch.
+
+    ``tokens`` [S,1] (each slot's last token; inactive slots' values are
+    irrelevant), per-slot positions ride in ``caches['pos']`` [S], ``active``
+    [S] bool. ``req_salts`` [S] uint32 (see
+    :func:`repro.core.deployment.request_salt`) key each slot's
+    dynamic-injection CIM reads by (request, position) — never by slot index
+    or engine step — so a request's logits and fault streams are
+    bit-identical served alone or continuously co-batched. Per-request reads
+    run one slot at a time against the packed image (each slot IS a distinct
+    macro read with its own counter-PRNG streams); static images read
+    batched, which is invariant for free (no seeds in the chain).
+
+    Inactive slots flow through the fixed-shape batch but their positions do
+    not advance; their stale cache writes stay causally masked (see
+    ``attention.decode_attention``).
+
+    Returns (logits [S,V], new caches).
+    """
+    check_engine_kinds(cfg)
+    pos = caches["pos"]                                       # [S]
+    s = tokens.shape[0]
+    dt = cfg.cdtype()
+    dynamic = isinstance(params, dict) and params.get("_cim") is not None
+    if dynamic and req_salts is None:
+        raise ValueError(
+            "decode_slots: params carry a dynamic-injection '_cim' runtime "
+            "but no req_salts — per-read seeds would alias across requests; "
+            "pass deployment.request_salt(rid) per slot")
+    emb = params["embed"]
+    if isinstance(emb, cim_lib.CIMStore) and dynamic:
+        x = jnp.concatenate(
+            [_embed_lookup(params, cfg, tokens[i:i + 1], pos=pos[i],
+                           req_salt=req_salts[i]) for i in range(s)], axis=0)
+    elif isinstance(emb, cim_lib.CIMStore):
+        x = _embed_lookup(params, cfg, tokens)
+    else:
+        x = emb.astype(dt)[tokens]
+    x = shard(x, "batch", None, None)
+    x, gc, tc = _decode_stack(params, cfg, caches, x, pos)
+    if isinstance(params["unembed"], cim_lib.CIMStore) and dynamic:
+        logits = jnp.concatenate(
+            [_unembed_logits(params, x[i:i + 1], pos=pos[i],
+                             req_salt=req_salts[i]) for i in range(s)],
+            axis=0)[:, 0]
+    else:
+        logits = _unembed_logits(params, x)[:, 0]
+    return logits, {"groups": gc, "tail": tc,
+                    "pos": pos + active.astype(jnp.int32)}

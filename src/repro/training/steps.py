@@ -111,3 +111,23 @@ def make_serve_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
     def serve_step(params, caches, tokens):
         return lm.decode(params, cfg, caches, tokens, unroll=unroll)
     return serve_step
+
+
+def make_prefill_chunk_step(cfg: ModelConfig) -> Callable:
+    """Continuous-batching engine: one prompt chunk of one slot appended to
+    the batched caches. ``slot``/``pos``/``length`` are traced — one compile
+    per chunk *shape*, reused across slots, offsets and ragged tails."""
+    def prefill_chunk_step(params, caches, tokens, slot, pos, length,
+                          req_salt):
+        return lm.prefill_chunk(params, cfg, caches, tokens, slot, pos,
+                                length=length, req_salt=req_salt)
+    return prefill_chunk_step
+
+
+def make_decode_slots_step(cfg: ModelConfig) -> Callable:
+    """Continuous-batching engine: one decode token across the slot batch
+    with per-slot positions and per-request fault-stream salts."""
+    def decode_slots_step(params, caches, tokens, active, req_salts):
+        return lm.decode_slots(params, cfg, caches, tokens, active,
+                               req_salts=req_salts)
+    return decode_slots_step

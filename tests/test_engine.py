@@ -1,0 +1,283 @@
+"""Continuous-batching engine: batch-invariance contract + scheduler edges.
+
+The acceptance contract of ``repro.launch.engine``:
+
+* **batch invariance** — a request's decoded tokens, logits, and
+  injected-fault streams (via per-request ECC accounting) are bit-identical
+  whether it is served alone or continuously co-batched with other requests,
+  for static and per-read dynamic injection, on the fused and hbm serve
+  paths, on one device and (subprocess) under a forced-8-device "model"
+  mesh. Seeds are keyed by (leaf, request, position) — never slot index or
+  engine step — and dense decode math is row-independent.
+* **scheduler edges** — empty-queue idle steps are no-ops, evicted slots are
+  reused lowest-index-first, prompts longer than the prefill chunk split
+  raggedly without changing results, and a single-slot engine degenerates
+  bit-identically to the lock-step ``lm.prefill``/``lm.decode`` serve path.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import engine as engine_lib
+from repro.launch import serve as serve_lib
+from repro.models import lm
+
+CHUNK = 8
+SLOTS = 4
+MAX_LEN = 24
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    return cfg, params, dkey
+
+
+def _requests(n=4, seed=5, plens=(3, 14), gens=(3, 5)):
+    load = engine_lib.LoadGen(n_requests=n, prompt_lens=plens, gen_lens=gens,
+                              vocab_size=256, seed=seed)
+    return load.requests()
+
+
+def _serving_params(params, dkey, *, inject, serve_path, ber=1e-3):
+    if serve_path == "hbm":
+        out, _ = serve_lib.deploy(params, ber=ber, protect="one4n",
+                                  n_group=8, index=2, key=dkey)
+        return out
+    return serve_lib.deploy_fused(params, ber=ber, protect="one4n",
+                                  n_group=8, index=2, key=dkey,
+                                  inject_mode=inject, field="full")
+
+
+def _run(cfg, sparams, reqs, *, n_slots=SLOTS, chunk=CHUNK,
+         max_len=MAX_LEN, **kw):
+    eng = engine_lib.Engine(cfg, sparams, n_slots=n_slots, max_len=max_len,
+                            chunk=chunk, collect_logits=True, **kw)
+    results, agg = eng.run(reqs)
+    assert sorted(results) == sorted(r.rid for r in reqs)
+    return results, agg
+
+
+@pytest.mark.parametrize("inject,serve_path", [
+    ("static", "fused"), ("dynamic", "fused"), ("static", "hbm")])
+def test_batch_invariance(setup, inject, serve_path):
+    """Solo == co-batched, bitwise: tokens, every logit vector, and the
+    per-request ECC stream accounting."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject=inject,
+                              serve_path=serve_path)
+    reqs = _requests()
+    co, _ = _run(cfg, sparams, reqs)
+    for rid in (0, 2):
+        solo, _ = _run(cfg, sparams, [r for r in reqs if r.rid == rid])
+        assert co[rid].tokens == solo[rid].tokens, (inject, serve_path, rid)
+        assert np.array_equal(co[rid].logits, solo[rid].logits), \
+            (inject, serve_path, rid)
+        assert co[rid].ecc == solo[rid].ecc, (inject, serve_path, rid)
+
+
+def test_invariance_across_slot_assignment(setup):
+    """The slot a request lands on must not enter its fault streams: reverse
+    the submission order (so every request gets a different slot) and demand
+    identical tokens/logits per request."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="dynamic",
+                              serve_path="fused")
+    reqs = _requests()
+    fwd, _ = _run(cfg, sparams, reqs)
+    # same arrival time, reversed tiebreak order -> different slots
+    rev = [engine_lib.Request(rid=r.rid, tokens=r.tokens, max_new=r.max_new,
+                              arrival=float(len(reqs) - r.rid))
+           for r in reqs]
+    bwd, _ = _run(cfg, sparams, rev)
+    moved = [r.rid for r in reqs if fwd[r.rid].slot != bwd[r.rid].slot]
+    assert moved, "reversed order should shuffle slot assignment"
+    for r in reqs:
+        assert fwd[r.rid].tokens == bwd[r.rid].tokens
+        assert np.array_equal(fwd[r.rid].logits, bwd[r.rid].logits)
+
+
+def test_single_slot_degenerate_matches_serve_path(setup):
+    """n_slots=1 engine == the existing lock-step prefill/decode serve path,
+    bitwise, including the chunked prefill's first-token logits."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static",
+                              serve_path="fused")
+    req = _requests(n=1, seed=9, plens=(11, 11), gens=(5, 5))[0]
+    res, _ = _run(cfg, sparams, [req], n_slots=1)
+
+    tokens = jnp.asarray(req.tokens)[None]
+    logits, caches = lm.prefill(sparams, cfg, {"tokens": tokens})
+    plen = req.tokens.size
+    caches = jax.tree_util.tree_map(
+        lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 3)
+                          + [(0, req.max_new), (0, 0), (0, 0)])
+        if a.ndim >= 4 and a.shape[-3] == plen else a, caches)
+    ref_tokens, ref_logits = [], []
+    toks = jnp.argmax(logits, -1)[:, None]
+    ref_tokens.append(int(toks[0, 0]))
+    ref_logits.append(np.asarray(logits)[0])
+    for _ in range(req.max_new - 1):
+        logits, caches = lm.decode(sparams, cfg, caches, toks)
+        toks = jnp.argmax(logits, -1)[:, None]
+        ref_tokens.append(int(toks[0, 0]))
+        ref_logits.append(np.asarray(logits)[0])
+    assert res[req.rid].tokens == ref_tokens
+    assert np.array_equal(res[req.rid].logits, np.stack(ref_logits))
+
+
+def test_prompt_longer_than_chunk(setup):
+    """A prompt spanning several ragged chunks decodes identically to a
+    single-chunk prefill (static image: the read chain has no chunk-shape
+    dependence)."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static",
+                              serve_path="fused")
+    req = _requests(n=1, seed=11, plens=(19, 19), gens=(4, 4))[0]
+    fine, _ = _run(cfg, sparams, [req], chunk=4)       # 19 -> 4+4+4+4+3
+    coarse, _ = _run(cfg, sparams, [req], chunk=32)    # one ragged chunk
+    assert fine[req.rid].tokens == coarse[req.rid].tokens
+    assert np.array_equal(fine[req.rid].logits, coarse[req.rid].logits)
+
+
+def test_empty_queue_idle_step(setup):
+    """Stepping an empty engine is a no-op: idle event, no position drift,
+    and run([]) returns cleanly."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static",
+                              serve_path="fused")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=2, max_len=MAX_LEN,
+                            chunk=CHUNK)
+    before = np.asarray(eng.caches["pos"])
+    ev = eng.step()
+    assert ev["idle"] and not ev["admitted"] and not ev["decoded"]
+    assert np.array_equal(np.asarray(eng.caches["pos"]), before)
+    assert eng.idle_steps == 1 and eng.steps == 0
+    results, agg = eng.run([])
+    assert results == {} and agg["n_requests"] == 0
+
+
+def test_slot_eviction_reuse_ordering(setup):
+    """With more requests than slots, a finished slot frees and the next
+    queued request reuses the lowest free index; everything completes."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static",
+                              serve_path="fused")
+    reqs = [engine_lib.Request(rid=0, tokens=np.arange(4) % 256, max_new=2),
+            engine_lib.Request(rid=1, tokens=np.arange(5) % 256, max_new=6),
+            engine_lib.Request(rid=2, tokens=np.arange(6) % 256, max_new=3)]
+    res, agg = _run(cfg, sparams, reqs, n_slots=2)
+    assert res[0].slot == 0 and res[1].slot == 1
+    # rid 0 (2 tokens) finishes before rid 1 (6 tokens): slot 0 frees first
+    # and rid 2 must land there
+    assert res[2].slot == 0
+    assert [len(res[i].tokens) for i in range(3)] == [2, 6, 3]
+    assert all(r.finish == "length" for r in res.values())
+    assert agg["total_tokens"] == 11
+    for r in res.values():
+        # closed-loop runs gate admission with now=inf — that must never
+        # leak into the latency record or the JSON artifact
+        assert np.isfinite(r.queue_s) and r.queue_s >= 0
+        assert r.finite is True
+        json.dumps(r.to_json(), allow_nan=False)
+
+
+def test_request_exceeding_max_len_rejected(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static",
+                              serve_path="fused")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=1, max_len=16, chunk=CHUNK)
+    big = engine_lib.Request(rid=0, tokens=np.zeros(12, np.int32), max_new=8)
+    with pytest.raises(engine_lib.EngineError, match="exceeds"):
+        eng.run([big])
+
+
+def test_engine_rejects_token_by_token_archs(setup):
+    """Recurrent / rolling-window block kinds cannot chunk-prefill into
+    slots: the engine must refuse them up front."""
+    cfg = get_config("rwkv6-1.6b").reduced()
+    with pytest.raises(ValueError, match="rwkv"):
+        lm.check_engine_kinds(cfg)
+
+
+def test_load_gen_open_loop_poisson():
+    """Arrivals are monotone, lengths within range, and deterministic per
+    seed (the CI soak artifact must be reproducible)."""
+    load = engine_lib.LoadGen(n_requests=16, rate=100.0, prompt_lens=(4, 9),
+                              gen_lens=(2, 5), vocab_size=64, seed=7)
+    a, b = load.requests(), load.requests()
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[-1] > 0
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.tokens, rb.tokens)
+        assert (ra.arrival, ra.max_new) == (rb.arrival, rb.max_new)
+        assert 4 <= ra.tokens.size <= 9 and 2 <= ra.max_new <= 5
+        assert ra.tokens.max() < 64
+
+
+_MESH_INVARIANCE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.distributed import sharding as shlib
+    from repro.launch import engine as engine_lib
+    from repro.launch import serve as serve_lib
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import lm
+
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    dep = serve_lib.make_deployment(params, ber=1e-3, protect="one4n",
+                                   n_group=8, index=2, key=dkey,
+                                   inject_mode="dynamic", field="full")
+    mesh = make_host_mesh(model_axis=8)
+    dep = dep.shard(mesh, axis="model", dim="j")
+    sparams = serve_lib._serving_params(dep, ber=1e-3, key=dkey,
+                                        inject_mode="dynamic", field="full")
+    load = engine_lib.LoadGen(n_requests=3, prompt_lens=(3, 10),
+                              gen_lens=(2, 3), vocab_size=256, seed=5)
+    reqs = load.requests()
+    with shlib.use_mesh(mesh):
+        co, _ = engine_lib.Engine(cfg, sparams, n_slots=3, max_len=16,
+                                  chunk=4, collect_logits=True).run(reqs)
+        solo, _ = engine_lib.Engine(cfg, sparams, n_slots=3, max_len=16,
+                                    chunk=4, collect_logits=True).run(
+            [r for r in reqs if r.rid == 1])
+    print(json.dumps({
+        "tokens_equal": co[1].tokens == solo[1].tokens,
+        "logits_equal": bool(np.array_equal(co[1].logits, solo[1].logits)),
+        "ecc_equal": co[1].ecc == solo[1].ecc,
+        "n_done": len(co),
+        "finite": bool(np.isfinite(co[1].logits).all()),
+    }))
+""")
+
+
+def test_batch_invariance_on_8_device_mesh(tmp_path):
+    """Dynamic-inject fused serving through the shard_map'd kernel on a
+    forced-8-device "model" mesh: solo == co-batched, bitwise."""
+    path = tmp_path / "mesh_engine.py"
+    path.write_text(_MESH_INVARIANCE_SCRIPT)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, str(path)], capture_output=True,
+                         text=True, env=env, cwd=os.getcwd(), timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got == {"tokens_equal": True, "logits_equal": True,
+                   "ecc_equal": True, "n_done": 3, "finite": True}

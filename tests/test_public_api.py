@@ -35,6 +35,10 @@ PUBLIC_API_SNAPSHOT = (
     "cim_linear_store",
     "cim_linear_store_sharded",
     "fault_inject_bits",
+    # serving engine (continuous batching, per-request fault streams)
+    "Engine",
+    "LoadGen",
+    "Request",
 )
 
 
