@@ -18,6 +18,7 @@ Usage (CI smoke, after the benches wrote their artifacts):
   PYTHONPATH=src:. python benchmarks/check_regression.py \\
       --baseline benchmarks/baselines/BENCH_baseline.json \\
       --cim-store artifacts/cim_store_bench.json \\
+      --kernel artifacts/kernel_bench.json \\
       --sweep artifacts/sweep_bench.json \\
       --engine artifacts/engine_bench.json \\
       --tolerance 1.5 --report artifacts/bench_regression_report.json
@@ -61,6 +62,23 @@ def _flatten_cim_store(d: dict) -> dict:
     return out
 
 
+def _flatten_kernel(d: dict) -> dict:
+    out = {}
+    cr = d.get("cim_read") or {}
+    if cr.get("fused_call_us"):
+        # one autotuned fused decode-on-read call at the serving decode-step
+        # shape — absolute wall clock, coarse 2x-tolerance guard
+        out["kernel.cim_read.fused_call_us"] = (LOWER, cr["fused_call_us"])
+    if cr.get("cache_speedup"):
+        # decoded-row cache dispatch vs running the fused kernel: structural
+        # on every backend (a cached matmul vs a full ECC decode), gated.
+        # autotune_speedup / hoist_speedup stay report-only: interpret-mode
+        # XLA CSE already hoists the per-revisit decode, so they hover near
+        # 1.0 off-TPU (see kernel_bench.py module docstring).
+        out["kernel.cim_read.cache_speedup"] = (HIGHER, cr["cache_speedup"])
+    return out
+
+
 def _flatten_sweep(d: dict) -> dict:
     out = {}
     for grid in ("fields", "protection"):
@@ -99,6 +117,7 @@ def collect_metrics(args):
     are only comparable against artifacts of the same kind)."""
     metrics, quick = {}, set()
     for path, flatten in ((args.cim_store, _flatten_cim_store),
+                          (args.kernel, _flatten_kernel),
                           (args.sweep, _flatten_sweep),
                           (args.engine, _flatten_engine)):
         if path:
@@ -148,6 +167,8 @@ def main(argv=None):
     ap.add_argument("--baseline", default="benchmarks/baselines/BENCH_baseline.json")
     ap.add_argument("--cim-store", default=None,
                     help="fresh cim_store_bench.py --json artifact")
+    ap.add_argument("--kernel", default=None,
+                    help="fresh kernel_bench.py --json artifact")
     ap.add_argument("--sweep", default=None,
                     help="fresh sweep_bench.py --json artifact")
     ap.add_argument("--engine", default=None,

@@ -1,38 +1,99 @@
-"""Kernel micro-benchmarks: bfp_matmul + fault_inject vs their jnp oracles.
+"""Kernel micro-benchmarks: cim_read tuning matrix + bfp_matmul/fault_inject.
 
-NOTE on semantics: this container executes Pallas in interpret mode on CPU, so
-``us_per_call`` here measures the *oracle-equivalence harness*, not TPU
+Four cim_read fronts, each timed separately so ``check_regression`` can gate
+them individually:
+
+* **fused_call_us** — one autotuned fused decode-on-read call at the serving
+  decode-step shape (absolute wall clock, coarse 2x-tolerance gate);
+* **autotune_speedup** — autotuned grid (full-K tiles, wide-J columns) vs the
+  legacy fixed 128-cube tiles on the same store (report-only, see below);
+* **hoist_speedup** — decode-hoist VMEM strip reuse on a tall-M call vs the
+  same grid re-decoding every M-revisit (report-only, see below);
+* **cache_speedup** — deployment dispatch through a warmed decoded-row cache
+  vs the fused kernel on the same store (machine-relative, gated).
+
+A tile-shape sweep over ``autotuned_tile_shapes`` plus the legacy cube is
+reported (and written to the ``--json`` artifact for the CI kernel-tuning
+step) but never gated — it exists to audit the autotune policy, not to race
+individual tiles.
+
+NOTE on semantics: this container executes Pallas in interpret mode on CPU,
+so ``us_per_call`` here measures the *oracle-equivalence harness*, not TPU
 performance — TPU-side cost is assessed structurally in §Roofline (the kernel
 reduces HBM weight traffic to 11.6 bits/weight vs 16 for bf16; see
-EXPERIMENTS.md §Perf decode hillclimb)."""
+EXPERIMENTS.md §Perf decode hillclimb). Interpret mode unrolls the grid into
+one XLA graph, whose CSE pass hoists the (identical) per-revisit decode
+subexpressions itself — so ``autotune_speedup``/``hoist_speedup`` hover near
+1.0 here and are reported, not gated: their win is the on-TPU pipeline
+structure (fewer grid steps, one decode fold per plane tile), while their
+*correctness* (bitwise identity hoist-vs-nohoist, autotuned-vs-legacy tiles)
+is what ``tests/test_kernels.py`` locks. ``cache_speedup`` (a cached matmul
+vs running the kernel at all) is structural on every backend and is gated.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core import align
+from benchmarks.common import QUICK, emit
+from repro.core import align, cim
+from repro.core import deployment as dep_lib
 from repro.kernels.bfp_matmul import ops as bfp_ops
 from repro.kernels.bfp_matmul import ref as bfp_ref
+from repro.kernels.cim_read import ops as cr_ops
 from repro.kernels.fault_inject import ops as fi_ops
 from repro.kernels.fault_inject import ref as fi_ref
 
+ITERS = 2 if QUICK else 5
 
-def _time(fn, *args, iters=5):
-    fn(*args)  # warm
-    t0 = time.time()
+
+def _time(fn, *args, iters=ITERS):
+    fn(*args)  # warm (compile) before the timed loop
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6, out
+    return (time.perf_counter() - t0) / iters * 1e6, out
 
 
-def main():
-    rows = []
-    for m, k, n in ((128, 1024, 256), (256, 2048, 512)):
+def _best_pair(fn_a, fn_b, repeats=3):
+    """Best-of timing for two arms with alternating order per repeat, so
+    interpret-mode scheduler drift cancels. Both arms pre-warmed."""
+    fn_a(), fn_b()
+    best_a = best_b = float("inf")
+    for r in range(repeats):
+        arms = [("a", fn_a), ("b", fn_b)]
+        if r % 2:
+            arms.reverse()
+        for name, fn in arms:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            us = (time.perf_counter() - t0) * 1e6
+            if name == "a":
+                best_a = min(best_a, us)
+            else:
+                best_b = min(best_b, us)
+    return best_a, best_b
+
+
+def _store(k, j, protect="one4n", n=8, rw=16, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, j)) * 0.1
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig(n_group=n, index=2))
+    return cim.pack(w_al, cim.CIMConfig(n_group=n, row_weights=rw,
+                                        protect=protect))
+
+
+def bfp_section():
+    rows, res = [], {}
+    shapes = ((128, 1024, 256),) if QUICK else ((128, 1024, 256),
+                                                (256, 2048, 512))
+    for m, k, n in shapes:
         w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
         w_al, _ = align.align_matrix(w, align.AlignmentConfig(8, 2))
         man, exp = bfp_ref.pack_bfp(w_al, 8)
@@ -44,7 +105,15 @@ def main():
         rows.append((f"kernel.bfp_matmul.{m}x{k}x{n}", round(us_k),
                      f"ref_us={us_r:.0f};max_err={err:.1e};"
                      f"weight_bits={bits_per_weight:.1f}vs16"))
-    for shape in ((512, 512), (2048, 1024)):
+        res[f"{m}x{k}x{n}"] = {"kernel_us": us_k, "ref_us": us_r,
+                               "max_err": err}
+    return rows, res
+
+
+def fault_section():
+    rows, res = [], {}
+    shapes = ((512, 512),) if QUICK else ((512, 512), (2048, 1024))
+    for shape in shapes:
         bits = jnp.zeros(shape, jnp.uint16)
         pos = tuple(range(10, 16))
         us_k, out_k = _time(lambda: fi_ops.fault_inject_bits(
@@ -55,7 +124,112 @@ def main():
         exact = bool((np.asarray(out_k) == np.asarray(out_r)).all())
         rows.append((f"kernel.fault_inject.{shape[0]}x{shape[1]}", round(us_k),
                      f"ref_us={us_r:.0f};bit_exact={exact}"))
+        res[f"{shape[0]}x{shape[1]}"] = {"kernel_us": us_k, "ref_us": us_r,
+                                         "bit_exact": exact}
+    return rows, res
+
+
+def cim_read_section():
+    rows = []
+    k, j = (512, 256) if QUICK else (1024, 512)
+    store = _store(k, j)
+
+    # -- front 1: autotuned grid vs legacy fixed 128-cube tiles ------------
+    m = 8                                        # serving decode-step shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    auto_us, fixed_us = _best_pair(
+        lambda: cr_ops.cim_linear_store(x, store),
+        lambda: cr_ops.cim_linear_store(x, store, block_m=128, block_n=128,
+                                        block_k=128, hoist=False))
+    autotune_speedup = fixed_us / auto_us
+    tiles = cr_ops.resolve_tiles(store, m)
+    rows.append((f"kernel.cim_read.fused_call.{m}x{k}x{j}", round(auto_us),
+                 f"fixed128_us={fixed_us:.0f};"
+                 f"autotune_speedup={autotune_speedup:.2f}x;"
+                 f"tiles={tiles[:3]};hoist={tiles[3]}"))
+
+    # -- front 2: decode hoist on a tall-M call ----------------------------
+    m_tall = 256 if QUICK else 512
+    bm = 64                                      # force several M revisits
+    x_tall = jax.random.normal(jax.random.PRNGKey(2), (m_tall, k))
+    hoist_us, nohoist_us = _best_pair(
+        lambda: cr_ops.cim_linear_store(x_tall, store, block_m=bm,
+                                        hoist=True),
+        lambda: cr_ops.cim_linear_store(x_tall, store, block_m=bm,
+                                        hoist=False))
+    hoist_speedup = nohoist_us / hoist_us
+    rows.append((f"kernel.cim_read.hoist.{m_tall}x{k}x{j}", round(hoist_us),
+                 f"nohoist_us={nohoist_us:.0f};"
+                 f"hoist_speedup={hoist_speedup:.2f}x;block_m={bm}"))
+
+    # -- front 3: decoded-row cache dispatch vs the fused kernel -----------
+    cached = cim.build_row_cache(store)
+    cache_us, kernel_us = _best_pair(
+        lambda: dep_lib.dispatch_linear(x, cached),
+        lambda: dep_lib.dispatch_linear(x, store))
+    cache_speedup = kernel_us / cache_us
+    rows.append((f"kernel.cim_read.row_cache.{m}x{k}x{j}", round(cache_us),
+                 f"kernel_us={kernel_us:.0f};"
+                 f"cache_speedup={cache_speedup:.2f}x"))
+
+    # -- tile-shape sweep (report-only; CI kernel-tuning artifact) ---------
+    sweep = []
+    m_sweep = 128
+    x_sweep = jax.random.normal(jax.random.PRNGKey(3), (m_sweep, k))
+    combos = cr_ops.autotuned_tile_shapes(store) + [(128, 128, 128, False)]
+    seen = set()
+    for bm_s, bn_s, bk_s, h in combos:
+        if (bm_s, bn_s, bk_s, h) in seen:
+            continue
+        seen.add((bm_s, bn_s, bk_s, h))
+        us, _ = _time(lambda: cr_ops.cim_linear_store(
+            x_sweep, store, block_m=bm_s, block_n=bn_s, block_k=bk_s,
+            hoist=h))
+        sweep.append({"block_m": bm_s, "block_n": bn_s, "block_k": bk_s,
+                      "hoist": h, "us_per_call": us})
+        rows.append((f"kernel.cim_read.tile.{bm_s}x{bn_s}x{bk_s}"
+                     f"{'h' if h else ''}", round(us),
+                     f"m={m_sweep};store={k}x{j}"))
+    best = min(sweep, key=lambda s: s["us_per_call"])
+    rows.append(("kernel.cim_read.tile_sweep_best", None,
+                 f"{best['block_m']}x{best['block_n']}x{best['block_k']}"
+                 f"{'h' if best['hoist'] else ''} at {best['us_per_call']:.0f}us"))
+
+    return rows, {"store": f"{k}x{j}",
+                  "fused_call_us": auto_us,
+                  "fixed128_us": fixed_us,
+                  "autotune_speedup": autotune_speedup,
+                  "hoist_us": hoist_us, "nohoist_us": nohoist_us,
+                  "hoist_speedup": hoist_speedup,
+                  "cache_us": cache_us, "kernel_us": kernel_us,
+                  "cache_speedup": cache_speedup,
+                  "tile_sweep": sweep,
+                  "note": "interpret-mode wall clock; XLA CSE hoists the "
+                          "per-revisit decode in the unrolled interpret "
+                          "graph, so autotune/hoist speedups are report-only "
+                          "here (TPU pipeline structure); cache_speedup is "
+                          "structural on every backend and gated"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the results as a JSON artifact")
+    args = ap.parse_args(argv)
+    rows, payload = [], {"quick": QUICK}
+    for name, section in (("cim_read", cim_read_section),
+                          ("bfp_matmul", bfp_section),
+                          ("fault_inject", fault_section)):
+        srows, sres = section()
+        rows.extend(srows)
+        payload[name] = sres
+    payload["backend"] = jax.default_backend()
     emit(rows)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
     return rows
 
 

@@ -83,16 +83,20 @@ class CIMStore:
                                           # per_weight: uint16 [K_pad, J_pad]
     shape: Tuple[int, int]                # logical (K, J)
     cfg: CIMConfig
+    cache: Optional[jnp.ndarray] = None   # fp32 [K, J] decoded-row cache
+                                          # (== read(store)[0]); serving-only
+                                          # materialization, NOT part of the
+                                          # SRAM image or its bit accounting.
 
     def tree_flatten(self):
-        children = (self.man, self.sign, self.exp, self.codewords)
+        children = (self.man, self.sign, self.exp, self.codewords, self.cache)
         return children, (self.shape, self.cfg)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        man, sign, exp, codewords = children
+        man, sign, exp, codewords, cache = children
         shape, cfg = aux
-        return cls(man, sign, exp, codewords, shape, cfg)
+        return cls(man, sign, exp, codewords, shape, cfg, cache)
 
     @property
     def stored_bits(self) -> int:
@@ -351,6 +355,27 @@ def read(store: CIMStore):
     return jnp.asarray(w[:k, :j], jnp.float32), stats
 
 
+def build_row_cache(store: CIMStore) -> CIMStore:
+    """Attach the decoded-row cache: ``store.cache = read(store)[0]``.
+
+    The cache is a serving-time materialization of the decoded fp32 matrix;
+    the packed planes stay authoritative (``stored_bits``/``stored_bytes``,
+    ECC stats and flip streams all keep reading the SRAM image). Every
+    store-constructing function (:func:`pack`, :func:`inject_with_seeds`,
+    :func:`inject_sharded`, sharding plumbing) builds stores *without* a
+    cache, so any injection naturally invalidates it — a stale cache cannot
+    survive a fault-image refresh.
+    """
+    return dataclasses.replace(store, cache=read(store)[0])
+
+
+def drop_row_cache(store: CIMStore) -> CIMStore:
+    """Return ``store`` without its decoded-row cache (no-op when absent)."""
+    if store.cache is None:
+        return store
+    return dataclasses.replace(store, cache=None)
+
+
 def read_reference(store: CIMStore):
     """Per-bit oracle for :func:`read`: unpack the packed planes to one-byte-
     per-bit arrays and decode with the per-bit SECDED codec.
@@ -544,9 +569,20 @@ def store_shardings(store: CIMStore, mesh, *, axis: str = "model",
     else:
         specs = {name: P() for name in _plane_dict(store)}
     named = {name: NamedSharding(mesh, spec) for name, spec in specs.items()}
+    cache_sh = None
+    if store.cache is not None:
+        # The decoded cache is logical [K, J]; split it along the same dim as
+        # the planes when it divides evenly, else replicate.
+        sdim = 0 if dim == "k" else 1
+        if (can_shard_store(store, n_sh, dim)
+                and store.cache.shape[sdim] % n_sh == 0):
+            spec = P(*[axis if d == sdim else None for d in range(2)])
+        else:
+            spec = P()
+        cache_sh = NamedSharding(mesh, spec)
     return CIMStore(man=named["man"], sign=named.get("sign"),
                     exp=named.get("exp"), codewords=named.get("cw"),
-                    shape=store.shape, cfg=store.cfg)
+                    shape=store.shape, cfg=store.cfg, cache=cache_sh)
 
 
 def shard_store(store: CIMStore, mesh, *, axis: str = "model",

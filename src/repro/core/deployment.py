@@ -134,6 +134,13 @@ class PolicyRule:
     row_weights: int = 16
     fmt_name: str = "fp16"
     serve_path: str = "fused"        # fused | hbm
+    row_cache: bool = True           # fused static serving: materialize the
+                                     # decoded-row cache at serving_params
+                                     # time (hot full-matrix reads, e.g. the
+                                     # unembed projection). Leaves served by
+                                     # sparse row gathers (embed tables)
+                                     # should opt out — the packed image is
+                                     # the whole point there.
 
     def __post_init__(self):
         where = f"PolicyRule(pattern={self.pattern!r})"
@@ -472,14 +479,25 @@ class CIMDeployment:
     # ------------------------------------------------------------ serving
 
     def serving_params(self, *, dynamic_key=None, ber: float = 0.0,
-                       field: str = "full"):
+                       field: str = "full", row_cache: bool = True):
         """The params pytree handed to the jitted model steps.
 
         Fused rules keep their stores packed; ``serve_path='hbm'`` rules are
         decoded to fp16 up front (stats fold into ``ecc_stats``). With
         ``dynamic_key`` set, the ``_cim`` per-read dynamic-injection runtime
         rides along (dict pytrees only).
+
+        Static fused serving additionally warms the **decoded-row cache** on
+        stores whose rule has ``row_cache=True``: ``store.cache`` is set to
+        the jit-decoded fp32 matrix, and :func:`dispatch_linear` /
+        :func:`dispatch_read_rows` consult it instead of re-decoding per
+        step. The packed planes stay authoritative (ECC stats keep reading
+        the SRAM image), every ``inject`` rebuilds stores cache-less (so a
+        stale cache cannot survive a fault refresh), and dynamic per-request
+        streams bypass the cache entirely — pass ``row_cache=False`` to
+        disable warming outright.
         """
+        static = not (dynamic_key is not None and ber > 0)
         flat, treedef = self._flat()
         out = []
         for leaf, rule in zip(flat, self.rules):
@@ -487,6 +505,10 @@ class CIMDeployment:
                 w, st = cim_lib.read(leaf)
                 self._accumulate(st)
                 out.append(w)
+            elif (cim_lib._is_store(leaf) and rule.serve_path == "fused"
+                  and row_cache and rule.row_cache and static
+                  and leaf.cache is None):
+                out.append(dataclasses.replace(leaf, cache=_read_w_jit(leaf)))
             else:
                 out.append(leaf)
         params = jax.tree_util.tree_unflatten(treedef, out)
@@ -595,6 +617,12 @@ def request_read_seeds(seeds: dict, leaf_salt_: int, req_salt, pos) -> dict:
 # ---------------------------------------------------------------------------
 
 
+@jax.jit
+def _read_w_jit(store):
+    """Jitted full decode of one store (cache warming / fault refresh)."""
+    return cim_lib.read(store)[0]
+
+
 def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
                     dim: str = "j", with_info: bool = False):
     """Route ``x @ store`` by placement and dtype (module dispatch table).
@@ -602,10 +630,14 @@ def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
     With a mesh carrying ``axis`` (default: the ambient mesh's "model" axis),
     the shard_map'd fused kernel runs one program per macro column group —
     degrading internally to GSPMD when the store cannot shard or tile.
-    Otherwise the single-device fused Pallas kernel runs, itself falling back
-    to the packed-jnp reference for ``per_weight`` / non-fp16 stores.
+    Otherwise a warmed decoded-row cache (``serving_params(row_cache=True)``)
+    serves static reads as a plain matmul against ``store.cache`` — bitwise
+    identical to the fused kernel's single-K-tile grids — and the
+    single-device fused Pallas kernel handles everything else, itself falling
+    back to the packed-jnp reference for ``per_weight`` / non-fp16 stores.
     ``scalars`` (``cim_read.ops.make_scalars``) turns on per-read dynamic
-    injection on either route.
+    injection and always bypasses the cache: per-request dynamic streams are
+    keyed per read, never against a materialized image.
     """
     from repro.distributed import sharding as shlib
     from repro.kernels.cim_read import ops as cr_ops
@@ -615,13 +647,25 @@ def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
         return cr_ops.cim_linear_store_sharded(
             x, store, scalars=scalars, mesh=mesh, axis=axis, dim=dim,
             with_info=with_info)
+    if scalars is None and store.cache is not None:
+        b_shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        out = (x2 @ store.cache).reshape(*b_shape, store.shape[1])
+        if with_info:
+            return out, {"used_kernel": False, "sharded": False,
+                         "route": "cached"}
+        return out
     return cr_ops.cim_linear_store(x, store, scalars=scalars,
                                    with_info=with_info)
 
 
 def dispatch_read_rows(store, idx, *, seeds=None, thr_man=0, thr_meta=0):
     """Row-gather route: decode-on-read off the packed image (no sharded
-    variant — gathers are data-local; GSPMD partitions the jnp decode)."""
+    variant — gathers are data-local; GSPMD partitions the jnp decode). A
+    warmed decoded-row cache short-circuits static gathers; dynamic seeds
+    bypass it (per-read streams are never served from a materialization)."""
+    if seeds is None and store.cache is not None:
+        return store.cache[idx]
     return cim_lib.read_rows(store, idx, seeds=seeds, thr_man=thr_man,
                              thr_meta=thr_meta)
 

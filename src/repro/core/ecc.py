@@ -201,14 +201,18 @@ class SecdedCode:
         body[wl] = body[wl] | (overall << sh)
         return bitpack.from_words(body)
 
-    def decode_packed(self, code_words: jnp.ndarray
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Packed decode: [..., code_words] uint32 -> (data words, status).
+    def syndrome_packed(self, code_words: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Syndrome half of :meth:`decode_packed` — the expensive part.
 
-        Bit-exact with :meth:`decode` on the unpacked bits (same syndrome
-        semantics, same status codes 0/1/2).
+        All ``r + 1`` XOR-parity folds against the precomputed per-word
+        column masks happen here (the "per-word column-mask folds" the fused
+        kernel hoists: one syndrome per codeword tile, reused across output
+        revisits). Returns ``(pos, parity, status)``: the 1-based error
+        position ``R[6:0]``, the overall-parity bit ``R[7]``, and the
+        0/1/2 clean/corrected/uncorrectable status.
         """
-        r, n, Wd, Wc, hmask, _, body_mask, _, data_mask, parity_pos0 = \
+        r, n, Wd, Wc, hmask, _, body_mask, _, _, _ = \
             _secded_packed_tables(self.data_bits)
         cw = [code_words[..., w].astype(jnp.uint32) for w in range(Wc)]
         body = [cw[w] & jnp.uint32(body_mask[w]) for w in range(Wc)]
@@ -221,9 +225,23 @@ class SecdedCode:
         parity = bitpack.masked_parity(body, bitpack.word_masks(n, Wc)) \
             ^ overall_bit                                    # R[7]
         clean = (pos == 0) & (parity == 0)
-        single = parity == 1
         double = (parity == 0) & (pos > 0)
+        status = jnp.where(clean, 0, jnp.where(double, 2, 1)).astype(jnp.int32)
+        return pos, parity, status
 
+    def correct_extract_packed(self, code_words: jnp.ndarray, pos: jnp.ndarray,
+                               parity: jnp.ndarray) -> jnp.ndarray:
+        """Correction half of :meth:`decode_packed` — the cheap part.
+
+        Flips the single errored bit located by ``(pos, parity)`` (from
+        :meth:`syndrome_packed`) and removes the parity-bit positions with
+        static funnel shifts. Returns the packed data words.
+        """
+        r, n, Wd, Wc, _, _, body_mask, _, data_mask, parity_pos0 = \
+            _secded_packed_tables(self.data_bits)
+        cw = [code_words[..., w].astype(jnp.uint32) for w in range(Wc)]
+        body = [cw[w] & jnp.uint32(body_mask[w]) for w in range(Wc)]
+        single = parity == 1
         do_flip = single & (pos > 0)
         pos0 = jnp.where(pos > 0, pos - 1, 0)
         flip_word = pos0 // 32
@@ -235,8 +253,21 @@ class SecdedCode:
         for pp in reversed(parity_pos0):          # descending 63, 31, ..., 0
             body = bitpack.delete_bit(body, pp)
         data = [body[w] & jnp.uint32(data_mask[w]) for w in range(Wd)]
-        status = jnp.where(clean, 0, jnp.where(double, 2, 1)).astype(jnp.int32)
-        return bitpack.from_words(data), status
+        return bitpack.from_words(data)
+
+    def decode_packed(self, code_words: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Packed decode: [..., code_words] uint32 -> (data words, status).
+
+        Bit-exact with :meth:`decode` on the unpacked bits (same syndrome
+        semantics, same status codes 0/1/2). Composition of
+        :meth:`syndrome_packed` (column-mask folds) and
+        :meth:`correct_extract_packed` (flip + funnel-shift extraction) —
+        callers that reuse one syndrome across several passes over the same
+        codeword tile call the halves directly.
+        """
+        pos, parity, status = self.syndrome_packed(code_words)
+        return self.correct_extract_packed(code_words, pos, parity), status
 
 
 @dataclasses.dataclass(frozen=True)

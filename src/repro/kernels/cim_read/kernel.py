@@ -8,22 +8,37 @@ weight tile is ECC-decoded and reconstructed to fp32 *in VMEM* and fed
 straight to the MXU; decoded fp16 weight matrices never exist in HBM:
 
     SECDED syndrome/correction  -> XOR-parity folds on uint32 words
-                                   (`ecc.decode_packed`, shared code)
+                                   (`ecc.syndrome_packed` +
+                                   `ecc.correct_extract_packed`, shared code)
     exponent summation array    -> shared-exponent pow2 scale (exact)
     sign processing unit (XOR)  -> sign factor in the reconstruction
     mantissa multiplication     -> MXU dot on the reconstructed tile
+
+The decode follows the hybrid-domain split of arXiv:2502.07212: the
+exponent/SECDED path (``_meta_decode_*`` — all the per-word column-mask
+parity folds, the correction and the sign/exponent expansion) is separated
+from the cheap mantissa path (``_reconstruct_f32``), and both depend only on
+the ``(j, kk)`` plane tile — never on the output-row index ``i``.
 
 Optional **per-read dynamic injection**: with ``dynamic=True`` the kernel
 draws counter-PRNG flip masks over the packed words before decoding —
 bit-identical streams to :func:`repro.core.cim.inject` (same murmur3 hash,
 same per-plane seeds, element index computed in *store* coordinates so
 tile-level padding never shifts the streams). Thresholds and seeds are SMEM
-scalars: sweeping BER or read index does not recompile.
+scalars: sweeping BER or read index does not recompile. The flip masks are
+functions of the ``(j, kk)`` tile coordinates only, so dynamic injection
+hoists exactly like the clean decode.
 
-Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") with output revisiting —
-the [bm, bn] fp32 accumulator stays in VMEM across the K loop. ``bn`` must
-cover whole ``row_weights`` groups and ``bk`` whole exponent blocks (plus
-whole sign words for the raw path).
+Grid: (N/bn, M/bm, K/bk) — **j outermost, i middle, kk innermost** with
+output revisiting; the [bm, bn] fp32 accumulator stays in VMEM across the K
+loop, and plane tiles stream through ``pallas_call``'s pipelined
+(double-buffered) BlockSpec windows across the K loop. With ``hoist=True``
+the decoded [K, bn] strip of the current j-column lives in VMEM scratch:
+each plane tile is decoded once at ``i == 0`` (syndrome folds + correction +
+reconstruction) and the following M-row revisits re-use the decoded strip —
+the i dimension is marked "arbitrary" so the revisits stay sequential on a
+core. ``bn`` must cover whole ``row_weights`` groups and ``bk`` whole
+exponent blocks (plus whole sign words for the raw path).
 """
 from __future__ import annotations
 
@@ -71,11 +86,20 @@ def _flip_mask(elem: jnp.ndarray, seed, threshold, positions) -> jnp.ndarray:
 def _reconstruct_f32(sign_bit, e_full, man, *, man_bits: int, exp_bits: int,
                      bias: int) -> jnp.ndarray:
     """IEEE-faithful fp16-grid reconstruction (incl. subnormal/inf/nan, so a
-    corrupted exponent behaves exactly like the bitcast `read` path)."""
+    corrupted exponent behaves exactly like the bitcast `read` path). This is
+    the cheap mantissa half of the hybrid-domain split — elementwise only, no
+    parity folds."""
     man_f = (man.astype(jnp.uint32) & ((1 << man_bits) - 1)).astype(jnp.float32)
     e = e_full.astype(jnp.int32)
     frac = man_f * (2.0 ** -man_bits)
-    normal = (1.0 + frac) * jnp.exp2((e - bias).astype(jnp.float32))
+    # 2^(e-bias) built by exponent-field bitcast: jnp.exp2 is a polynomial on
+    # some backends and lands a few ulp off exact powers of two for large
+    # (corrupted) exponents, which broke bit-identity with the bitcast `read`
+    # path. e-bias+127 stays inside the normal f32 exponent range for every
+    # 5-bit e, and (1+frac) * 2^s is exact, so normals match fp16 bit for bit.
+    scale = jax.lax.bitcast_convert_type(
+        jnp.left_shift(e - bias + 127, 23).astype(jnp.int32), jnp.float32)
+    normal = (1.0 + frac) * scale
     sub = frac * (2.0 ** (1 - bias))
     emax = (1 << exp_bits) - 1
     special = jnp.where(man_f == 0.0, jnp.float32(jnp.inf), jnp.float32(jnp.nan))
@@ -91,19 +115,44 @@ def _expand_exp(e_block, n_group: int, bk: int, bn: int):
     return e.reshape(bk, bn)
 
 
-def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref, *,
-                           codec: One4NRowCodec, n_group: int, man_bits: int,
-                           exp_bits: int, bias: int, store_g: int,
-                           store_j: int, block_m: int, block_n: int,
-                           block_k: int, dynamic: bool):
-    kk = pl.program_id(2)
+def _meta_decode_one4n(cw, *, codec: One4NRowCodec, n_group: int,
+                       block_k: int, block_n: int):
+    """Exponent/SECDED half of the hybrid-domain split for one4n tiles.
 
-    @pl.when(kk == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+    Runs the per-word column-mask syndrome folds + correction once for the
+    codeword tile (``ecc.SecdedCode.syndrome_packed`` /
+    ``correct_extract_packed`` via the codec) and expands the payload to a
+    per-row exponent [bk, bn] and sign-bit plane [bk, bn].
+    """
+    bkb, bng = cw.shape[0], cw.shape[1]
+    rw = codec.row_weights
+    exp_rows, sign_words, _ = codec.decode_packed(cw)    # [bkb,bng,rw],[...,Sw]
+    e_block = exp_rows.reshape(bkb, bng * rw)            # [bkb, bn]
+    e_full = _expand_exp(e_block, n_group, block_k, block_n)
+    # sign bit of weight (block b, i_n, group g, t) = payload sign bit
+    # i_n*rw + t of that block's sign words
+    per_in = []
+    sw_list = [sign_words[..., v] for v in range(sign_words.shape[-1])]
+    for i_n in range(n_group):
+        sv = bitpack.extract_window(sw_list, i_n * rw, rw)[0]   # [bkb, bng]
+        per_in.append(sv)
+    sv_all = jnp.stack(per_in, axis=1)                   # [bkb, n, bng]
+    t_iota = jax.lax.broadcasted_iota(jnp.uint32,
+                                      sv_all.shape + (rw,), 3)
+    bits = (sv_all[..., None] >> t_iota) & 1
+    sign_full = bits.reshape(block_k, block_n)           # (b, i_n, g, t) order
+    return e_full, sign_full
 
-    man = man_ref[...]                               # [bk, bn] uint16
-    cw = cw_ref[...].astype(jnp.uint32)              # [bkb, bng, S, W]
+
+def _decode_tile_one4n(scalars_ref, man, cw, j, kk, *, codec: One4NRowCodec,
+                       n_group: int, man_bits: int, exp_bits: int, bias: int,
+                       store_g: int, store_j: int, block_n: int, block_k: int,
+                       dynamic: bool):
+    """Decode one (kk, j) plane tile -> reconstructed fp32 [bk, bn].
+
+    Depends only on the (j, kk) tile coordinates (plus SMEM scalars), never
+    on the output-row index — the invariant the decode hoist relies on.
+    """
     bkb, bng = cw.shape[0], cw.shape[1]
     rw = codec.row_weights
 
@@ -114,7 +163,6 @@ def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref, *,
         seed_cw = scalars_ref[SCALAR_SEED_CW]
         off_k = scalars_ref[SCALAR_OFF_K]
         off_j = scalars_ref[SCALAR_OFF_J]
-        j = pl.program_id(1)
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
             + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
@@ -141,42 +189,66 @@ def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref, *,
             planes.append(jnp.stack(words, axis=-1))
         cw = jnp.stack(planes, axis=-2)              # [bkb, bng, S, W]
 
-    exp_rows, sign_words, _ = codec.decode_packed(cw)    # [bkb,bng,rw],[...,Sw]
-    e_block = exp_rows.reshape(bkb, bng * rw)            # [bkb, bn]
-    e_full = _expand_exp(e_block, n_group, block_k, block_n)
-    # sign bit of weight (block b, i_n, group g, t) = payload sign bit
-    # i_n*rw + t of that block's sign words
-    per_in = []
-    sw_list = [sign_words[..., v] for v in range(sign_words.shape[-1])]
-    for i_n in range(n_group):
-        sv = bitpack.extract_window(sw_list, i_n * rw, rw)[0]   # [bkb, bng]
-        per_in.append(sv)
-    sv_all = jnp.stack(per_in, axis=1)                   # [bkb, n, bng]
-    t_iota = jax.lax.broadcasted_iota(jnp.uint32,
-                                      sv_all.shape + (rw,), 3)
-    bits = (sv_all[..., None] >> t_iota) & 1
-    sign_full = bits.reshape(block_k, block_n)           # (b, i_n, g, t) order
-
-    w_tile = _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
-                              exp_bits=exp_bits, bias=bias)
-    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
-                          preferred_element_type=jnp.float32)
+    e_full, sign_full = _meta_decode_one4n(cw, codec=codec, n_group=n_group,
+                                           block_k=block_k, block_n=block_n)
+    return _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
+                            exp_bits=exp_bits, bias=bias)
 
 
-def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
-                         o_ref, *, n_group: int, man_bits: int, exp_bits: int,
-                         bias: int, store_k: int, store_j: int, block_m: int,
-                         block_n: int, block_k: int, dynamic: bool):
-    """protect='none': raw exponent plane + K-packed sign words."""
+def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref,
+                           *scratch, codec: One4NRowCodec, n_group: int,
+                           man_bits: int, exp_bits: int, bias: int,
+                           store_g: int, store_j: int, block_m: int,
+                           block_n: int, block_k: int, dynamic: bool,
+                           hoist: bool):
+    j = pl.program_id(0)
+    i = pl.program_id(1)
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    man = man_ref[...]                               # [bk, bn] uint16
-    e_block = exp_ref[...]                           # [bkb, bn] uint8
-    signw = signw_ref[...].astype(jnp.uint32)        # [bk//32, bn]
+    decode = functools.partial(
+        _decode_tile_one4n, codec=codec, n_group=n_group, man_bits=man_bits,
+        exp_bits=exp_bits, bias=bias, store_g=store_g, store_j=store_j,
+        block_n=block_n, block_k=block_k, dynamic=dynamic)
+
+    if hoist:
+        w_strip = scratch[0]                         # VMEM [n_k*bk, bn] f32
+
+        @pl.when(i == 0)
+        def _decode_once():
+            w_strip[pl.ds(kk * block_k, block_k), :] = decode(
+                scalars_ref, man_ref[...], cw_ref[...].astype(jnp.uint32),
+                j, kk)
+
+        w_tile = w_strip[pl.ds(kk * block_k, block_k), :]
+    else:
+        w_tile = decode(scalars_ref, man_ref[...],
+                        cw_ref[...].astype(jnp.uint32), j, kk)
+
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
+                          preferred_element_type=jnp.float32)
+
+
+def _meta_decode_raw(e_block, signw, *, n_group: int, block_k: int,
+                     block_n: int):
+    """Exponent/sign half for unprotected tiles: expand the shared exponent
+    blocks and unpack the K-packed sign words to a per-row bit plane."""
+    bkw = signw.shape[0]
+    e_full = _expand_exp(e_block, n_group, block_k, block_n)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (bkw, 32, block_n), 1)
+    bits = (signw[:, None, :] >> lane) & 1
+    sign_full = bits.reshape(bkw * 32, block_n)[:block_k]
+    return e_full, sign_full
+
+
+def _decode_tile_raw(scalars_ref, man, e_block, signw, j, kk, *, n_group: int,
+                     man_bits: int, exp_bits: int, bias: int, store_k: int,
+                     store_j: int, block_n: int, block_k: int, dynamic: bool):
+    """protect='none' twin of :func:`_decode_tile_one4n` (same (j, kk)-only
+    dependence)."""
     bkw = signw.shape[0]
 
     if dynamic:
@@ -187,7 +259,6 @@ def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
         seed_sign = scalars_ref[SCALAR_SEED_CW]
         off_k = scalars_ref[SCALAR_OFF_K]
         off_j = scalars_ref[SCALAR_OFF_J]
-        j = pl.program_id(1)
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
             + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
@@ -216,25 +287,70 @@ def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
         valid = jnp.sum(lane_valid << lane, axis=-1)
         signw = signw ^ (smask & valid)
 
-    e_full = _expand_exp(e_block, n_group, block_k, block_n)
-    lane = jax.lax.broadcasted_iota(jnp.uint32, (bkw, 32, block_n), 1)
-    bits = (signw[:, None, :] >> lane) & 1
-    sign_full = bits.reshape(bkw * 32, block_n)[:block_k]
+    e_full, sign_full = _meta_decode_raw(e_block, signw, n_group=n_group,
+                                         block_k=block_k, block_n=block_n)
+    return _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
+                            exp_bits=exp_bits, bias=bias)
 
-    w_tile = _reconstruct_f32(sign_full, e_full, man, man_bits=man_bits,
-                              exp_bits=exp_bits, bias=bias)
+
+def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
+                         o_ref, *scratch, n_group: int, man_bits: int,
+                         exp_bits: int, bias: int, store_k: int, store_j: int,
+                         block_m: int, block_n: int, block_k: int,
+                         dynamic: bool, hoist: bool):
+    """protect='none': raw exponent plane + K-packed sign words."""
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    decode = functools.partial(
+        _decode_tile_raw, n_group=n_group, man_bits=man_bits,
+        exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
+        block_n=block_n, block_k=block_k, dynamic=dynamic)
+
+    if hoist:
+        w_strip = scratch[0]                         # VMEM [n_k*bk, bn] f32
+
+        @pl.when(i == 0)
+        def _decode_once():
+            w_strip[pl.ds(kk * block_k, block_k), :] = decode(
+                scalars_ref, man_ref[...], exp_ref[...],
+                signw_ref[...].astype(jnp.uint32), j, kk)
+
+        w_tile = w_strip[pl.ds(kk * block_k, block_k), :]
+    else:
+        w_tile = decode(scalars_ref, man_ref[...], exp_ref[...],
+                        signw_ref[...].astype(jnp.uint32), j, kk)
+
     o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_tile,
                           preferred_element_type=jnp.float32)
+
+
+def _grid_and_scratch(m, n, k, block_m, block_n, block_k, hoist):
+    """(N/bn, M/bm, K/bk) grid — j outermost so each j-column's decoded strip
+    is built once and revisited by every i — plus the hoist scratch shape."""
+    grid = (n // block_n, m // block_m, k // block_k)
+    scratch = [pltpu.VMEM((k, block_n), jnp.float32)] if hoist else []
+    # i ("arbitrary") keeps the M-revisits of one j-column sequential on a
+    # core, so the strip decoded at i == 0 is still live for i > 0.
+    semantics = ("parallel", "arbitrary", "arbitrary")
+    return grid, scratch, semantics
 
 
 def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
                           n_group: int, man_bits: int, exp_bits: int,
                           bias: int, store_g: int, store_j: int,
                           block_m: int, block_n: int, block_k: int,
-                          dynamic: bool, interpret: bool = True):
+                          dynamic: bool, hoist: bool = False,
+                          interpret: bool = True):
     """x [M, K] float; man uint16 [K, N]; cw uint32 [K//n, N//rw, S, W];
     scalars uint32 [7] (see SCALAR_*) -> [M, N] f32, decode fused into the
-    matmul."""
+    matmul. ``hoist=True`` decodes each (j, kk) plane tile once into VMEM
+    scratch and reuses the strip across the M-row revisits."""
     m, k = x.shape
     k2, n = man.shape
     rw = codec.row_weights
@@ -243,26 +359,27 @@ def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
     assert block_k % n_group == 0 and block_n % rw == 0
 
     s_, w_ = codec.n_segments, codec.codeword_words
-    grid = (m // block_m, n // block_n, k // block_k)
+    grid, scratch, semantics = _grid_and_scratch(m, n, k, block_m, block_n,
+                                                 block_k, hoist)
     kernel = functools.partial(
         _cim_read_kernel_one4n, codec=codec, n_group=n_group,
         man_bits=man_bits, exp_bits=exp_bits, bias=bias, store_g=store_g,
         store_j=store_j, block_m=block_m, block_n=block_n, block_k=block_k,
-        dynamic=dynamic)
+        dynamic=dynamic, hoist=hoist)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, block_k), lambda j, i, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda j, i, kk: (kk, j)),
             pl.BlockSpec((block_k // n_group, block_n // rw, s_, w_),
-                         lambda i, j, kk: (kk, j, 0, 0)),
+                         lambda j, i, kk: (kk, j, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((block_m, block_n), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(scalars, x, man, cw)
 
@@ -270,7 +387,8 @@ def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
 def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
                         man_bits: int, exp_bits: int, bias: int, store_k: int,
                         store_j: int, block_m: int, block_n: int,
-                        block_k: int, dynamic: bool, interpret: bool = True):
+                        block_k: int, dynamic: bool, hoist: bool = False,
+                        interpret: bool = True):
     """protect='none' variant: exp uint8 [K//n, N], signw uint32 [K//32, N];
     scalars uint32 [7] (see SCALAR_*)."""
     m, k = x.shape
@@ -280,24 +398,26 @@ def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     assert block_k % n_group == 0 and block_k % 32 == 0
 
-    grid = (m // block_m, n // block_n, k // block_k)
+    grid, scratch, semantics = _grid_and_scratch(m, n, k, block_m, block_n,
+                                                 block_k, hoist)
     kernel = functools.partial(
         _cim_read_kernel_raw, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
-        block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic)
+        block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
+        hoist=hoist)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_k // n_group, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_k // 32, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, block_k), lambda j, i, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda j, i, kk: (kk, j)),
+            pl.BlockSpec((block_k // n_group, block_n), lambda j, i, kk: (kk, j)),
+            pl.BlockSpec((block_k // 32, block_n), lambda j, i, kk: (kk, j)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((block_m, block_n), lambda j, i, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(scalars, x, man, exp, signw)

@@ -62,32 +62,97 @@ def make_scalars(seeds=None, thr_man=0, thr_meta=0, off_k=0,
 
 @functools.partial(jax.jit, static_argnames=(
     "codec", "n_group", "man_bits", "exp_bits", "bias", "store_g", "store_j",
-    "block_m", "block_n", "block_k", "dynamic", "interpret"))
+    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret"))
 def _one4n_call(x, man, cw, scalars, *, codec, n_group, man_bits, exp_bits,
                 bias, store_g, store_j, block_m, block_n, block_k, dynamic,
-                interpret):
+                hoist, interpret):
     return cim_read_matmul_one4n(
         x, man, cw, scalars, codec=codec, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_g=store_g, store_j=store_j,
         block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
-        interpret=interpret)
+        hoist=hoist, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "n_group", "man_bits", "exp_bits", "bias", "store_k", "store_j",
-    "block_m", "block_n", "block_k", "dynamic", "interpret"))
+    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret"))
 def _raw_call(x, man, exp, signw, scalars, *, n_group, man_bits, exp_bits,
               bias, store_k, store_j, block_m, block_n, block_k, dynamic,
-              interpret):
+              hoist, interpret):
     return cim_read_matmul_raw(
         x, man, exp, signw, scalars, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
         block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
-        interpret=interpret)
+        hoist=hoist, interpret=interpret)
 
 
-def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
-                     block_n: int = 128, block_k: int = 512,
+# Default per-call VMEM budget for tile selection: real TPU cores have
+# ~16 MiB of VMEM; half of it is left for the pipelined plane windows, the
+# activation tile and the accumulator.
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+
+def resolve_tiles(store, m: int, *, block_m=None, block_n=None, block_k=None,
+                  hoist=None, vmem_budget: int = DEFAULT_VMEM_BUDGET):
+    """Grid selection for one store shape -> ``(bm, bn, bk, hoist)``.
+
+    ``None`` block sizes are **autotuned** per store shape; explicit values
+    reproduce the legacy fixed-tile behaviour (snapped to the layout quanta:
+    ``bn`` covers whole row_weights groups, ``bk`` whole exponent blocks and
+    sign words). The autotune policy, validated by ``kernel_bench``:
+
+    * ``bk`` prefers **full K** (one decode pass per plane tile — the
+      K-revisit refold the decode hoist exists to kill simply never happens —
+      and a single-K-step grid keeps the accumulation order of a plain
+      ``x @ w`` matmul, which the bit-identity test matrix relies on),
+      shrinking in layout quanta only when the decoded [bk, bn] strip would
+      blow the VMEM budget;
+    * ``bn`` covers the whole padded J when small (fewer grid columns, one
+      decoded strip per call), capped near 1024 lanes;
+    * ``bm`` covers M up to 128 rows;
+    * ``hoist`` turns on exactly when some output row-block revisits the
+      decoded strip (more than one M block) and the strip fits the budget.
+    """
+    cfg = store.cfg
+    k_pad, j_pad = store.man.shape
+    n, rw = cfg.n_group, cfg.row_weights
+    lcm_k = n if cfg.protect == "one4n" else (n * 32 // math.gcd(n, 32))
+    bn0 = rw * (128 // math.gcd(rw, 128))         # lcm(rw, 128)
+    if block_n is None:
+        bn = bn0 * min(math.ceil(j_pad / bn0), max(1, 1024 // bn0))
+    else:
+        bn = min(bn0 * max(1, block_n // bn0), bn0 * math.ceil(j_pad / bn0))
+    if block_k is None:
+        bk = _round_up(k_pad, lcm_k)
+        while bk > lcm_k and bk * bn * 4 > vmem_budget:
+            bk = max(lcm_k, (bk // 2 // lcm_k) * lcm_k)
+    else:
+        bk = max(lcm_k, (min(block_k, k_pad) // lcm_k) * lcm_k)
+    bm = min(_round_up(block_m if block_m is not None else 128, 8),
+             _round_up(max(m, 1), 8))
+    if hoist is None:
+        k_t = _round_up(k_pad, bk)
+        m_t = _round_up(max(m, 1), bm)
+        hoist = (m_t // bm) > 1 and k_t * bn * 4 <= vmem_budget
+    return bm, bn, bk, bool(hoist)
+
+
+def autotuned_tile_shapes(store, ms=(2, 8, 128, 512)):
+    """The deduped ``(bm, bn, bk, hoist)`` combos :func:`resolve_tiles` picks
+    for a store across representative batch sizes — the tile matrix the
+    parity/stream-identity tests and the ``kernel_bench`` sweep cover."""
+    seen, out = set(), []
+    for m in ms:
+        t = resolve_tiles(store, m)
+        if t not in seen:
+            seen.add(t)
+            out.append(t)
+    return out
+
+
+def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
+                     block_n: int | None = None, block_k: int | None = None,
+                     hoist: bool | None = None,
                      interpret: bool | None = None, use_kernel: bool = True,
                      with_info: bool = False, global_dims=None):
     """Fused linear layer on a packed CIM store: ``x [..., K] -> [..., J]``.
@@ -97,6 +162,10 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
     kernel then draws the exact :func:`repro.core.cim.inject` flip streams
     in-VMEM before decoding, so every read sees fresh faults without a stored
     image update.
+
+    Block sizes default to :func:`resolve_tiles` autotuning (full-K tiles,
+    whole-J columns when they fit, decode hoist when M revisits the strip);
+    pass explicit ``block_m``/``block_n``/``block_k`` to pin a grid.
 
     Operands are zero-padded to tile boundaries (padded activations are zero,
     so padding never changes the result); outputs are sliced back. Returns
@@ -131,13 +200,11 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
     gk_pad, gj_pad = global_dims or (k_pad, j_pad)
     m = x2.shape[0]
 
-    lcm_k = n if cfg.protect == "one4n" else (n * 32 // math.gcd(n, 32))
-    bn = rw * (128 // math.gcd(rw, 128))          # lcm(rw, 128)
-    bn = min(bn * max(1, block_n // bn), bn * math.ceil(j_pad / bn))
+    bm, bn, bk, hoist = resolve_tiles(store, m, block_m=block_m,
+                                      block_n=block_n, block_k=block_k,
+                                      hoist=hoist)
     j_t = _round_up(j_pad, bn)
-    bk = max(lcm_k, (min(block_k, k_pad) // lcm_k) * lcm_k)
     k_t = _round_up(k_pad, bk)
-    bm = min(_round_up(block_m, 8), _round_up(m, 8))
     m_t = _round_up(m, bm)
 
     xp = jnp.pad(x2, ((0, m_t - m), (0, k_t - k_log)))
@@ -146,7 +213,7 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
         scalars = make_scalars()
     common = dict(man_bits=cfg.fmt.man_bits, exp_bits=cfg.fmt.exp_bits,
                   bias=cfg.fmt.bias, block_m=bm, block_n=bn, block_k=bk,
-                  dynamic=dynamic, interpret=interpret)
+                  dynamic=dynamic, hoist=hoist, interpret=interpret)
     if cfg.protect == "one4n":
         cw = store.codewords
         b_t, g_t = k_t // n, j_t // rw
@@ -162,13 +229,18 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int = 128,
         out = _raw_call(xp, man, exp, signw, scalars, n_group=n,
                         store_k=gk_pad, store_j=gj_pad, **common)
     out = out[:m, :j_log].reshape(*b_shape, j_log)
-    return (out, {"used_kernel": True}) if with_info else out
+    if with_info:
+        return out, {"used_kernel": True, "tiles": (bm, bn, bk),
+                     "hoist": hoist}
+    return out
 
 
 def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
                              axis: str = "model", dim: str = "j",
-                             block_m: int = 128, block_n: int = 128,
-                             block_k: int = 512,
+                             block_m: int | None = None,
+                             block_n: int | None = None,
+                             block_k: int | None = None,
+                             hoist: bool | None = None,
                              interpret: bool | None = None,
                              with_info: bool = False):
     """Mesh-sharded fused linear layer: each model-axis shard decodes and
@@ -207,7 +279,7 @@ def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
         and (dim == "j" or k_log == k_pad)   # K shards must tile whole slabs
     if not supported:
         out = cim_linear_store(x, store, scalars=scalars, block_m=block_m,
-                               block_n=block_n, block_k=block_k,
+                               block_n=block_n, block_k=block_k, hoist=hoist,
                                interpret=interpret, with_info=with_info)
         if with_info:
             out, info = out
@@ -239,7 +311,8 @@ def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
             shape=shape, cfg=cfg)
         out = cim_linear_store(x_loc, loc, scalars=sc_i if dynamic else None,
                                block_m=block_m, block_n=block_n,
-                               block_k=block_k, interpret=interpret,
+                               block_k=block_k, hoist=hoist,
+                               interpret=interpret,
                                global_dims=(k_pad, j_pad))
         if dim == "k":
             out = jax.lax.psum(out, axis)

@@ -72,14 +72,21 @@ def serving_policy(*, protect: str, n_group: int, index: int,
     ``fused``: only the big embedding/unembedding matrices deploy (block
     weights are scan-stacked >2-D and were never deployable) and stay
     packed. ``hbm``: every 2-D float matrix deploys, to be decoded once.
+
+    Row-cache economics: the **unembed** projection needs the full decoded
+    matrix on every decode step, so static serving warms its decoded-row
+    cache once per fault image (a fault refresh only re-decodes this one
+    leaf). The **embed** table opts out — each step gathers a handful of
+    rows, decoded on read straight off the packed image, so a full decode
+    (the thing the HBM path pays on every refresh) never happens for it.
     """
     rule = dep_lib.PolicyRule(pattern="*", protect=protect, n_group=n_group,
                               index=index, field=field, serve_path=serve_path)
     if serve_path == "hbm":
         return dep_lib.ReliabilityPolicy(rules=(), default=rule)
     return dep_lib.ReliabilityPolicy(
-        rules=(dataclasses.replace(rule, pattern="embed"),
-               dataclasses.replace(rule, pattern="unembed")),
+        rules=(dataclasses.replace(rule, pattern="embed", row_cache=False),
+               dataclasses.replace(rule, pattern="unembed", row_cache=True)),
         default=dep_lib.PolicyRule(deploy=False))
 
 
@@ -147,7 +154,7 @@ def place_on_mesh(params, mesh: Mesh):
 
 
 def _fused_report(stores):
-    n_stores, packed_bytes, fp16_bytes = 0, 0, 0
+    n_stores, n_cached, packed_bytes, fp16_bytes, cache_bytes = 0, 0, 0, 0, 0
     corrected = uncorrectable = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(
             stores, is_leaf=cim_lib._is_store)[0]:
@@ -155,13 +162,18 @@ def _fused_report(stores):
             n_stores += 1
             packed_bytes += leaf.stored_bytes
             fp16_bytes += 2 * leaf.shape[0] * leaf.shape[1]
+            if leaf.cache is not None:
+                n_cached += 1
+                cache_bytes += int(leaf.cache.size) * leaf.cache.dtype.itemsize
             st = cim_lib.store_stats(leaf)
             corrected += int(st["corrected"])
             uncorrectable += int(st["uncorrectable"])
     print(f"CIM fused serve: {n_stores} weight matrices stay packed "
           f"({packed_bytes / 1e6:.2f} MB image vs {fp16_bytes / 1e6:.2f} MB "
-          f"decoded fp16 — never materialized); "
-          f"corrected={corrected} uncorrectable={uncorrectable}")
+          f"decoded fp16); {n_cached} hot leaves carry a decoded-row cache "
+          f"({cache_bytes / 1e6:.2f} MB, rebuilt per fault image), the rest "
+          f"decode on read; corrected={corrected} "
+          f"uncorrectable={uncorrectable}")
 
 
 def _parse_range(spec: str) -> tuple:

@@ -5,13 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import align, bitops
+from repro.core import align, bitops, cim
 from repro.kernels.bfp_matmul import ops as bfp_ops
 from repro.kernels.bfp_matmul import ref as bfp_ref
 from repro.kernels.bfp_matmul.kernel import bfp_matmul_pallas
+from repro.kernels.cim_read import ops as cr_ops
+from repro.kernels.cim_read.ref import cim_read_ref
 from repro.kernels.fault_inject import ops as fi_ops
 from repro.kernels.fault_inject import ref as fi_ref
 from repro.kernels.fault_inject.kernel import fault_inject_pallas
+from repro.kernels.fault_inject.ops import ber_to_threshold
 
 
 def _packed(key, k, n, n_group=8, scale=0.05):
@@ -133,6 +136,142 @@ def test_fault_inject_rate_and_confinement():
     flips = np.unpackbits(xor.view(np.uint8)).sum()
     n_bits = bits.size * len(positions)
     assert abs(flips / n_bits - 0.05) < 5 * np.sqrt(0.05 * 0.95 / n_bits)
+
+
+# ------------------------------------------------- cim_read fused decode-read
+#
+# Bit-identity contract of the fused decode-on-read matmul: for EVERY grid the
+# autotuner can pick (plus legacy fixed tiles), the kernel's output equals the
+# packed decode path `cim.read` — itself locked to the per-bit
+# `cim.read_reference` oracle — bitwise. One-hot activations make the matmul
+# itself exact (each output element is one weight accumulated with zeros), so
+# the probe checks decoded WEIGHT BITS through the kernel, not a tolerance.
+
+
+def _cim_store(k, j, protect="one4n", n_group=8, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, j)) * 0.1
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig(n_group=n_group,
+                                                          index=2))
+    return cim.pack(w_al, cim.CIMConfig(n_group=n_group, protect=protect))
+
+
+def _tile_matrix(store):
+    """Every autotuned combo for this store plus legacy fixed tiles."""
+    tiles = list(cr_ops.autotuned_tile_shapes(store))
+    for fixed in ((64, 128, 128, False), (128, 256, 256, True)):
+        if fixed not in tiles:
+            tiles.append(fixed)
+    return tiles
+
+
+def _bits(a):
+    return np.asarray(jax.lax.bitcast_convert_type(
+        jnp.asarray(a, jnp.float32), jnp.uint32))
+
+
+@pytest.mark.parametrize("protect", ["one4n", "none"])
+def test_cim_read_parity_matrix(protect):
+    """Kernel output is bit-identical to ``cim.read`` (locked to the per-bit
+    ``read_reference`` oracle) for every autotuned + legacy tile shape."""
+    store = _cim_store(512, 256, protect=protect)
+    w_ref, _ = cim.read(store)
+    w_oracle, _ = cim.read_reference(store)
+    assert (_bits(w_ref) == _bits(w_oracle)).all()
+    probe = jnp.eye(512, dtype=jnp.float32)          # one weight per output
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 512))
+    want, _ = cim_read_ref(x, store)
+    k_pad = store.man.shape[0]
+    for bm, bn, bk, hoist in _tile_matrix(store):
+        out, info = cr_ops.cim_linear_store(
+            probe, store, block_m=bm, block_n=bn, block_k=bk, hoist=hoist,
+            with_info=True)
+        assert info["used_kernel"], (bm, bn, bk)
+        assert (_bits(out) == _bits(w_ref)).all(), (bm, bn, bk, hoist)
+        dense = cr_ops.cim_linear_store(x, store, block_m=bm, block_n=bn,
+                                        block_k=bk, hoist=hoist)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        if bk >= k_pad:
+            # single-K-tile grids keep a plain matmul's accumulation order
+            assert (_bits(dense) == _bits(x @ w_ref)).all(), (bm, bn, bk)
+
+
+@pytest.mark.parametrize("m,k,j", [(5, 72, 48), (3, 264, 130), (130, 520, 112)])
+@pytest.mark.parametrize("protect", ["one4n", "none"])
+def test_cim_read_ragged_shapes(m, k, j, protect):
+    """Ragged M/K/J is tile-padded on the kernel path (used_kernel proves it),
+    bit-identical to the packed decode; autotuned grids are single-K-tile so
+    the dense product is exactly ``x @ read(store)``."""
+    store = _cim_store(k, j, protect=protect, seed=m + k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    out, info = cr_ops.cim_linear_store(x, store, with_info=True)
+    assert info["used_kernel"]
+    w_ref, _ = cim.read(store)
+    # the kernel contracts over the TILE-padded K (zero x against zero
+    # decoded rows); XLA's blocked dot reduction depends on the contraction
+    # length, so the bitwise oracle is the matmul on the padded operands
+    _, _, bk, _ = cr_ops.resolve_tiles(store, m)
+    k_pad = store.man.shape[0]
+    k_t = -(-k_pad // bk) * bk
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, k_t - k)))
+    wp = jnp.pad(w_ref, ((0, k_t - k), (0, 0)))
+    assert (_bits(out) == _bits(xp @ wp)).all()
+    want, _ = cim_read_ref(x, store)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_group", [4, 8, 16])
+@pytest.mark.parametrize("protect", ["one4n", "none"])
+def test_cim_read_n_group_matrix(n_group, protect):
+    store = _cim_store(128, 64, protect=protect, n_group=n_group,
+                       seed=n_group)
+    w_ref, _ = cim.read(store)
+    w_oracle, _ = cim.read_reference(store)
+    assert (_bits(w_ref) == _bits(w_oracle)).all()
+    probe = jnp.eye(128, dtype=jnp.float32)
+    out, info = cr_ops.cim_linear_store(probe, store, with_info=True)
+    assert info["used_kernel"]
+    assert (_bits(out) == _bits(w_ref)).all()
+
+
+def test_cim_read_hoist_bitwise_invariant():
+    """The decode-hoisted grid (VMEM strip decoded once at i==0, reused on
+    every M-revisit) returns the same bits as re-decoding per revisit AND as
+    the plain matmul on the decoded matrix."""
+    store = _cim_store(512, 256)
+    x = jax.random.normal(jax.random.PRNGKey(2), (256, 512))
+    hoisted = cr_ops.cim_linear_store(x, store, block_m=64, hoist=True)
+    rescan = cr_ops.cim_linear_store(x, store, block_m=64, hoist=False)
+    assert (_bits(hoisted) == _bits(rescan)).all()
+    w_ref, _ = cim.read(store)
+    assert (_bits(hoisted) == _bits(x @ w_ref)).all()
+
+
+@pytest.mark.parametrize("protect", ["one4n", "none"])
+def test_cim_read_dynamic_stream_identity(protect):
+    """Per-read dynamic injection draws flip streams bit-identical to the
+    host ``cim.inject_with_seeds`` for the same key: dynamic kernel output ==
+    static kernel output on the pre-injected image, for every autotuned +
+    legacy tile shape (same grid -> same accumulation order -> bitwise)."""
+    store = _cim_store(256, 128, protect=protect)
+    key = jax.random.PRNGKey(7)
+    seeds = cim.plane_seeds(key)
+    thr = ber_to_threshold(0.003)
+    host = cim.inject_with_seeds(store, seeds, thr, thr)
+    w_host, _ = cim.read(host)
+    scalars = cr_ops.make_scalars(seeds, thr, thr)
+    x = jax.random.normal(jax.random.PRNGKey(8), (16, 256))
+    k_pad = store.man.shape[0]
+    for bm, bn, bk, hoist in _tile_matrix(store):
+        dyn = cr_ops.cim_linear_store(x, store, scalars=scalars, block_m=bm,
+                                      block_n=bn, block_k=bk, hoist=hoist)
+        static = cr_ops.cim_linear_store(x, host, block_m=bm, block_n=bn,
+                                         block_k=bk, hoist=hoist)
+        assert (_bits(dyn) == _bits(static)).all(), (bm, bn, bk, hoist)
+        if bk >= k_pad:
+            assert (_bits(dyn) == _bits(x.astype(jnp.float32)
+                                        @ w_host)).all(), (bm, bn, bk)
 
 
 def test_fault_inject_fp16_field_semantics():

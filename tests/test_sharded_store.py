@@ -111,6 +111,77 @@ def test_sharded_inject_and_linear_bit_identical(tmp_path):
     assert result["checked"] >= 14   # 3 protects x 2 meshes x 2 dims + linear
 
 
+_TILE_STREAM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import align, cim
+    from repro.kernels.cim_read import ops as cr_ops
+    from repro.kernels.fault_inject.ops import ber_to_threshold
+
+    def bits(a):
+        return np.asarray(jax.lax.bitcast_convert_type(
+            jnp.asarray(a, jnp.float32), jnp.uint32))
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 0.1
+    w_al, _ = align.align_matrix(w, align.AlignmentConfig(8, 2))
+    store = cim.pack(w_al, cim.CIMConfig(protect="one4n"))
+    key = jax.random.PRNGKey(11)
+    seeds = cim.plane_seeds(key)
+    thr = ber_to_threshold(0.003)
+    sc = cr_ops.make_scalars(seeds, thr, thr)
+    host = cim.inject_with_seeds(store, seeds, thr, thr)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 256))
+    mesh = jax.make_mesh((8,), ("model",))
+    checked = []
+    # every autotuned tile combo, both shard layouts: the per-shard kernels
+    # must draw flip streams at GLOBAL store coordinates (SCALAR_OFF_K/J
+    # offsets), so the sharded dynamic read equals the sharded static read
+    # of the host-injected image for the same key — bitwise
+    for bm, bn, bk, hoist in cr_ops.autotuned_tile_shapes(store):
+        for dim in ("j", "k"):
+            st = cim.shard_store(store, mesh, dim=dim)
+            st_host = cim.shard_store(host, mesh, dim=dim)
+            dyn, info = cr_ops.cim_linear_store_sharded(
+                x, st, scalars=sc, mesh=mesh, dim=dim, block_m=bm,
+                block_n=bn, block_k=bk, hoist=hoist, with_info=True)
+            assert info["sharded"], (dim, bm, bn, bk)
+            static = cr_ops.cim_linear_store_sharded(
+                x, st_host, mesh=mesh, dim=dim, block_m=bm, block_n=bn,
+                block_k=bk, hoist=hoist)
+            assert (bits(dyn) == bits(static)).all(), (dim, bm, bn, bk)
+            checked.append([dim, bm, bn, bk, hoist])
+    # cross-check against the single-device dynamic kernel (same key): the
+    # 'j' layout splits pure column groups, so it stays bitwise; 'k' psums
+    # partial products and is checked to fp32 tolerance
+    ref_d = np.asarray(cr_ops.cim_linear_store(x, store, scalars=sc))
+    for dim in ("j", "k"):
+        st = cim.shard_store(store, mesh, dim=dim)
+        out = np.asarray(cr_ops.cim_linear_store_sharded(
+            x, st, scalars=sc, mesh=mesh, dim=dim))
+        if dim == "j":
+            assert (bits(out) == bits(ref_d)).all()
+        else:
+            np.testing.assert_allclose(out, ref_d, rtol=1e-5, atol=1e-5)
+        checked.append([dim, "vs_1dev"])
+    print(json.dumps({"checked": len(checked),
+                      "n_tiles": len(cr_ops.autotuned_tile_shapes(store))}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_dynamic_stream_identity_every_tile(tmp_path):
+    """Satellite contract: on a forced-8-device "model" mesh, the shard_map'd
+    kernel's per-read dynamic flip streams equal ``cim.inject_with_seeds``
+    (static == dynamic for the same key) for EVERY autotuned tile shape and
+    both shard layouts."""
+    result = _run(tmp_path, "tile_stream.py", _TILE_STREAM_SCRIPT)
+    assert result["n_tiles"] >= 2, result
+    assert result["checked"] >= 2 * result["n_tiles"] + 2, result
+
+
 _SERVE_EQUIV_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
