@@ -103,6 +103,17 @@ def _flatten_engine(d: dict) -> dict:
         out["engine.decode_s_per_tok"] = (LOWER, 1.0 / eng["decode_tok_s"])
     if eng.get("ttft_s_mean"):
         out["engine.ttft_s_mean"] = (LOWER, eng["ttft_s_mean"])
+    fleet = d.get("fleet") or {}
+    if fleet.get("fleet_scaling_tok_s"):
+        # 1 -> 2 replica aggregate tok/s (virtual, disjoint-device
+        # projection): data-parallel fan-out must keep scaling
+        out["engine.fleet_scaling_tok_s"] = \
+            (HIGHER, fleet["fleet_scaling_tok_s"])
+    if fleet.get("prefix_hit_ttft_ratio"):
+        # warm-trie / cold-trie admission latency on prefix-hit requests:
+        # KV reuse must keep beating recomputation
+        out["engine.prefix_hit_ttft_ratio"] = \
+            (LOWER, fleet["prefix_hit_ttft_ratio"])
     return out
 
 
@@ -134,7 +145,12 @@ def compare(baseline: dict, fresh: dict, tolerance: float):
     """-> (failures, lines). A fresh metric absent from the baseline is
     reported but never fails (forward compatibility for new benches); a
     BASELINE metric missing from the fresh artifacts fails — a bench that
-    silently stops emitting a gated number must not turn the gate green."""
+    silently stops emitting a gated number must not turn the gate green.
+
+    A baseline entry may carry a hard ``"bound"`` on top of the tolerance
+    check: an absolute floor for HIGHER metrics / ceiling for LOWER ones
+    that no tolerance relaxes (acceptance criteria like "fleet scaling
+    >= 1.7x" gate on the literal number, not a drifting baseline)."""
     failures, lines = [], []
     base_metrics = baseline.get("metrics", {})
     for name in sorted(set(base_metrics) - set(fresh)):
@@ -147,14 +163,21 @@ def compare(baseline: dict, fresh: dict, tolerance: float):
             lines.append(f"  NEW  {name} = {value:.4g} (no baseline)")
             continue
         bval = base["value"]
+        hard = base.get("bound")
         if direction == HIGHER:
             bound = bval / tolerance
+            if hard is not None:
+                bound = max(bound, hard)
             ok = value >= bound
-            verdict = f">= {bound:.4g} (baseline {bval:.4g} / tol)"
+            verdict = f">= {bound:.4g} (baseline {bval:.4g} / tol" + \
+                (f", hard floor {hard:.4g})" if hard is not None else ")")
         else:
             bound = bval * 2 * tolerance
+            if hard is not None:
+                bound = min(bound, hard)
             ok = value <= bound
-            verdict = f"<= {bound:.4g} (baseline {bval:.4g} * 2*tol)"
+            verdict = f"<= {bound:.4g} (baseline {bval:.4g} * 2*tol" + \
+                (f", hard ceiling {hard:.4g})" if hard is not None else ")")
         tag = "ok  " if ok else "FAIL"
         lines.append(f"  {tag} {name} = {value:.4g}  want {verdict}")
         if not ok:
@@ -189,9 +212,19 @@ def main(argv=None):
         return 2
 
     if args.write_baseline:
+        # carry hard bounds over from the existing baseline: refreshing
+        # values must not silently drop an acceptance-criterion gate
+        bounds = {}
+        if os.path.exists(args.baseline):
+            for name, entry in _load(args.baseline).get("metrics", {}).items():
+                if "bound" in entry:
+                    bounds[name] = entry["bound"]
         payload = {"tolerance_default": args.tolerance,
                    "quick": quick,
-                   "metrics": {name: {"direction": direction, "value": value}
+                   "metrics": {name: dict({"direction": direction,
+                                           "value": value},
+                                          **({"bound": bounds[name]}
+                                             if name in bounds else {}))
                                for name, (direction, value)
                                in sorted(fresh.items())}}
         os.makedirs(os.path.dirname(args.write_baseline) or ".",

@@ -11,14 +11,29 @@ deployment, static injection at BER 1e-3):
    time, same code path), the baseline a lock-step launcher is stuck at
    when request lengths are ragged.
 
+Two fleet arms ride along (``repro.launch.fleet``):
+
+3. **fleet scaling** — the same closed burst through 1-replica and
+   2-replica fleets (prefix cache off, ECC off): gated
+   ``engine.fleet_scaling_tok_s`` = 2-replica / 1-replica ``tok_s_virtual``
+   (the disjoint-device projection — this container steps replicas
+   sequentially on shared cores, so real wall cannot show the overlap a
+   fleet gets; see the ``fleet.py`` module doc). Hard bound: >= 1.7x.
+4. **prefix reuse** — a shared-prefix load served twice on one replica,
+   trie cold vs trie warm, all requests slotted at once (TTFT isolates
+   prefill cost): gated ``engine.prefix_hit_ttft_ratio`` = warm / cold mean
+   TTFT over the prefix-hit requests. Hard bound: <= 0.6x.
+
 Gated metrics (``benchmarks/check_regression.py --engine``):
 
 * ``engine.continuous_vs_sequential_tok_s`` — aggregate decode tok/s ratio,
   machine-relative (the continuous-batching win must not erode);
 * ``engine.decode_s_per_tok`` / ``engine.ttft_s_mean`` — absolute
-  wall-clock guards (coarse 2x bound, runner-dependent).
+  wall-clock guards (coarse 2x bound, runner-dependent);
+* ``engine.fleet_scaling_tok_s`` / ``engine.prefix_hit_ttft_ratio`` — the
+  fleet wins above, with hard ``bound`` floors/ceilings in the baseline.
 
-Both arms run once unmeasured to absorb jit compiles (TTFT would otherwise
+Every arm runs once unmeasured to absorb jit compiles (TTFT would otherwise
 be compile time, not scheduling latency).
 
 Run:  PYTHONPATH=src:. python benchmarks/engine_bench.py --json out.json
@@ -35,6 +50,7 @@ import jax
 from benchmarks.common import QUICK
 from repro.configs import get_config
 from repro.launch import engine as engine_lib
+from repro.launch import fleet as fleet_lib
 from repro.launch import serve as serve_lib
 from repro.models import lm
 
@@ -44,6 +60,10 @@ CHUNK = 8
 PROMPTS = (8, 24)
 GENS = (8, 16)
 BER = 1e-3
+PREFIX_REQS = 8 if not QUICK else 6
+PREFIX_LEN = 24            # 3 full shared chunks; per-request tail runs cold
+FLEET_REQS = 32 if not QUICK else 12
+FLEET_SLOTS = 2            # keep per-replica decode batches full at half load
 
 
 def _setup():
@@ -71,6 +91,62 @@ def _arm(cfg, sparams, load, n_slots: int) -> dict:
     return run()
 
 
+def _fleet_arm(cfg, sparams) -> dict:
+    """Same closed burst through 1- and 2-replica fleets; the gated ratio is
+    over ``tok_s_virtual`` (disjoint-device projection — replicas share this
+    host's cores, see the module doc). Narrow ``FLEET_SLOTS`` decode batches
+    keep both arms' slots full, so the ratio measures replica fan-out rather
+    than the 2-replica arm's emptier batch tails."""
+    load = engine_lib.LoadGen(n_requests=FLEET_REQS, prompt_lens=PROMPTS,
+                              gen_lens=GENS, vocab_size=cfg.vocab_size,
+                              seed=2)
+
+    def run(n):
+        fl = fleet_lib.Fleet.from_serving_params(
+            cfg, sparams, n_replicas=n, prefix_cache=False,
+            n_slots=FLEET_SLOTS, max_len=load.max_len(), chunk=CHUNK,
+            ecc_accounting=False)
+        _, agg = fl.run(load.requests())
+        return agg
+
+    run(1)         # warm (jit cache is shared across replica counts)
+    f1, f2 = run(1), run(2)
+    scaling = f2["tok_s_virtual"] / max(f1["tok_s_virtual"], 1e-9)
+    return {"fleet1": f1, "fleet2": f2, "fleet_scaling_tok_s": scaling}
+
+
+def _prefix_arm(cfg, sparams) -> dict:
+    """Shared-prefix load served trie-off then trie-on; the gated ratio is
+    mean per-request admission latency (TTFT net of time spent admitting
+    earlier requests in the same burst) over the prefix-hit rids."""
+    pload = engine_lib.LoadGen(n_requests=PREFIX_REQS, prompt_lens=(4, 8),
+                               gen_lens=(2, 4), vocab_size=cfg.vocab_size,
+                               seed=1, prefix_len=PREFIX_LEN)
+    reqs = pload.requests()
+
+    def run(pc):
+        eng = engine_lib.Engine(cfg, sparams, n_slots=PREFIX_REQS,
+                                max_len=pload.max_len(), chunk=CHUNK,
+                                ecc_accounting=False, prefix_cache=pc)
+        return eng.run(reqs)
+
+    run(None), run(True)           # warm (extract/inject shapes too)
+    cold, _ = run(None)
+    warm, wagg = run(True)
+    hits = sorted(rid for rid, r in warm.items() if r.prefix_tokens > 0)
+    assert hits, "prefix arm produced no trie hits"
+
+    def mean_admit(res):
+        return sum(res[r].ttft_s - res[r].queue_s for r in hits) / len(hits)
+
+    cold_s, warm_s = mean_admit(cold), mean_admit(warm)
+    return {"requests": PREFIX_REQS, "prefix_len": PREFIX_LEN,
+            "chunk": CHUNK, "hits": len(hits),
+            "prefix_tokens_reused": wagg["prefix_tokens"],
+            "admit_cold_s": cold_s, "admit_warm_s": warm_s,
+            "prefix_hit_ttft_ratio": warm_s / max(cold_s, 1e-9)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, help="write metrics JSON")
@@ -89,12 +165,29 @@ def main(argv=None):
     print(f"continuous-batching speedup: {ratio:.2f}x over "
           f"{eng['n_requests']} requests / {eng['total_tokens']} tokens")
 
+    fleet = _fleet_arm(cfg, sparams)
+    print(f"fleet scaling 1->2 replicas: "
+          f"{fleet['fleet1']['tok_s_virtual']:.1f} -> "
+          f"{fleet['fleet2']['tok_s_virtual']:.1f} tok/s virtual "
+          f"({fleet['fleet_scaling_tok_s']:.2f}x, routed "
+          f"{fleet['fleet2']['requests_by_replica']})")
+
+    prefix = _prefix_arm(cfg, sparams)
+    fleet["prefix"] = prefix
+    fleet["prefix_hit_ttft_ratio"] = prefix["prefix_hit_ttft_ratio"]
+    print(f"prefix reuse ({prefix['hits']} hit requests, "
+          f"{prefix['prefix_len']}-token shared prefix): admit "
+          f"{prefix['admit_cold_s']*1e3:.1f} -> "
+          f"{prefix['admit_warm_s']*1e3:.1f} ms "
+          f"({prefix['prefix_hit_ttft_ratio']:.2f}x)")
+
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         payload = {"quick": QUICK,
                    "n_requests": N_REQUESTS, "slots": SLOTS, "chunk": CHUNK,
                    "engine": eng, "sequential": seq,
-                   "continuous_vs_sequential_tok_s": ratio}
+                   "continuous_vs_sequential_tok_s": ratio,
+                   "fleet": fleet}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

@@ -37,7 +37,10 @@ from repro.kernels.cim_read.ops import (cim_linear_store,  # noqa: F401
 from repro.kernels.fault_inject.ops import (ber_to_threshold,  # noqa: F401
                                             fault_inject_bits)
 # serving engine (continuous batching over a deployment, per-request streams)
-from repro.launch.engine import Engine, LoadGen, Request  # noqa: F401
+from repro.launch.engine import (Engine, LoadGen,  # noqa: F401
+                                 PrefixCache, Request)
+# fleet serving (data-parallel replicas behind the SLO-aware router)
+from repro.launch.fleet import Fleet  # noqa: F401
 
 __all__ = [
     "__version__",
@@ -68,5 +71,8 @@ __all__ = [
     # serving engine
     "Engine",
     "LoadGen",
+    "PrefixCache",
     "Request",
+    # fleet serving
+    "Fleet",
 ]

@@ -62,6 +62,7 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import align as align_lib
 from repro.core import cim as cim_lib
@@ -571,6 +572,20 @@ def place_stores(stores, mesh, *, axis: str = "model", dim: str = "j"):
 # identical whether the request is served alone or continuously co-batched,
 # and on any engine slot. With no request salt the chain degrades to the
 # PR-2 single-stream serving contract (fold leaf, fold pos).
+#
+# Two salt families fill the ``request`` link, both REPLICA-INVARIANT (they
+# derive from globally-assigned request ids or prompt content, never from a
+# slot index, replica name, mesh, or engine step — the fleet router's bitwise
+# replica-invariance contract rests on this):
+#
+#   * ``request_salt(rid)`` — decode (generation) reads: each request draws
+#     its own soft-error streams while generating;
+#   * ``prefix_salt(tokens)`` — prompt-prefill reads: the salt is a hash of
+#     the token *content* up through the chunk being prefilled, so two
+#     requests sharing a prompt prefix draw bit-identical fault streams over
+#     it. That is what makes prefix/KV-cache reuse exact under per-request
+#     dynamic injection: a cached prefix chunk's KV equals what a cold
+#     prefill of the same tokens would compute, to the bit.
 # ---------------------------------------------------------------------------
 
 # distinct per-leaf salts: each CIM-deployed matrix is its own macro and must
@@ -578,6 +593,7 @@ def place_stores(stores, mesh, *, axis: str = "model", dim: str = "j"):
 CIM_LEAF_SALTS = {"embed": 0x1001, "unembed": 0x2002}
 
 _REQUEST_SALT_CONST = 0x7FEED5A1
+_PREFIX_SALT_CONST = 0x5EEDC0DE
 
 
 def leaf_salt(path: str) -> int:
@@ -596,6 +612,23 @@ def request_salt(request_id: int):
     """uint32 counter-PRNG salt of a serving request id (engine slots fold it
     into every CIM read seed — slot index never enters the chain)."""
     return cim_lib.fold_seed(jnp.uint32(_REQUEST_SALT_CONST), request_id)
+
+
+def prefix_salt(tokens) -> int:
+    """Content salt of a prompt prefix: deterministic uint32 FNV-1a over the
+    token ids (as little-endian uint32 words), seeded off its own constant so
+    prefix streams never alias the ``request_salt`` family.
+
+    The serving engine salts every prompt-prefill CIM read with the salt of
+    the tokens *up through that chunk* — a pure function of prompt content,
+    independent of request id, slot, replica, and arrival order. Cold
+    prefill is therefore deterministic in content, and a prefix-cache hit
+    (reusing another request's prefilled KV for the same tokens) is bitwise
+    identical to recomputing."""
+    h = (0x811C9DC5 ^ _PREFIX_SALT_CONST) & 0xFFFFFFFF
+    for b in np.asarray(tokens, np.uint32).tobytes():
+        h = ((h ^ b) * 0x01000193) & 0xFFFFFFFF
+    return h
 
 
 def request_read_seeds(seeds: dict, leaf_salt_: int, req_salt, pos) -> dict:

@@ -24,20 +24,34 @@ class HostState:
 
 
 class ElasticCoordinator:
-    """Tracks host liveness and proposes mesh reconfigurations."""
+    """Tracks host liveness and proposes mesh reconfigurations.
+
+    A fresh heartbeat from a host previously marked failed RE-ADMITS it (the
+    fleet router's drain/re-admit cycle): ``heartbeat`` flips it back to
+    healthy and records it for ``drain_recovered`` so the router can resume
+    admission. ``mark_failed`` forces the failure decision without waiting
+    out the timeout (deterministic drains in tests and simulated outages).
+    """
 
     def __init__(self, hosts: List[str], model_axis: int,
                  heartbeat_timeout: float = 60.0, clock=time.monotonic):
+        assert model_axis >= 1, f"model_axis must be >= 1, got {model_axis}"
         self.clock = clock
         self.timeout = heartbeat_timeout
         self.model_axis = model_axis
         self.hosts: Dict[str, HostState] = {
             h: HostState(last_beat=self.clock()) for h in hosts}
         self.generation = 0
+        self._recovered: List[str] = []
 
     def heartbeat(self, host: str) -> None:
-        if host in self.hosts:
-            self.hosts[host].last_beat = self.clock()
+        if host not in self.hosts:
+            return
+        st = self.hosts[host]
+        st.last_beat = self.clock()
+        if not st.healthy:          # back from the dead: re-admit
+            st.healthy = True
+            self._recovered.append(host)
 
     def check(self) -> List[str]:
         """Mark hosts that missed the deadline; returns newly-failed hosts."""
@@ -49,6 +63,20 @@ class ElasticCoordinator:
                 failed.append(name)
         return failed
 
+    def mark_failed(self, host: str) -> bool:
+        """Force-fail a host (simulated outage / operator drain). Returns
+        True if the host was healthy before."""
+        st = self.hosts.get(host)
+        if st is None or not st.healthy:
+            return False
+        st.healthy = False
+        return True
+
+    def drain_recovered(self) -> List[str]:
+        """Hosts that heartbeat back to life since the last call."""
+        out, self._recovered = self._recovered, []
+        return out
+
     @property
     def healthy_hosts(self) -> List[str]:
         return [h for h, st in self.hosts.items() if st.healthy]
@@ -59,16 +87,23 @@ class ElasticCoordinator:
         The model axis is fixed (TP degree is architectural); the data axis
         shrinks to the largest power of two that the remaining devices can
         fill — a 1000-node fleet losing 3 hosts drops at most half its DP
-        width, and usually nothing (spares fill in first on real fleets)."""
+        width, and usually nothing (spares fill in first on real fleets).
+        Returns 0 when the survivors cannot fill even one model group (no
+        survivors, or model_axis exceeds the surviving device count) — the
+        run cannot continue and the caller must hold for re-admission."""
+        assert devices_per_host >= 1, devices_per_host
         devices = len(self.healthy_hosts) * devices_per_host
         usable = devices // self.model_axis
+        if usable < 1:
+            return 0
         dp = 1
         while dp * 2 <= usable:
             dp *= 2
         return dp
 
     def reconfigure(self, devices_per_host: int):
-        """-> (new generation id, new data axis extent)."""
+        """-> (new generation id, new data axis extent). A data axis of 0
+        means no viable mesh exists over the survivors."""
         self.generation += 1
         return self.generation, self.propose_data_axis(devices_per_host)
 

@@ -19,13 +19,38 @@ slots over the :class:`~repro.core.deployment.CIMDeployment` dispatch path:
 **Batch-invariance contract.** Every CIM read folds its dynamic-injection
 seeds per (leaf salt, request salt, request-local position) — never per slot
 index or engine step (:func:`repro.core.deployment.request_read_seeds`).
-Dense decode math is row-independent, so a request's decoded tokens, logits
-and injected-fault streams are bit-identical whether it is served alone or
-continuously co-batched (``tests/test_engine.py``). The engine therefore
-refuses block kinds whose decode couples slots or cannot chunk
-(``lm.check_engine_kinds``); MoE is admitted with a warning — its
-capacity-based dispatch couples co-batched tokens, which voids the bitwise
-guarantee (fault-stream keying stays per-request).
+Prompt-prefill reads salt by prompt *content*
+(:func:`repro.core.deployment.prefix_salt` of the tokens up through the
+chunk); decode reads salt by request id
+(:func:`repro.core.deployment.request_salt`). Dense decode math is
+row-independent, so a request's decoded tokens, logits and injected-fault
+streams are bit-identical whether it is served alone or continuously
+co-batched (``tests/test_engine.py``). The engine therefore refuses block
+kinds whose decode couples slots or cannot chunk (``lm.check_engine_kinds``);
+MoE is admitted with a warning — its capacity-based dispatch couples
+co-batched tokens, which voids the bitwise guarantee (fault-stream keying
+stays per-request).
+
+**Prefix/KV-cache reuse.** With a :class:`PrefixCache` attached, admission
+walks the prompt's full leading chunks through a hash-consed token-chunk
+trie: a hit injects the cached KV rows into the slot
+(:func:`repro.models.lm.inject_kv_chunk`) instead of re-running
+``prefill_chunk``, and replays the chunk's ECC accounting from the same
+(leaf, content-salt, position) counter-PRNG chain cold prefill would have
+drawn — tokens, logits, fault streams and ECC counts stay bitwise identical
+to a cold prefill, only TTFT drops. The final chunk always runs cold (its
+logits emit the first token). Any image or runtime change must go through
+:meth:`Engine.refresh_params`, which invalidates the trie (the
+invalidation-on-inject contract: cached KV embeds the faults of the image it
+was prefilled against).
+
+**Fleet hooks.** ``repro.launch.fleet`` runs N engines as data-parallel
+replicas behind an SLO-aware router: :meth:`Engine.drain` hands back queued
+and in-flight requests for re-admission elsewhere (re-serving from scratch
+reproduces the same tokens — streams key on content/request/position, never
+on the attempt), :attr:`Engine.depth` feeds the router's queue-depth
+scoring, and :meth:`Engine.start` aligns the engine clock to the fleet's so
+latency accounting shares one origin.
 
 **Accounting.** Per request: queue wait, TTFT, decode seconds, tok/s, and
 ECC activity — every CIM read is charged the macro's corrected/uncorrectable
@@ -42,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -52,6 +77,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import cim as cim_lib
 from repro.core import deployment as dep_lib
+from repro.distributed import sharding as shlib
 from repro.models import lm
 from repro.training import steps as steps_lib
 
@@ -60,18 +86,25 @@ class EngineError(RuntimeError):
     """Non-finite logits or an inconsistent scheduler state."""
 
 
-# one jitted (prefill_chunk, decode_slots) pair per ModelConfig: every Engine
-# instance over the same arch shares the jit cache, so a fresh engine (e.g. a
-# solo-request invariance replay) costs zero recompiles at matched shapes
-_STEP_CACHE: Dict[ModelConfig, tuple] = {}
+# one jitted (prefill_chunk, decode_slots, extract_kv, inject_kv) set per
+# (ModelConfig, ambient mesh): every Engine instance over the same arch AND
+# mesh shares the jit cache, so a fresh engine (e.g. a solo-request
+# invariance replay, or every replica of a single-device fleet) costs zero
+# recompiles at matched shapes. The mesh is part of the key because
+# ``sharding.shard`` bakes the CONCRETE mesh (device ids included) into the
+# trace — replicas on disjoint device blocks must not share executables
+_STEP_CACHE: Dict[tuple, tuple] = {}
 
 
 def _jitted_steps(cfg: ModelConfig) -> tuple:
-    if cfg not in _STEP_CACHE:
-        _STEP_CACHE[cfg] = (
+    key = (cfg, shlib.get_mesh())
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = (
             jax.jit(steps_lib.make_prefill_chunk_step(cfg)),
-            jax.jit(steps_lib.make_decode_slots_step(cfg)))
-    return _STEP_CACHE[cfg]
+            jax.jit(steps_lib.make_decode_slots_step(cfg)),
+            jax.jit(steps_lib.make_extract_kv_step(cfg), static_argnums=3),
+            jax.jit(steps_lib.make_inject_kv_step(cfg)))
+    return _STEP_CACHE[key]
 
 
 @dataclasses.dataclass
@@ -104,6 +137,9 @@ class RequestResult:
     ecc: Dict[str, int]                # reads / corrected / uncorrectable
     finite: bool = True                # every served logit vector was finite
     logits: Optional[np.ndarray] = None   # [n_tokens, V] when collected
+    replica: str = ""                  # fleet: name of the serving replica
+    prefix_tokens: int = 0             # prompt tokens reused from the trie
+    salt: int = 0                      # uint32 request salt (decode streams)
 
     def to_json(self) -> dict:
         tok_s = len(self.tokens) / self.decode_s if self.decode_s > 0 else 0.0
@@ -112,7 +148,114 @@ class RequestResult:
                 "queue_s": self.queue_s, "ttft_s": self.ttft_s,
                 "decode_s": self.decode_s, "tok_s": tok_s, "slot": self.slot,
                 "ecc": {k: int(v) for k, v in self.ecc.items()},
-                "finite": self.finite}
+                "finite": self.finite, "replica": self.replica,
+                "prefix_hit": self.prefix_tokens > 0,
+                "prefix_tokens": self.prefix_tokens, "salt": self.salt}
+
+
+@dataclasses.dataclass
+class _PrefixNode:
+    """One full prefill chunk in the trie: (parent, chunk tokens) -> KV."""
+
+    nid: int
+    key: tuple                         # (parent nid, chunk tokens bytes)
+    salt: int                          # content salt its fault streams used
+    kv: object                         # KV rows pytree (lm.extract_kv_chunk)
+    tokens: int                        # chunk length
+
+
+class PrefixCache:
+    """Hash-consed token-chunk trie of prefilled KV chunks (one per replica).
+
+    A node is one FULL prefill chunk keyed by ``(parent node id, chunk token
+    bytes)`` — the path from the root spells a prompt prefix in chunk steps,
+    and identical chunks under the same parent share one node (hash-consing:
+    inserting an existing chunk returns the existing node). Admission walks
+    the trie over the prompt's full leading chunks; each hit injects the
+    node's KV rows instead of recomputing them.
+
+    Reuse is exact: a node's KV was prefilled under the content salt of its
+    token prefix (``deployment.prefix_salt``), which is what a cold prefill
+    of the same tokens would use — bitwise, including per-read dynamic
+    injection. The cache is therefore ONLY valid for the image/runtime it
+    was filled against; :meth:`Engine.refresh_params` calls
+    :meth:`invalidate` on any change (the invalidation-on-inject contract).
+
+    Capacity is bounded at ``max_chunks`` nodes with least-recently-used
+    eviction restricted to LEAF chunks — a parent is always at least as
+    reachable as its children, so evicting interior nodes would orphan KV a
+    hot descendant still spells a path through.
+    """
+
+    def __init__(self, max_chunks: int = 256):
+        assert max_chunks >= 1, max_chunks
+        self.max_chunks = max_chunks
+        self._nodes: Dict[tuple, _PrefixNode] = {}
+        self._children: Dict[int, set] = {}
+        self._lru: "OrderedDict[tuple, None]" = OrderedDict()
+        self._next_id = 1
+        self.hits = self.misses = self.inserts = self.evictions = 0
+        self.invalidations = 0
+
+    @staticmethod
+    def _key(parent: Optional[_PrefixNode], tokens) -> tuple:
+        pid = 0 if parent is None else parent.nid
+        return (pid, np.asarray(tokens, np.int32).tobytes())
+
+    def lookup(self, parent: Optional[_PrefixNode], tokens):
+        node = self._nodes.get(self._key(parent, tokens))
+        if node is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._lru.move_to_end(node.key)
+        return node
+
+    def insert(self, parent: Optional[_PrefixNode], tokens, kv,
+               salt) -> _PrefixNode:
+        key = self._key(parent, tokens)
+        node = self._nodes.get(key)
+        if node is not None:            # hash-consed: one copy per chunk
+            self._lru.move_to_end(key)
+            return node
+        node = _PrefixNode(nid=self._next_id, key=key, salt=int(salt),
+                           kv=kv, tokens=int(np.asarray(tokens).size))
+        self._next_id += 1
+        self._nodes[key] = node
+        self._children.setdefault(key[0], set()).add(key)
+        self._lru[key] = None
+        self.inserts += 1
+        while len(self._nodes) > self.max_chunks and self._evict_leaf():
+            pass
+        return node
+
+    def _evict_leaf(self) -> bool:
+        for key in self._lru:           # oldest first
+            if not self._children.get(self._nodes[key].nid):
+                node = self._nodes.pop(key)
+                self._children.get(key[0], set()).discard(key)
+                self._children.pop(node.nid, None)
+                del self._lru[key]
+                self.evictions += 1
+                return True
+        return False
+
+    def invalidate(self) -> None:
+        """Drop every cached chunk (stale against a new image/runtime)."""
+        self._nodes.clear()
+        self._children.clear()
+        self._lru.clear()
+        self.invalidations += 1
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def stats(self) -> dict:
+        return {"chunks": len(self._nodes),
+                "tokens": sum(n.tokens for n in self._nodes.values()),
+                "hits": self.hits, "misses": self.misses,
+                "inserts": self.inserts, "evictions": self.evictions,
+                "invalidations": self.invalidations}
 
 
 @dataclasses.dataclass
@@ -122,9 +265,12 @@ class _Slot:
     max_new: int
     submit_t: float
     admit_t: float
+    req: Optional[Request] = None      # original request (fleet requeue)
     ttft_s: float = 0.0
     decode_s: float = 0.0
     finite: bool = True
+    prefix_tokens: int = 0
+    salt: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
     ecc: Dict[str, int] = dataclasses.field(
@@ -140,6 +286,12 @@ class LoadGen:
     closed "all at once" burst the tests and benches use; a finite rate
     draws exponential inter-arrival gaps (open loop: arrivals never wait for
     service).
+
+    ``prefix_len > 0`` prepends one shared token prefix (drawn once from the
+    same seed) to every prompt — the system-prompt workload that exercises
+    the prefix cache. The schedule is a pure function of the config: the same
+    ``LoadGen`` yields bit-identical requests whether they are then fed to
+    one engine or fanned out across a fleet.
     """
 
     n_requests: int = 32
@@ -148,6 +300,7 @@ class LoadGen:
     gen_lens: Tuple[int, int] = (4, 16)
     vocab_size: int = 256
     seed: int = 0
+    prefix_len: int = 0                # shared leading tokens (0 = none)
 
     def requests(self) -> List[Request]:
         rng = np.random.default_rng(self.seed)
@@ -156,18 +309,24 @@ class LoadGen:
         else:
             arrivals = np.cumsum(rng.exponential(1.0 / self.rate,
                                                  self.n_requests))
+        # drawn before the per-request loop so prefix_len=0 reproduces the
+        # historical schedules exactly (no extra rng consumption)
+        prefix = (rng.integers(0, self.vocab_size, self.prefix_len)
+                  if self.prefix_len > 0 else None)
         out = []
         for i in range(self.n_requests):
             plen = int(rng.integers(self.prompt_lens[0],
                                     self.prompt_lens[1] + 1))
             gen = int(rng.integers(self.gen_lens[0], self.gen_lens[1] + 1))
             toks = rng.integers(0, self.vocab_size, plen)
+            if prefix is not None:
+                toks = np.concatenate([prefix, toks])
             out.append(Request(rid=i, tokens=toks, max_new=gen,
                                arrival=float(arrivals[i])))
         return out
 
     def max_len(self) -> int:
-        return self.prompt_lens[1] + self.gen_lens[1] + 1
+        return self.prefix_len + self.prompt_lens[1] + self.gen_lens[1] + 1
 
 
 class Engine:
@@ -175,27 +334,37 @@ class Engine:
 
     ``params`` is whatever :meth:`CIMDeployment.serving_params` produced —
     packed stores (fused), decoded fp16 (hbm), or plain weights, plus the
-    optional ``_cim`` dynamic-injection runtime. Three jitted programs total:
+    optional ``_cim`` dynamic-injection runtime. Four jitted programs total:
     one full-chunk prefill, one ragged-chunk prefill per distinct tail
-    length, one slot decode.
+    length, one slot decode, and the KV extract/inject pair the prefix cache
+    rides on.
+
+    ``prefix_cache`` attaches a :class:`PrefixCache` (pass your own, or
+    ``True`` for a default-sized one). ``replica`` names this engine in
+    fleet artifacts (``RequestResult.replica``).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 64, chunk: int = 16,
                  collect_logits: bool = False, ecc_accounting: bool = True,
-                 check_finite: bool = True):
+                 check_finite: bool = True, prefix_cache=None,
+                 replica: str = ""):
         lm.check_engine_kinds(cfg)
         assert n_slots >= 1 and chunk >= 1 and max_len >= 2, \
             (n_slots, chunk, max_len)
         self.cfg = cfg
         self.params = params
+        self.replica = replica
         # a chunk never writes past the cache ceiling (an overflowing padded
         # dynamic_update_slice would clamp backwards over real prompt rows)
         self.n_slots, self.max_len, self.chunk = n_slots, max_len, \
             min(chunk, max_len)
         self.collect_logits = collect_logits
         self.check_finite = check_finite
-        self._prefill, self._decode = _jitted_steps(cfg)
+        self._prefill, self._decode, self._extract, self._inject = \
+            _jitted_steps(cfg)
+        self.prefix_cache: Optional[PrefixCache] = \
+            PrefixCache() if prefix_cache is True else prefix_cache
         self.caches = lm.init_caches(cfg, n_slots, max_len)
         self.caches["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self.slots: List[Optional[_Slot]] = [None] * n_slots
@@ -205,8 +374,10 @@ class Engine:
         self.results: Dict[int, RequestResult] = {}
         self.steps = 0
         self.idle_steps = 0
+        self.requeues = 0
         self._decode_wall = 0.0
         self._decoded_tokens = 0
+        self._ecc_accounting = ecc_accounting
         self._runtime = params.get("_cim") if isinstance(params, dict) \
             else None
         self._ecc_fns = self._build_ecc_fns() if ecc_accounting else []
@@ -276,34 +447,67 @@ class Engine:
 
     def _admit(self, req: Request, slot_idx: int, submit_t: float) -> None:
         """Chunk-prefill the request's prompt into ``slot_idx`` and emit its
-        first token."""
+        first token, reusing trie-cached KV chunks where they match.
+
+        Prefill fault streams key on prompt *content*
+        (:func:`repro.core.deployment.prefix_salt` of the tokens up through
+        the chunk), so a cached chunk's KV — and its replayed ECC charges —
+        are bitwise what a cold prefill of the same tokens would produce.
+        The final chunk always runs cold: its logits emit the first token.
+        """
         plen = req.tokens.size
         if plen + req.max_new > self.max_len:
             raise EngineError(
                 f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
                 f"exceeds the engine's max_len {self.max_len}")
-        salt = np.uint32(dep_lib.request_salt(req.rid))
+        rsalt = np.uint32(dep_lib.request_salt(req.rid))
         # admit_t comes from the wall clock, never the admission gate `now`
         # (a closed-loop run gates with now=inf — that must not leak into
         # queue_s or the JSON artifact)
         slot = _Slot(rid=req.rid, prompt_len=plen, max_new=req.max_new,
-                     submit_t=submit_t, admit_t=self._clock())
-        logits = None
+                     submit_t=submit_t, admit_t=self._clock(), req=req,
+                     salt=int(rsalt))
+        # walk the trie over the prompt's full LEADING chunks (never the
+        # final one — its logits are the first token, so it must run);
+        # `prefill_chunk` masks off the explicit pos argument and the
+        # always-cold final chunk leaves caches['pos'][slot] = plen, so
+        # injection only has to land the KV rows
+        starts = list(range(0, plen, self.chunk))
+        node = None
         pos = 0
-        for c0 in range(0, plen, self.chunk):
+        if self.prefix_cache is not None:
+            for c0 in starts[:-1]:
+                seg = req.tokens[c0:c0 + self.chunk]
+                hit = self.prefix_cache.lookup(node, seg)
+                if hit is None:
+                    break
+                self.caches = self._inject(
+                    self.caches, jnp.int32(slot_idx), jnp.int32(c0), hit.kv)
+                # replay the ECC accounting of the read this chunk's cold
+                # prefill would have issued — same salt, same read index
+                self._charge_reads(slot, np.uint32(hit.salt), c0)
+                node = hit
+                pos = c0 + self.chunk
+        slot.prefix_tokens = pos
+        logits = None
+        for c0 in range(pos, plen, self.chunk):
             seg = req.tokens[c0:c0 + self.chunk]
             length = seg.size
+            csalt = np.uint32(dep_lib.prefix_salt(req.tokens[:c0 + length]))
             # the ragged tail pads only to what still fits under max_len
             # (padding row writes must not clamp back over prompt rows);
             # pad length never enters the fault-stream chain
             pad_to = min(self.chunk, self.max_len - c0)
-            seg = np.pad(seg, (0, pad_to - length))
+            padded = np.pad(seg, (0, pad_to - length))
             logits, self.caches = self._prefill(
-                self.params, self.caches, jnp.asarray(seg),
-                jnp.int32(slot_idx), jnp.int32(pos), jnp.int32(length),
-                jnp.uint32(salt))
-            self._charge_reads(slot, salt, pos)
-            pos += length
+                self.params, self.caches, jnp.asarray(padded),
+                jnp.int32(slot_idx), jnp.int32(c0), jnp.int32(length),
+                jnp.uint32(csalt))
+            self._charge_reads(slot, csalt, c0)
+            if self.prefix_cache is not None and length == self.chunk:
+                kv = self._extract(self.caches, jnp.int32(slot_idx),
+                                   jnp.int32(c0), self.chunk)
+                node = self.prefix_cache.insert(node, seg, kv, csalt)
         logits = np.asarray(logits)
         self._check(logits, slot)
         tok = int(np.argmax(logits))
@@ -313,7 +517,7 @@ class Engine:
         slot.ttft_s = self._clock() - submit_t
         self.slots[slot_idx] = slot
         self._tokens[slot_idx, 0] = tok
-        self._salts[slot_idx] = salt
+        self._salts[slot_idx] = rsalt
 
     def _evict(self, slot_idx: int, finish: str) -> None:
         slot = self.slots[slot_idx]
@@ -322,7 +526,9 @@ class Engine:
             finish=finish, queue_s=slot.admit_t - slot.submit_t,
             ttft_s=slot.ttft_s, decode_s=slot.decode_s, slot=slot_idx,
             ecc=slot.ecc, finite=slot.finite,
-            logits=np.stack(slot.logits) if slot.logits else None)
+            logits=np.stack(slot.logits) if slot.logits else None,
+            replica=self.replica, prefix_tokens=slot.prefix_tokens,
+            salt=slot.salt)
         self.results[slot.rid] = res
         self.slots[slot_idx] = None
         # reset the slot's position so the next admission prefills from 0;
@@ -340,6 +546,63 @@ class Engine:
 
     def _clock(self) -> float:
         return time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------ fleet hooks
+
+    @property
+    def depth(self) -> int:
+        """Queued + in-flight request count (the router's load signal)."""
+        return len(self.queue) + int(self.active.sum())
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool(self.active.any())
+
+    def start(self, t0: Optional[float] = None) -> None:
+        """Pin the engine clock origin (fleet replicas share the router's
+        ``t0`` so queue/TTFT accounting has one time base)."""
+        self._t0 = time.perf_counter() if t0 is None else t0
+
+    def drain(self) -> List[Request]:
+        """Abandon all work and hand the requests back, arrival order.
+
+        In-flight requests are dropped mid-generation and returned whole —
+        re-serving one from scratch reproduces the exact tokens, logits and
+        fault streams of an uninterrupted run, because every stream keys on
+        content/request/position, never on the attempt or the slot. Queued
+        requests ride along. Slots and cache positions reset; the prefix
+        trie survives (its KV is a pure function of the image, not of which
+        requests ran).
+        """
+        back: List[Request] = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            assert slot.req is not None, slot.rid
+            back.append(slot.req)
+            self.slots[i] = None
+            self.caches["pos"] = self.caches["pos"].at[i].set(0)
+        back.extend(req for req, _ in self.queue)
+        self.queue.clear()
+        self.requeues += len(back)
+        back.sort(key=lambda r: (r.arrival, r.rid))
+        return back
+
+    def refresh_params(self, params) -> None:
+        """Swap in a new deployed image/runtime (engine must be idle).
+
+        The invalidation-on-inject contract: cached prefix KV embeds the
+        faults of the image it was prefilled against, so ANY params change
+        drops the trie before the next admission can hit it.
+        """
+        if self.busy:
+            raise EngineError("refresh_params on a busy engine: drain first")
+        self.params = params
+        self._runtime = params.get("_cim") if isinstance(params, dict) \
+            else None
+        self._ecc_fns = self._build_ecc_fns() if self._ecc_accounting else []
+        if self.prefix_cache is not None:
+            self.prefix_cache.invalidate()
 
     # ------------------------------------------------------------ stepping
 
@@ -436,6 +699,7 @@ class Engine:
         total_tok = sum(len(r.tokens) for r in res)
         wall = self._clock() if hasattr(self, "_t0") else 0.0
         return {
+            "replica": self.replica,
             "n_requests": len(res),
             "n_slots": self.n_slots,
             "total_tokens": total_tok,
@@ -450,6 +714,11 @@ class Engine:
             "ttft_s_p95": float(np.percentile(ttfts, 95)),
             "slot_occupancy": (self._decoded_tokens
                                / max(self.steps * self.n_slots, 1)),
+            "requeues": self.requeues,
+            "prefix_hits": sum(1 for r in res if r.prefix_tokens > 0),
+            "prefix_tokens": sum(r.prefix_tokens for r in res),
+            "prefix_cache": (self.prefix_cache.stats()
+                             if self.prefix_cache is not None else None),
             "ecc": {k: int(sum(r.ecc[k] for r in res))
                     for k in ("reads", "corrected", "uncorrectable")},
         }

@@ -238,6 +238,99 @@ def _serve_engine(args, cfg, params, mesh):
     return results, agg
 
 
+def _serve_fleet(args, cfg, params):
+    """Frontend onto :class:`repro.launch.fleet.Fleet`: one deployed image,
+    ``--fleet N`` data-parallel engine replicas behind the SLO router.
+
+    ``params`` must be UNSHARDED — the fleet spools it once and places it on
+    each replica's own mesh (``--mesh DxM`` is the per-replica shape over
+    disjoint device blocks). ``--probe RID`` re-serves one request through a
+    fresh single-replica fleet off the same spool and asserts its tokens and
+    ECC stream match the routed run bitwise (the live replica-invariance
+    probe).
+    """
+    from repro.launch import engine as engine_lib
+    from repro.launch import fleet as fleet_lib
+
+    load = engine_lib.LoadGen(
+        n_requests=args.requests,
+        rate=args.rate if args.rate > 0 else float("inf"),
+        prompt_lens=_parse_range(args.prompt_range),
+        gen_lens=_parse_range(args.gen_range),
+        vocab_size=cfg.vocab_size, seed=args.seed,
+        prefix_len=args.shared_prefix)
+    max_len = args.max_len or load.max_len()
+    meshes = fleet_lib.make_fleet_meshes(args.mesh, args.fleet) \
+        if args.mesh else None
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, params, n_replicas=args.fleet, meshes=meshes,
+        prefix_cache=not args.no_prefix_cache, n_slots=args.slots,
+        max_len=max_len, chunk=args.chunk,
+        ecc_accounting=not args.no_ecc_accounting)
+    requests = load.requests()
+    results, agg = fl.run(requests, open_loop=args.rate > 0)
+
+    incomplete = [r.rid for r in requests if r.rid not in results]
+    assert not incomplete, f"fleet dropped requests: {incomplete}"
+    by_rep = " ".join(f"{k}={v}" for k, v in
+                      sorted(agg["requests_by_replica"].items()))
+    print(f"fleet: {agg['n_requests']} requests over "
+          f"{agg['n_replicas']} replicas x {args.slots} slots "
+          f"(chunk {args.chunk}, max_len {max_len}); routed {by_rep}")
+    print(f"fleet: {agg['tok_s']:.1f} tok/s wall, "
+          f"{agg['tok_s_virtual']:.1f} tok/s virtual "
+          f"(busy wall {agg['busy_wall_s']:.2f}s of {agg['wall_s']:.2f}s); "
+          f"TTFT mean {agg['ttft_s_mean']*1e3:.0f} ms "
+          f"p95 {agg['ttft_s_p95']*1e3:.0f} ms; "
+          f"prefix hits {agg['prefix_hits']} "
+          f"({agg['prefix_tokens']} tokens reused)")
+
+    probe = None
+    if args.probe >= 0:
+        preq = [r for r in requests if r.rid == args.probe]
+        assert preq, f"--probe {args.probe}: no such rid in the load"
+        pf = fleet_lib.Fleet.from_serving_params(
+            cfg, params, n_replicas=1,
+            meshes=meshes[:1] if meshes else None,
+            spool_dir=fl.spool_dir, prefix_cache=not args.no_prefix_cache,
+            n_slots=args.slots, max_len=max_len, chunk=args.chunk,
+            ecc_accounting=not args.no_ecc_accounting)
+        pres, _ = pf.run(preq)
+        routed, solo = results[args.probe], pres[args.probe]
+        ok = (routed.tokens == solo.tokens and routed.ecc == solo.ecc)
+        probe = {"rid": args.probe, "replica_routed": routed.replica,
+                 "tokens_equal": routed.tokens == solo.tokens,
+                 "ecc_equal": routed.ecc == solo.ecc, "ok": ok}
+        print(f"probe rid={args.probe}: routed via {routed.replica!r}, "
+              f"solo replay {'MATCHES' if ok else 'DIVERGES'} "
+              f"(tokens {probe['tokens_equal']}, ecc {probe['ecc_equal']})")
+        assert ok, f"replica-invariance probe failed: {probe}"
+
+    if args.engine_json:
+        import json
+        import os
+        os.makedirs(os.path.dirname(args.engine_json) or ".", exist_ok=True)
+        payload = {
+            "config": {"arch": args.arch, "reduced": args.reduced,
+                       "fleet": args.fleet, "slots": args.slots,
+                       "chunk": args.chunk, "max_len": max_len,
+                       "requests": args.requests, "rate": args.rate,
+                       "ber": args.ber, "protect": args.protect,
+                       "inject": args.inject,
+                       "serve_path": args.serve_path or "fused",
+                       "mesh": args.mesh, "seed": args.seed,
+                       "shared_prefix": args.shared_prefix,
+                       "prefix_cache": not args.no_prefix_cache},
+            "aggregate": agg,
+            "probe": probe,
+            "requests": [results[r.rid].to_json() for r in requests],
+        }
+        with open(args.engine_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.engine_json}")
+    return results, agg
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -294,9 +387,30 @@ def main(argv=None):
                     help="skip per-read ECC accounting (dynamic accounting "
                          "re-decodes the codeword planes per read — "
                          "disable when measuring throughput)")
+    # fleet mode (repro.launch.fleet)
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve the engine load through N data-parallel "
+                         "replicas behind the SLO router (one deployed "
+                         "image, spooled + restored per replica); with "
+                         "--fleet, --mesh DxM is the PER-REPLICA mesh over "
+                         "disjoint device blocks")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="fleet: disable per-replica prefix/KV-chunk reuse")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="L",
+                    help="fleet load: prepend one shared L-token prefix to "
+                         "every prompt (the system-prompt workload the "
+                         "prefix cache accelerates)")
+    ap.add_argument("--probe", type=int, default=-1, metavar="RID",
+                    help="fleet: after the run, re-serve request RID through "
+                         "a fresh single-replica fleet off the same spool "
+                         "and assert tokens+ECC match bitwise")
     args = ap.parse_args(argv)
     assert args.rounds >= 1, "--rounds must be >= 1"
 
+    if args.fleet > 0:
+        # per-replica meshes are built (and entered) inside the fleet; the
+        # image must deploy unsharded so every replica places its own copy
+        return _serve(args, None)
     mesh = make_serve_mesh(args.mesh) if args.mesh else None
     if mesh is None:
         return _serve(args, None)
@@ -338,6 +452,9 @@ def _serve(args, mesh):
                 params = place_on_mesh(params, mesh)
     elif mesh is not None:
         params = place_on_mesh(params, mesh)
+
+    if args.fleet > 0:
+        return _serve_fleet(args, cfg, params)
 
     if args.engine:
         return _serve_engine(args, cfg, params, mesh)

@@ -504,6 +504,42 @@ def merge_slot_caches(caches, slot, sub):
     return {"groups": g, "tail": t, "pos": caches["pos"]}
 
 
+def extract_kv_chunk(cfg: ModelConfig, caches, slot, pos, length: int):
+    """One slot's KV-cache rows for positions ``[pos, pos + length)``.
+
+    The engine-kind cache leaves (k/v and their int8 scales) all carry the
+    position axis at ``-3``, so a chunk is a uniform slice. The returned
+    pytree is exactly what :func:`inject_kv_chunk` consumes — the prefix
+    cache's unit of reuse. ``length`` is static (one trace per chunk shape);
+    ``slot``/``pos`` are traced.
+    """
+    check_engine_kinds(cfg)
+    sub = slot_caches(caches, slot)
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, pos, length,
+                                               axis=a.ndim - 3), sub)
+
+
+def inject_kv_chunk(cfg: ModelConfig, caches, slot, pos, chunk):
+    """Prefill-from-cached-KV entry: write a previously extracted KV chunk
+    into ``slot`` at positions ``[pos, pos + chunk_len)`` and return the
+    updated caches.
+
+    For engine block kinds (attn/moe) the KV rows are the *complete* layer
+    state of those positions, so injecting rows another request prefilled
+    for the same token prefix (same content-salted fault streams, same
+    image) leaves the caches bitwise identical to having run
+    :func:`prefill_chunk` on the chunk — the prefix cache skips the compute,
+    not the contract. The caller still owns ``caches['pos']``.
+    """
+    check_engine_kinds(cfg)
+    sub = slot_caches(caches, slot)
+    upd = jax.tree_util.tree_map(
+        lambda a, c: jax.lax.dynamic_update_slice_in_dim(
+            a, c.astype(a.dtype), pos, axis=a.ndim - 3), sub, chunk)
+    return merge_slot_caches(caches, slot, upd)
+
+
 def prefill_chunk(params, cfg: ModelConfig, caches, tokens, slot, pos,
                   length=None, req_salt=None):
     """Chunked prefill of ONE slot into the batched decode caches.

@@ -131,3 +131,19 @@ def make_decode_slots_step(cfg: ModelConfig) -> Callable:
         return lm.decode_slots(params, cfg, caches, tokens, active,
                                req_salts=req_salts)
     return decode_slots_step
+
+
+def make_extract_kv_step(cfg: ModelConfig) -> Callable:
+    """Prefix cache: slice one slot's KV rows for a just-prefilled chunk.
+    Jit with ``length`` static (one trace per chunk shape)."""
+    def extract_kv_step(caches, slot, pos, length):
+        return lm.extract_kv_chunk(cfg, caches, slot, pos, length)
+    return extract_kv_step
+
+
+def make_inject_kv_step(cfg: ModelConfig) -> Callable:
+    """Prefix cache: write a cached KV chunk into a slot (the
+    prefill-from-cached-KV entry)."""
+    def inject_kv_step(caches, slot, pos, chunk):
+        return lm.inject_kv_chunk(cfg, caches, slot, pos, chunk)
+    return inject_kv_step

@@ -1,0 +1,456 @@
+"""Fleet serving: replica invariance, prefix reuse, drain/re-admit, routing.
+
+The acceptance contract of ``repro.launch.fleet`` (+ the engine's prefix
+cache and fleet hooks):
+
+* **replica invariance** — a request's tokens, logits, fault streams and
+  ECC counts are bit-identical whether it is served solo on one engine,
+  routed across N replicas, admitted off the prefix trie, or drained
+  mid-flight and re-served elsewhere. Verified for static and per-read
+  dynamic injection on one device, and (subprocess) as a 2x(1x4) fleet over
+  8 forced host devices.
+* **one shared image** — every replica restores the same deployed planes
+  from one spool; compared bitwise leaf by leaf.
+* **router** — SLO scoring balances a homogeneous closed burst, drains
+  requeue in arrival order, recovery re-admits, and a fully-drained fleet
+  with arrived work raises instead of hanging.
+* **elastic edges** — ``propose_data_axis`` returns 0 (not a crash) for 0
+  survivors or model_axis > surviving devices, and non-power-of-two device
+  counts round down.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import cim as cim_lib
+from repro.core import deployment as dep_lib
+from repro.distributed.elastic import ElasticCoordinator
+from repro.launch import engine as engine_lib
+from repro.launch import fleet as fleet_lib
+from repro.launch import serve as serve_lib
+from repro.models import lm
+
+CHUNK = 8
+MAX_LEN = 40
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    return cfg, params, dkey
+
+
+def _serving_params(params, dkey, *, inject="dynamic", ber=1e-3):
+    return serve_lib.deploy_fused(params, ber=ber, protect="one4n",
+                                  n_group=8, index=2, key=dkey,
+                                  inject_mode=inject, field="full")
+
+
+def _load(n=6, seed=7, prefix_len=16, gens=(3, 5)):
+    return engine_lib.LoadGen(n_requests=n, prompt_lens=(3, 10),
+                              gen_lens=gens, vocab_size=256, seed=seed,
+                              prefix_len=prefix_len)
+
+
+# ------------------------------------------------------------ salts
+
+
+def test_prefix_salt_deterministic_and_content_keyed():
+    toks = np.arange(12, dtype=np.int32)
+    a = dep_lib.prefix_salt(toks)
+    assert a == dep_lib.prefix_salt(list(range(12)))       # dtype-independent
+    assert a != dep_lib.prefix_salt(toks[:11])             # length-sensitive
+    bumped = toks.copy()
+    bumped[0] += 1
+    assert a != dep_lib.prefix_salt(bumped)                # content-sensitive
+    assert 0 <= a <= 0xFFFFFFFF
+
+
+def test_prefix_salt_does_not_alias_request_salts():
+    # the two salt families must never collide on small ids/prefixes: a
+    # prefill stream aliasing a decode stream would correlate their faults
+    reqs = {int(dep_lib.request_salt(rid)) for rid in range(64)}
+    prefs = {dep_lib.prefix_salt(np.arange(n) % 7) for n in range(1, 65)}
+    assert not reqs & prefs
+
+
+# ------------------------------------------------------------ elastic edges
+
+
+def test_propose_data_axis_zero_survivors():
+    co = ElasticCoordinator(["h0", "h1"], model_axis=2)
+    for h in ("h0", "h1"):
+        co.mark_failed(h)
+    assert co.healthy_hosts == []
+    assert co.propose_data_axis(4) == 0                    # not a crash
+    gen, dp = co.reconfigure(4)
+    assert dp == 0 and gen == 1
+
+
+def test_propose_data_axis_model_axis_exceeds_survivors():
+    co = ElasticCoordinator(["h0", "h1"], model_axis=8)
+    assert co.propose_data_axis(4) == 1                    # 8 devs / 8 = 1
+    co.mark_failed("h1")
+    assert co.propose_data_axis(4) == 0                    # 4 devs < 8
+
+
+def test_propose_data_axis_non_power_of_two():
+    co = ElasticCoordinator([f"h{i}" for i in range(3)], model_axis=2)
+    assert co.propose_data_axis(2) == 2                    # 6//2=3 -> dp 2
+    assert co.propose_data_axis(5) == 4                    # 15//2=7 -> dp 4
+    assert co.propose_data_axis(1) == 1                    # 3//2=1 -> dp 1
+
+
+def test_heartbeat_readmits_failed_host():
+    co = ElasticCoordinator(["h0", "h1"], model_axis=1)
+    assert co.mark_failed("h0") is True
+    assert co.mark_failed("h0") is False                   # already failed
+    assert co.healthy_hosts == ["h1"]
+    co.heartbeat("h0")                                     # back from the dead
+    assert co.healthy_hosts == ["h0", "h1"]
+    assert co.drain_recovered() == ["h0"]
+    assert co.drain_recovered() == []                      # drained once
+    co.heartbeat("nope")                                   # unknown: ignored
+
+
+def test_timeout_check_marks_failed_once():
+    t = [0.0]
+    co = ElasticCoordinator(["h0", "h1"], model_axis=1,
+                            heartbeat_timeout=10.0, clock=lambda: t[0])
+    t[0] = 5.0
+    co.heartbeat("h1")
+    t[0] = 11.0
+    assert co.check() == ["h0"]
+    assert co.check() == []                                # newly-failed only
+
+
+# ------------------------------------------------------------ prefix cache
+
+
+def test_prefix_cache_hash_consing_and_trie_paths():
+    pc = engine_lib.PrefixCache()
+    a = np.arange(8, dtype=np.int32)
+    b = a + 1
+    n1 = pc.insert(None, a, kv="kv_a", salt=1)
+    assert pc.insert(None, a, kv="other", salt=1) is n1    # hash-consed
+    assert pc.inserts == 1
+    n2 = pc.insert(n1, b, kv="kv_b", salt=2)
+    assert pc.lookup(None, a) is n1
+    assert pc.lookup(n1, b) is n2
+    assert pc.lookup(None, b) is None                      # wrong parent
+    assert pc.lookup(n2, a) is None
+    assert len(pc) == 2 and pc.hits == 2 and pc.misses == 2
+
+
+def test_prefix_cache_lru_evicts_leaves_only():
+    pc = engine_lib.PrefixCache(max_chunks=2)
+    root = pc.insert(None, [1], kv=0, salt=0)
+    pc.insert(root, [2], kv=0, salt=0)                     # child of root
+    pc.lookup(None, [1])                # root is now the RECENT one
+    pc.insert(None, [3], kv=0, salt=0)  # over capacity -> evict one leaf
+    assert pc.evictions == 1
+    # the child was the oldest leaf; root survives even though it is older
+    # than its child was (evicting it would orphan reachable descendants)
+    assert pc.lookup(None, [1]) is not None
+    assert pc.lookup(root, [2]) is None
+    assert pc.lookup(None, [3]) is not None
+
+
+def test_prefix_cache_invalidate():
+    pc = engine_lib.PrefixCache()
+    n = pc.insert(None, [1, 2], kv=0, salt=0)
+    pc.insert(n, [3, 4], kv=0, salt=0)
+    pc.invalidate()
+    assert len(pc) == 0 and pc.invalidations == 1
+    assert pc.lookup(None, [1, 2]) is None
+
+
+# ------------------------------------------------------------ engine reuse
+
+
+@pytest.mark.parametrize("inject", ["static", "dynamic"])
+def test_prefix_reuse_bitwise(setup, inject):
+    """Trie-warm admission == cold prefill, bitwise: tokens, every logit
+    vector, and the replayed per-request ECC stream accounting."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject=inject)
+    reqs = _load().requests()
+
+    def run(pc):
+        eng = engine_lib.Engine(cfg, sparams, n_slots=3, max_len=MAX_LEN,
+                                chunk=CHUNK, collect_logits=True,
+                                prefix_cache=pc)
+        return eng.run(reqs)[0], eng
+
+    cold, _ = run(None)
+    warm, eng = run(True)
+    hits = 0
+    for rid in cold:
+        assert cold[rid].tokens == warm[rid].tokens, rid
+        assert np.array_equal(cold[rid].logits, warm[rid].logits), rid
+        assert cold[rid].ecc == warm[rid].ecc, rid
+        hits += warm[rid].prefix_tokens > 0
+    assert hits > 0, "16-token shared prefix produced no trie hits"
+    st = eng.prefix_cache.stats()
+    assert st["hits"] > 0 and st["chunks"] > 0
+
+
+def test_prefix_reuse_within_one_run(setup):
+    """Later requests of one run hit the chunks the first request inserted;
+    the first request itself admits fully cold."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=2, max_len=MAX_LEN,
+                            chunk=CHUNK, prefix_cache=True)
+    res, agg = eng.run(_load().requests())
+    first = min(res)
+    assert res[first].prefix_tokens == 0
+    assert agg["prefix_hits"] >= 1
+    assert agg["prefix_tokens"] == sum(r.prefix_tokens for r in res.values())
+
+
+def test_refresh_params_invalidates_trie(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=2, max_len=MAX_LEN,
+                            chunk=CHUNK, prefix_cache=True)
+    eng.run(_load(n=3).requests())
+    assert len(eng.prefix_cache) > 0
+    eng.refresh_params(sparams)
+    assert len(eng.prefix_cache) == 0
+    assert eng.prefix_cache.invalidations == 1
+
+
+def test_refresh_params_refuses_busy_engine(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=2, max_len=MAX_LEN,
+                            chunk=CHUNK)
+    eng.submit(engine_lib.Request(rid=0, tokens=[1, 2, 3], max_new=2))
+    with pytest.raises(engine_lib.EngineError, match="busy"):
+        eng.refresh_params(sparams)
+
+
+def test_result_json_carries_fleet_fields(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    eng = engine_lib.Engine(cfg, sparams, n_slots=2, max_len=MAX_LEN,
+                            chunk=CHUNK, prefix_cache=True, replica="r9")
+    res, _ = eng.run(_load(n=3).requests())
+    rows = [r.to_json() for r in res.values()]
+    assert all(row["replica"] == "r9" for row in rows)
+    assert all(row["salt"] == int(dep_lib.request_salt(row["rid"]))
+               for row in rows)
+    assert any(row["prefix_hit"] for row in rows)
+    assert all(row["prefix_hit"] == (row["prefix_tokens"] > 0)
+               for row in rows)
+
+
+# ------------------------------------------------------------ fleet
+
+
+def test_fleet_routed_equals_solo_bitwise(setup):
+    """Dynamic injection, 2 replicas off one spooled image: routed results
+    == a solo engine serving the same load off the ORIGINAL params."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="dynamic")
+    reqs = _load().requests()
+    solo, _ = engine_lib.Engine(cfg, sparams, n_slots=3, max_len=MAX_LEN,
+                                chunk=CHUNK, collect_logits=True).run(reqs)
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, n_slots=3, max_len=MAX_LEN, chunk=CHUNK,
+        collect_logits=True)
+    routed, agg = fl.run(reqs)
+    assert sorted(routed) == sorted(r.rid for r in reqs)
+    for rid in solo:
+        assert solo[rid].tokens == routed[rid].tokens, rid
+        assert np.array_equal(solo[rid].logits, routed[rid].logits), rid
+        assert solo[rid].ecc == routed[rid].ecc, rid
+    # the router actually fanned out
+    assert len({r.replica for r in routed.values()}) == 2
+    assert agg["n_replicas"] == 2 and agg["drains"] == 0
+
+
+def test_fleet_replicas_share_one_image(setup):
+    """Every replica's restored params match the source bitwise, leaf by
+    leaf — packed planes, ECC metadata, dynamic seed table, everything."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="dynamic")
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, n_slots=2, max_len=MAX_LEN, chunk=CHUNK)
+    src = jax.tree_util.tree_leaves(sparams)
+    for rep in fl.replicas.values():
+        got = jax.tree_util.tree_leaves(rep.engine.params)
+        assert len(got) == len(src)
+        for a, b in zip(src, got):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fleet_balances_closed_burst(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    load = _load(n=8, prefix_len=0, gens=(4, 4))
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, prefix_cache=False, n_slots=2,
+        max_len=MAX_LEN, chunk=CHUNK)
+    _, agg = fl.run(load.requests())
+    by_rep = agg["requests_by_replica"]
+    assert sum(by_rep.values()) == 8
+    # depth-based scoring must not starve a replica of a homogeneous burst
+    assert min(by_rep.values()) >= 2, by_rep
+
+
+def test_fleet_drain_requeue_bitwise(setup):
+    """Force-fail a replica mid-run: its in-flight + queued requests re-route
+    and the final results still match the uninterrupted solo run bitwise."""
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="dynamic")
+    reqs = _load().requests()
+    solo, _ = engine_lib.Engine(cfg, sparams, n_slots=3, max_len=MAX_LEN,
+                                chunk=CHUNK, collect_logits=True).run(reqs)
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, n_slots=2, max_len=MAX_LEN, chunk=CHUNK,
+        collect_logits=True)
+    import time
+    fl._t0 = time.perf_counter()
+    for rep in fl.replicas.values():
+        rep.engine.start(fl._t0)
+    for r in sorted(reqs, key=lambda r: (r.arrival, r.rid)):
+        fl._queue.append((r, 0.0))
+    fl.tick()
+    fl.tick()
+    fl.fail("replica0")
+    assert fl.drains == 1 and fl.requeued >= 1
+    fl.tick()
+    fl.recover("replica0")
+    while fl._queue or any(r.engine.busy for r in fl.replicas.values()):
+        fl.tick()
+    assert sorted(fl.results) == sorted(r.rid for r in reqs)
+    for rid in solo:
+        assert solo[rid].tokens == fl.results[rid].tokens, rid
+        assert np.array_equal(solo[rid].logits, fl.results[rid].logits), rid
+        assert solo[rid].ecc == fl.results[rid].ecc, rid
+    # recovery re-admitted replica0 (it may or may not have won work since)
+    assert "replica0" in fl._admitting
+
+
+def test_fleet_all_drained_raises(setup):
+    cfg, params, dkey = setup
+    sparams = _serving_params(params, dkey, inject="static")
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, n_slots=2, max_len=MAX_LEN, chunk=CHUNK)
+    fl.fail("replica0")
+    fl.fail("replica1")
+    with pytest.raises(fleet_lib.FleetError, match="no admitting"):
+        fl.run(_load(n=2).requests())
+
+
+def test_fleet_meshes_require_enough_devices():
+    with pytest.raises(AssertionError, match="devices"):
+        fleet_lib.make_fleet_meshes("1x8", 2)    # 16 devices on a 1-dev host
+
+
+# ------------------------------------------------------------ load gen
+
+
+def test_loadgen_fleet_fanout_determinism():
+    a = _load(seed=3).requests()
+    b = _load(seed=3).requests()
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid and ra.max_new == rb.max_new
+        assert ra.arrival == rb.arrival
+        assert np.array_equal(ra.tokens, rb.tokens)
+
+
+def test_loadgen_shared_prefix_semantics():
+    load = _load(n=4, seed=9, prefix_len=12)
+    reqs = load.requests()
+    first = reqs[0].tokens[:12]
+    assert all(np.array_equal(r.tokens[:12], first) for r in reqs)
+    assert load.max_len() >= max(r.tokens.size + r.max_new for r in reqs)
+    # prefix_len=0 reproduces the historical schedule exactly
+    base = engine_lib.LoadGen(n_requests=4, prompt_lens=(3, 10),
+                              gen_lens=(3, 5), vocab_size=256, seed=9)
+    again = engine_lib.LoadGen(n_requests=4, prompt_lens=(3, 10),
+                               gen_lens=(3, 5), vocab_size=256, seed=9,
+                               prefix_len=0)
+    for ra, rb in zip(base.requests(), again.requests()):
+        assert np.array_equal(ra.tokens, rb.tokens)
+
+
+# ------------------------------------------------------------ 8-device fleet
+
+
+_FLEET_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch import engine as engine_lib
+    from repro.launch import fleet as fleet_lib
+    from repro.launch import serve as serve_lib
+    from repro.models import lm
+
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    sparams = serve_lib.deploy_fused(params, ber=1e-3, protect="one4n",
+                                     n_group=8, index=2, key=dkey,
+                                     inject_mode="dynamic", field="full")
+    load = engine_lib.LoadGen(n_requests=4, prompt_lens=(3, 10),
+                              gen_lens=(2, 3), vocab_size=256, seed=5,
+                              prefix_len=8)
+    reqs = load.requests()
+    meshes = fleet_lib.make_fleet_meshes("1x4", 2)
+    assert [sorted(d.id for d in m.devices.flat) for m in meshes] == \\
+        [[0, 1, 2, 3], [4, 5, 6, 7]]                    # disjoint blocks
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=2, meshes=meshes, n_slots=2, max_len=20,
+        chunk=4, collect_logits=True)
+    routed, agg = fl.run(reqs)
+    rid = 1
+    pf = fleet_lib.Fleet.from_serving_params(
+        cfg, sparams, n_replicas=1, meshes=meshes[:1],
+        spool_dir=fl.spool_dir, n_slots=2, max_len=20, chunk=4,
+        collect_logits=True)
+    probe, _ = pf.run([r for r in reqs if r.rid == rid])
+    print(json.dumps({
+        "n_done": len(routed),
+        "replicas": sorted({r.replica for r in routed.values()}),
+        "tokens_equal": routed[rid].tokens == probe[rid].tokens,
+        "logits_equal": bool(np.array_equal(routed[rid].logits,
+                                            probe[rid].logits)),
+        "ecc_equal": routed[rid].ecc == probe[rid].ecc,
+        "prefix_hits": int(agg["prefix_hits"]),
+    }))
+""")
+
+
+def test_fleet_invariance_on_8_device_split(tmp_path):
+    """2 replicas x (1x4) disjoint device blocks, dynamic injection: the
+    routed run matches a single-replica probe off the same spool bitwise."""
+    path = tmp_path / "mesh_fleet.py"
+    path.write_text(_FLEET_MESH_SCRIPT)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, str(path)], capture_output=True,
+                         text=True, env=env, cwd=os.getcwd(), timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["n_done"] == 4
+    assert got["tokens_equal"] and got["logits_equal"] and got["ecc_equal"]
+    assert got["replicas"] == ["replica0", "replica1"]
+    assert got["prefix_hits"] >= 1

@@ -38,7 +38,10 @@ PUBLIC_API_SNAPSHOT = (
     # serving engine (continuous batching, per-request fault streams)
     "Engine",
     "LoadGen",
+    "PrefixCache",
     "Request",
+    # fleet serving (data-parallel replicas, SLO router, prefix reuse)
+    "Fleet",
 )
 
 
