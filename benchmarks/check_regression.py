@@ -117,6 +117,31 @@ def _flatten_engine(d: dict) -> dict:
     return out
 
 
+def _flatten_training(d: dict) -> dict:
+    out = {}
+    s = d.get("search") or {}
+    if s.get("bits_ratio"):
+        # searched-policy stored bits / uniform-One4N stored bits: the
+        # co-design acceptance criterion — the search must find protection
+        # that is STRICTLY cheaper (hard ceiling 0.99 in the baseline)
+        out["training.fig7.searched_vs_one4n_bits_ratio"] = \
+            (LOWER, s["bits_ratio"])
+    if "slo_met" in s:
+        # binary: searched policy meets the accuracy-vs-BER SLO
+        # (hard floor 1.0 — no tolerance relaxes a missed SLO)
+        out["training.fig7.searched_slo_met"] = \
+            (HIGHER, 1.0 if s["slo_met"] else 0.0)
+    after = d.get("after") or {}
+    if after.get("one4n_acc"):
+        # fine-tuned + uniform One4N accuracy at the derived BER: the
+        # before/after training benefit must not erode
+        out["training.fig7.finetuned_acc_at_ber"] = \
+            (HIGHER, after["one4n_acc"])
+    if d.get("wall_s"):
+        out["training.fig7.wall_s"] = (LOWER, d["wall_s"])
+    return out
+
+
 def _load(path):
     with open(path) as f:
         return json.load(f)
@@ -130,7 +155,8 @@ def collect_metrics(args):
     for path, flatten in ((args.cim_store, _flatten_cim_store),
                           (args.kernel, _flatten_kernel),
                           (args.sweep, _flatten_sweep),
-                          (args.engine, _flatten_engine)):
+                          (args.engine, _flatten_engine),
+                          (args.training, _flatten_training)):
         if path:
             d = _load(path)
             metrics.update(flatten(d))
@@ -196,6 +222,9 @@ def main(argv=None):
                     help="fresh sweep_bench.py --json artifact")
     ap.add_argument("--engine", default=None,
                     help="fresh engine_bench.py --json artifact")
+    ap.add_argument("--training", default=None,
+                    help="fresh fig7_training.py --json artifact "
+                         "(co-design gate)")
     ap.add_argument("--tolerance", type=float, default=1.5,
                     help="ratio metrics fail below baseline/tol; absolute "
                          "wall-clock fails above baseline*2*tol")

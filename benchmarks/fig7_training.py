@@ -1,58 +1,157 @@
-"""Fig. 7: training under dynamic error injection — clean vs unprotected vs
-exponent-aligned + One4N (residual-rate) protection."""
+"""Fig. 7 + the co-design gate: before/after accuracy-vs-BER on the trained
+LM, with the searched per-layer policy required to dominate uniform One4N.
+
+Three measurements, one artifact:
+
+1. **before** — the cached base LM deployed under uniform One4N and under no
+   protection, evaluated at the derived BER (accuracy-vs-BER, paper Fig. 6/7
+   framing);
+2. **fine-tune** — :class:`repro.training.codesign.Finetuner` trains the base
+   model through the deployment (exponent-compression reshape, then aligned
+   training under the dynamic fault schedule) and the protected arm is
+   re-measured (**after**);
+3. **search** — :class:`repro.training.codesign.PolicySearch` finds the
+   cheapest per-layer protection on the fine-tuned weights meeting the
+   accuracy SLO. The gate (``check_regression.py --training``) requires the
+   searched policy to meet the SLO (``searched_slo_met`` hard floor 1.0) at
+   *strictly lower* stored-bit cost than uniform One4N
+   (``searched_vs_one4n_bits_ratio`` hard ceiling 0.99).
+
+The injection BER is **derived from the deployment**, not hand-rolled: the
+paper's operating point (~1e-6 raw BER on 10M+-parameter fp16 models) fixes
+the expected soft-error count per step at ``1e-6 * 10e6 * 16 = 160`` flips;
+the bench solves ``ber = flips / stored_bits`` against the uniform-One4N
+deployment's actual ``bit_cost()`` so the reduced model sees the same error
+*pressure* per step regardless of how the packing (ECC codewords, shared
+exponents) changes the cell count.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
+import jax
 import numpy as np
 
-from benchmarks.common import QUICK, emit
-from repro.configs import RunConfig, get_config
-from repro.core.api import ReliabilityConfig
-from repro.data.synthetic import MarkovLM
-from repro.training.loop import run_training
+from benchmarks.common import QUICK, emit, lm_setup
+from repro.core.deployment import (CIMDeployment, PolicyRule,
+                                   ReliabilityPolicy)
+from repro.core.resilience import characterize_policies
+from repro.training.codesign import AccuracySLO, Finetuner, PolicySearch, \
+    SearchSpace
 
-BER = 1e-4   # scaled to the reduced model's weight count; cf. paper's 1e-6
-             # on 10M+-param models (errors per step ~ params x bits x BER)
+# expected soft errors per step at the paper's operating point:
+# 1e-6 raw BER x ~10e6 params x 16 bits/param
+PAPER_FLIPS_PER_STEP = 160.0
 
-
-def arm(mode):
-    if mode == "clean":
-        return ReliabilityConfig(mode="align")
-    protect = "one4n" if mode == "one4n" else "none"
-    return ReliabilityConfig(mode="cim", ber=BER, protect=protect,
-                             inject="dynamic")
+UNIFORM_ONE4N = ReliabilityPolicy()
+UNPROTECTED = ReliabilityPolicy(default=PolicyRule(protect="none"))
 
 
-def main():
-    cfg = get_config("olmo-1b").reduced()
-    steps = 40 if QUICK else 120
-    rows = []
-    finals = {}
-    for mode in ("clean", "none", "one4n"):
-        data = MarkovLM(cfg.vocab_size, 64, 8, seed=0)
-        run = RunConfig(arch="olmo-1b", steps=steps, checkpoint_dir="",
-                        remat=False, learning_rate=1e-3, reliability=arm(mode))
-        t0 = time.time()
-        _, hist, _ = run_training(cfg, run, iter(data))
-        us = (time.time() - t0) * 1e6 / steps
-        losses = np.asarray([h["loss"] for h in hist])
-        tail = losses[-10:]
-        finals[mode] = tail
-        nan_steps = int((~np.isfinite(losses)).sum())
-        rows.append((f"fig7.{mode}", round(us),
-                     f"final_loss={np.nanmean(tail):.4f};nan_steps={nan_steps};"
-                     f"first_loss={losses[0]:.3f}"))
-    ok_clean = np.isfinite(finals["clean"]).all()
-    ok_prot = np.isfinite(finals["one4n"]).all()
-    bad = finals["none"]
-    degraded = (~np.isfinite(bad)).any() or \
-        np.nanmean(bad) > np.nanmean(finals["one4n"]) + 0.2
-    rows.append(("fig7.check", None,
-                 f"clean_finite={ok_clean};one4n_finite={ok_prot};"
-                 f"unprotected_degraded={degraded}"))
+def derived_ber(params) -> tuple:
+    """BER matching the paper's expected flips/step against the ACTUAL
+    stored-cell count of the uniform-One4N deployment."""
+    bits = CIMDeployment.deploy(params, UNIFORM_ONE4N).bit_cost()
+    ber = PAPER_FLIPS_PER_STEP / max(bits["stored_bits"], 1)
+    return float(np.clip(ber, 1e-6, 1e-3)), bits
+
+
+def acc_of(results, name: str) -> float:
+    return next(r.mean for r in results if r.protect == name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write the artifact here")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    n_trials = 4 if QUICK else 6
+    ft_steps = 15 if QUICK else 40
+
+    params, cfg, eval_fn, data = lm_setup()
+    ber, bits = derived_ber(params)
+    clean_acc = float(jax.device_get(eval_fn(params)))
+
+    key = jax.random.PRNGKey(42)
+    before = characterize_policies(
+        key, params, eval_fn, bers=(ber,), n_trials=n_trials,
+        policies={"one4n": UNIFORM_ONE4N, "none": UNPROTECTED})
+    before_one4n, before_none = acc_of(before, "one4n"), acc_of(before, "none")
+
+    ft = Finetuner(cfg, UNIFORM_ONE4N, ber=ber, reshape_steps=ft_steps,
+                   aligned_steps=ft_steps, learning_rate=1e-3, seed=0)
+    res = ft.run(lambda: iter(data), params=params)
+    losses = np.asarray(
+        [h["loss"] for h in res.info["reshape"]["history"]] +
+        [h["loss"] for h in res.history])
+    tuned = res.state.params
+    tuned_clean = float(jax.device_get(eval_fn(tuned)))
+
+    after = characterize_policies(
+        jax.random.fold_in(key, 1), tuned, eval_fn, bers=(ber,),
+        n_trials=n_trials, policies={"one4n": UNIFORM_ONE4N})
+    after_one4n = acc_of(after, "one4n")
+
+    # 1% drop: tight enough that fully-unprotected arms miss the floor (the
+    # searched policy must actually buy protection, not just ride the
+    # fine-tuned model's resilience)
+    slo = AccuracySLO(ber=ber, max_drop=0.01)
+    # n_group=16 halves both the shared-exponent count and the One4N parity
+    # cells — the real stored-bit lever the search can trade against the
+    # coarser alignment it implies
+    space = SearchSpace(groups=(("embed", "embed"), ("unembed", "unembed")),
+                        protects=("none", "one4n"), n_groups=(8, 16))
+    search = PolicySearch(tuned, eval_fn, slo, space, n_trials=n_trials,
+                          key=jax.random.fold_in(key, 2))
+    sres = search.search()
+    one4n_bits = bits["stored_bits"]
+    bits_ratio = sres.stored_bits / one4n_bits
+
+    wall_s = time.time() - t0
+    out = {
+        "quick": QUICK,
+        "ber": ber,
+        "wall_s": wall_s,
+        "before": {"clean_acc": clean_acc, "one4n_acc": before_one4n,
+                   "none_acc": before_none,
+                   "one4n_stored_bits": one4n_bits,
+                   "one4n_overhead": bits["overhead"]},
+        "finetune": {"steps": int(len(losses)),
+                     "final_loss": float(losses[-1]),
+                     "losses_finite": bool(np.isfinite(losses).all()),
+                     "clean_acc": tuned_clean,
+                     "ecc_stats": res.ecc_stats},
+        "after": {"one4n_acc": after_one4n},
+        "search": {"name": sres.name, "accuracy": sres.accuracy,
+                   "floor": sres.floor, "slo_met": bool(sres.slo_met),
+                   "stored_bits": sres.stored_bits,
+                   "bits_ratio": bits_ratio,
+                   "slo_margin": sres.accuracy - sres.floor,
+                   "assignment": sres.assignment, "evals": sres.evals},
+    }
+    rows = [
+        ("fig7.before", None,
+         f"clean={clean_acc:.4f};one4n@{ber:.1e}={before_one4n:.4f};"
+         f"none@{ber:.1e}={before_none:.4f}"),
+        ("fig7.finetune", None,
+         f"steps={len(losses)};final_loss={losses[-1]:.4f};"
+         f"finite={np.isfinite(losses).all()};clean={tuned_clean:.4f}"),
+        ("fig7.after", None, f"one4n@{ber:.1e}={after_one4n:.4f}"),
+        ("fig7.search", None,
+         f"acc={sres.accuracy:.4f};floor={sres.floor:.4f};"
+         f"slo_met={sres.slo_met};bits_ratio={bits_ratio:.3f};"
+         f"evals={sres.evals}"),
+        ("fig7.wall", round(wall_s * 1e6), f"wall_s={wall_s:.1f}"),
+    ]
     emit(rows)
-    return rows
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
 
 
 if __name__ == "__main__":

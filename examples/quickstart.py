@@ -12,12 +12,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro import CIMDeployment, PolicyRule, ReliabilityConfig, ReliabilityPolicy
+from repro import CIMDeployment, PolicyRule, ReliabilityPolicy, run_training
 from repro.configs import RunConfig, get_config
 from repro.data.synthetic import MarkovLM
 from repro.models import lm
 from repro.models.losses import lm_loss
-from repro.training.loop import run_training
 
 
 def evaluate(params, cfg, data, n_batches=4):
@@ -35,27 +34,33 @@ def main():
     data = MarkovLM(cfg.vocab_size, 64, 16, seed=0)
 
     # --- 1+2: train with exponent alignment active from the start ----------
-    rel = ReliabilityConfig(mode="align", n_group=8, index=2)
+    # the policy-native training surface: a uniform ReliabilityPolicy with
+    # ber=0 trains aligned (frozen exponents, mantissa-only updates) without
+    # fault injection
+    policy = ReliabilityPolicy(default=PolicyRule(n_group=8, index=2))
     run = RunConfig(arch="olmo-1b", steps=150, checkpoint_dir="",
-                    reliability=rel, remat=False, learning_rate=1e-3)
+                    policy=policy, ber=0.0, remat=False, learning_rate=1e-3)
     print("training 150 steps with frozen-exponent alignment (N=8, index=2)…")
-    state, hist, _ = run_training(cfg, run, iter(data))
-    print(f"  final loss {hist[-1]['loss']:.3f}  train acc {hist[-1]['accuracy']:.3f}")
+    res = run_training(cfg, run, iter(data))
+    state, hist = res.state, res.history
+    print(f"  final loss {res.final_loss:.3f}  train acc {hist[-1]['accuracy']:.3f}")
 
     base_acc = evaluate(state.params, cfg, data)
     print(f"  clean eval accuracy: {base_acc:.3f}")
+    print(f"  deployed under the run's policy: "
+          f"{res.ecc_stats['stored_bits']} stored bits "
+          f"({res.ecc_stats['overhead']:+.1%} vs raw fp16)")
 
     # --- 3+4: CIM deployment under soft errors -----------------------------
     # One policy per protection arm; CIMDeployment owns pack -> inject ->
-    # decode for the whole pytree (ReliabilityConfig(...).policy is the
-    # uniform single-rule bridge from the legacy global-config surface).
+    # decode for the whole pytree.
     key = jax.random.PRNGKey(42)
     for ber in (1e-6, 1e-4, 1e-3):
         row = [f"BER {ber:.0e}:"]
         for protect in ("one4n", "none"):
-            rel = ReliabilityConfig(mode="cim", n_group=8, index=2,
-                                    protect=protect)
-            dep = CIMDeployment.deploy(state.params, rel.policy)
+            arm = ReliabilityPolicy(default=PolicyRule(
+                protect=protect, n_group=8, index=2))
+            dep = CIMDeployment.deploy(state.params, arm)
             restored, stats = dep.inject(key, ber).read()
             acc = evaluate(restored, cfg, data)
             row.append(f"{protect}: acc {acc:.3f} "

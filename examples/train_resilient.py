@@ -23,7 +23,7 @@ import shutil
 import numpy as np
 
 from repro.configs import RunConfig, get_config
-from repro.core.api import ReliabilityConfig
+from repro.core.deployment import PolicyRule, ReliabilityPolicy
 from repro.data.synthetic import MarkovLM
 from repro.models import lm
 from repro.training.loop import run_training
@@ -38,16 +38,18 @@ PRESETS = {
 
 
 def arm_config(preset, mode, ber):
-    """Each arm is a validated ReliabilityConfig — a thin single-rule policy
-    factory: its ``.policy`` is the uniform ReliabilityPolicy the training
-    fault schedule (repro.core.deployment) applies every step."""
+    """Each arm is a uniform ReliabilityPolicy plus RunConfig reliability
+    kwargs — the policy-native surface the training fault schedule
+    (repro.core.deployment) applies every step. ``clean`` trains aligned but
+    fault-free (ber 0)."""
     if mode == "clean":
-        return ReliabilityConfig(mode="align")
+        return dict(policy=ReliabilityPolicy(default=PolicyRule(
+            n_group=8, index=2)), ber=0.0)
     protect = "one4n" if mode == "one4n" else "none"
-    return ReliabilityConfig(mode="cim", ber=ber, protect=protect,
-                             inject="dynamic",
-                             **({} if mode == "none" else
-                                dict(n_group=8, index=2)))
+    rule = PolicyRule(protect=protect, **({} if mode == "none" else
+                                          dict(n_group=8, index=2)))
+    return dict(policy=ReliabilityPolicy(default=rule), ber=ber,
+                inject="dynamic")
 
 
 def main():
@@ -70,14 +72,14 @@ def main():
     for mode in ("clean", "none", "one4n"):
         ckdir = os.path.join(args.ckpt_root, mode)
         shutil.rmtree(ckdir, ignore_errors=True)
-        rel = arm_config(p, mode, args.ber)
         run = RunConfig(arch="olmo-1b", steps=p["steps"], remat=False,
                         learning_rate=1e-3, checkpoint_dir=ckdir,
                         checkpoint_every=max(p["steps"] // 4, 10),
-                        reliability=rel)
+                        **arm_config(p, mode, args.ber))
         print(f"\n=== arm: {mode} (ber={0 if mode=='clean' else args.ber:.0e}) ===")
-        if rel.mode == "cim":
-            print(f"  policy: {rel.policy.default.protect} on every leaf "
+        if run.ber > 0:
+            rel = run.rel
+            print(f"  policy: {run.policy.default.protect} on every leaf "
                   f"(residual exp/sign BER {rel.residual_exp_ber:.2e})")
         every = max(p["steps"] // 6, 1)
 
@@ -85,11 +87,16 @@ def main():
             if s % every == 0 or s == p["steps"] - 1:
                 print(f"  step {s:4d} loss {m['loss']:.4f} acc {m['accuracy']:.3f}")
 
-        state, hist, info = run_training(cfg, run, iter(data), log_fn=log)
-        curves[mode] = [h["loss"] for h in hist]
-        n = lm.param_count(state.params)
-        print(f"  {n/1e6:.1f}M params; stragglers={info['stragglers_flagged']}; "
+        res = run_training(cfg, run, iter(data), log_fn=log)
+        curves[mode] = [h["loss"] for h in res.history]
+        n = lm.param_count(res.state.params)
+        print(f"  {n/1e6:.1f}M params; "
+              f"stragglers={res.info['stragglers_flagged']}; "
               f"checkpoints in {ckdir}")
+        if mode == "one4n":
+            stats = res.ecc_stats
+            print(f"  deployed: {stats['stored_bits']} stored bits "
+                  f"({stats['overhead']:+.1%} vs raw fp16)")
 
     print("\n=== summary (final-10-step mean loss) ===")
     for mode, losses in curves.items():

@@ -29,8 +29,13 @@ from repro.core.fault import FaultModel  # noqa: F401
 # characterization engine (paper Fig. 2 / Fig. 6 grids)
 from repro.core.resilience import (characterize_fields,  # noqa: F401
                                    characterize_policies,
-                                   characterize_protection)
+                                   characterize_protection,
+                                   search_policies)
 from repro.core.sweep import SweepEngine, SweepPlan, SweepResult  # noqa: F401
+# co-design loop (resilience-aware fine-tuning + automatic policy search)
+from repro.training.codesign import (AccuracySLO, Finetuner,  # noqa: F401
+                                     PolicySearch, SearchSpace)
+from repro.training.loop import TrainResult, run_training  # noqa: F401
 # kernel ops (fused decode-on-read serving + trial-batched fault injection)
 from repro.kernels.cim_read.ops import (cim_linear_store,  # noqa: F401
                                         cim_linear_store_sharded)
@@ -63,6 +68,14 @@ __all__ = [
     "characterize_fields",
     "characterize_policies",
     "characterize_protection",
+    # co-design loop (fine-tune through the deployment + policy search)
+    "AccuracySLO",
+    "Finetuner",
+    "PolicySearch",
+    "SearchSpace",
+    "TrainResult",
+    "run_training",
+    "search_policies",
     # kernel ops
     "ber_to_threshold",
     "cim_linear_store",

@@ -151,6 +151,22 @@ def list_archs():
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
+    """One training run.
+
+    Reliability is **policy-native**: hand a
+    :class:`repro.core.deployment.ReliabilityPolicy` to ``policy`` (with
+    ``ber``/``inject`` for the dynamic fault schedule). The legacy
+    ``reliability=ReliabilityConfig(...)`` field still works — it is compiled
+    into a single-rule policy bit-compatibly — but is deprecated;
+    ``run_training`` warns on it. Setting both is an error.
+
+    ``exp_reg_coef`` turns on the exponent-compression regularizer (co-design
+    fine-tuning stage 1, see :mod:`repro.training.codesign`);
+    ``freeze_exponents=False`` disables exponent alignment + the frozen
+    (exponent, sign) projection even when the policy/config is enabled, so the
+    regularizer can reshape the exponent distribution before alignment.
+    """
+
     arch: str = "olmo-1b"
     shape: str = "train_4k"
     steps: int = 100
@@ -164,6 +180,43 @@ class RunConfig:
     remat: bool = True
     checkpoint_every: int = 50
     checkpoint_dir: str = "checkpoints"
-    reliability: ReliabilityConfig = ReliabilityConfig()
+    reliability: Optional[ReliabilityConfig] = None   # DEPRECATED: use policy
     grad_compression: bool = False
     straggler_factor: float = 3.0
+    # policy-native reliability surface
+    policy: Optional[object] = None   # ReliabilityPolicy
+    ber: float = 0.0                  # deployment BER for the fault schedule
+    inject: str = "dynamic"           # static | dynamic
+    # co-design fine-tuning knobs
+    exp_reg_coef: float = 0.0         # exponent-compression regularizer weight
+    exp_reg_margin: float = 1.0       # allowed per-block exponent spread (lg)
+    freeze_exponents: bool = True     # align + project when reliability is on
+
+    def __post_init__(self):
+        if self.policy is not None:
+            if self.reliability is not None:
+                raise ValueError(
+                    "RunConfig: pass either policy= (the policy-native "
+                    "surface) or the deprecated reliability=, not both")
+            from repro.core import deployment as dep_lib
+            if not isinstance(self.policy, dep_lib.ReliabilityPolicy):
+                raise TypeError(f"RunConfig: policy must be a "
+                                f"ReliabilityPolicy, got "
+                                f"{type(self.policy).__name__}")
+        if self.ber < 0:
+            raise ValueError(f"RunConfig: ber must be >= 0, got {self.ber}")
+        if self.inject not in ("static", "dynamic"):
+            raise ValueError(f"RunConfig: inject must be 'static' or "
+                             f"'dynamic', got {self.inject!r}")
+
+    @property
+    def rel(self) -> ReliabilityConfig:
+        """The resolved reliability config of this run: the policy compiled
+        via :meth:`ReliabilityConfig.from_policy` when ``policy`` is set, the
+        legacy ``reliability`` when given, else the inert default."""
+        if self.policy is not None:
+            return ReliabilityConfig.from_policy(self.policy, ber=self.ber,
+                                                 inject=self.inject)
+        if self.reliability is not None:
+            return self.reliability
+        return ReliabilityConfig()

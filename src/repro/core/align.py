@@ -173,6 +173,50 @@ def align_pytree(params, cfg: AlignmentConfig, predicate=is_alignable):
     return aligned, exps
 
 
+def align_pytree_policy(params, policy, predicate=is_alignable):
+    """Per-rule alignment: every leaf is aligned with ITS policy rule's
+    (n_group, index, fmt) — or passed through when the rule says
+    ``deploy=False``. Returns (aligned params, exponents pytree with None on
+    passthrough leaves); mirrors ``CIMDeployment.deploy``'s per-leaf align so
+    a fine-tuned model projects onto exactly the manifold it will be packed
+    from."""
+    from repro.core.deployment import path_str
+    leaves_wp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out_w, out_e = [], []
+    for path, leaf in leaves_wp:
+        rule = policy.rule_for(path_str(path))
+        if rule.deploy and predicate(path, leaf):
+            lcfg = dataclasses.replace(rule.align_cfg,
+                                       group_axis=_leaf_group_axis(leaf))
+            w, e = align_matrix(leaf, lcfg)
+        else:
+            w, e = leaf, None
+        out_w.append(w)
+        out_e.append(e)
+    return (jax.tree_util.tree_unflatten(treedef, out_w),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def project_pytree_policy(params, exps, signs, policy, predicate=is_alignable):
+    """Per-rule frozen-(exponent, sign) projection — the multi-rule
+    counterpart of :func:`project_pytree`, applied after each optimizer step
+    of a policy-native fine-tune."""
+    from repro.core.deployment import path_str
+    leaves_wp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_e = jax.tree_util.tree_flatten(exps, is_leaf=lambda x: x is None)[0]
+    flat_s = jax.tree_util.tree_flatten(signs, is_leaf=lambda x: x is None)[0]
+    out = []
+    for (path, w), e, s in zip(leaves_wp, flat_e, flat_s):
+        if e is None or not predicate(path, w):
+            out.append(w)
+            continue
+        rule = policy.rule_for(path_str(path))
+        lcfg = dataclasses.replace(rule.align_cfg,
+                                   group_axis=_leaf_group_axis(w))
+        out.append(project_to_block_exponent(w, e, s, lcfg))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def project_pytree(params, exps, signs, cfg: AlignmentConfig, predicate=is_alignable):
     """Post-update projection over a pytree (see project_to_block_exponent)."""
     paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]

@@ -78,6 +78,31 @@ class ReliabilityConfig:
                             f"ReliabilityPolicy, got "
                             f"{type(self.policy_override).__name__}")
 
+    @classmethod
+    def from_policy(cls, policy, ber: float = 0.0,
+                    inject: str = "dynamic") -> "ReliabilityConfig":
+        """Compile a :class:`ReliabilityPolicy` into a ``ReliabilityConfig``
+        (the policy-native training path, ``RunConfig.policy``).
+
+        A **uniform** policy (no per-layer rules) whose default rule carries
+        legacy semantics (``field='full'``, ``ber_scale=1``) maps onto the
+        scalar fields with ``policy_override`` unset — the training fault
+        schedule then takes the legacy uniform branch, so the key/stream
+        schedule is bit-identical to the equivalent hand-built config. Any
+        other policy rides in ``policy_override`` unchanged (the rule-honoring
+        branch applies its field restrictions and BER scales per leaf).
+        """
+        from repro.core import deployment as dep_lib
+        if not isinstance(policy, dep_lib.ReliabilityPolicy):
+            raise TypeError(f"from_policy: expected ReliabilityPolicy, got "
+                            f"{type(policy).__name__}")
+        d = policy.default
+        legacy = policy.uniform and d.field == "full" and d.ber_scale == 1.0
+        return cls(mode="cim", n_group=d.n_group, index=d.index,
+                   protect=d.protect, ber=ber, field=d.field, inject=inject,
+                   fmt_name=d.fmt_name, serve_path=d.serve_path,
+                   policy_override=None if legacy else policy)
+
     @property
     def fmt(self):
         return FORMATS[self.fmt_name]

@@ -527,6 +527,27 @@ class CIMDeployment:
             params["_cim"] = rt
         return params
 
+    # ------------------------------------------------------------ accounting
+
+    def bit_cost(self) -> dict:
+        """Stored-cell cost of the deployment — the policy search's axis.
+
+        ``stored_bits`` counts logical SRAM cells across every deployed store
+        (:attr:`~repro.core.cim.CIMStore.stored_bits`: codewords at
+        ``code.n`` bits, signs once); ``raw_bits`` is the unencoded
+        ``K*J*fmt.total_bits`` of the same leaves, so ``overhead`` is the
+        ECC/packing cost the paper reports (~8.98% for One4N fp16 N=8).
+        Passthrough leaves cost nothing (they are not on the macro).
+        """
+        stored = raw = byts = 0
+        for _, rule, s in self.store_leaves():
+            stored += s.stored_bits
+            raw += int(np.prod(s.shape)) * rule.fmt.total_bits
+            byts += s.stored_bytes
+        return {"stored_bits": int(stored), "raw_bits": int(raw),
+                "stored_bytes": int(byts),
+                "overhead": (stored / raw - 1.0) if raw else 0.0}
+
     # ------------------------------------------------------------ reporting
 
     def report(self) -> str:
@@ -721,7 +742,10 @@ def training_fault_schedule(rel) -> Optional[Callable]:
     if rel.mode != "cim" or rel.ber <= 0 or rel.inject != "dynamic":
         return None
     policy = getattr(rel, "policy", None)
-    if policy is None or policy.uniform:
+    legacy_uniform = policy is None or (
+        policy.uniform and policy.default.field == "full"
+        and policy.default.ber_scale == 1.0)
+    if legacy_uniform:
         exp_ber = rel.residual_exp_ber
 
         def corrupt(params, key):

@@ -88,6 +88,24 @@ def characterize_policies(key, params, eval_fn: Callable, bers: Sequence[float],
     return engine.run_policies(key, params, eval_fn, policies)
 
 
+def search_policies(params, eval_fn: Callable, ber: float, groups,
+                    max_drop: float = 0.02, n_trials: int = 3, key=None,
+                    **space_kw):
+    """One-call co-design policy search: the cheapest per-layer protection
+    (by deployed ``stored_bits``) whose mean accuracy at ``ber`` stays within
+    ``max_drop`` of clean. ``groups`` is the ordered ``(name, pattern)``
+    grammar of :class:`repro.training.codesign.SearchSpace`; extra kwargs
+    (``protects``, ``fields``, ``n_groups``, ``default``) refine the grid.
+    Returns a :class:`repro.training.codesign.SearchResult`. For staged /
+    resumable searches use :class:`repro.training.codesign.PolicySearch`
+    directly."""
+    from repro.training.codesign import AccuracySLO, PolicySearch, SearchSpace
+    space = SearchSpace(groups=tuple(groups), **space_kw)
+    slo = AccuracySLO(ber=ber, max_drop=max_drop)
+    return PolicySearch(params, eval_fn, slo, space, n_trials=n_trials,
+                        key=key).search()
+
+
 def _check_engine_grid(engine: sweep_lib.SweepEngine, **expected) -> None:
     """A prebuilt engine runs ITS plan's grid — refuse silently diverging
     explicit arguments instead of ignoring them."""

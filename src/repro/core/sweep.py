@@ -59,6 +59,8 @@ class SweepResult:
     accuracies: List[float]
     corrected: float = 0.0
     uncorrectable: float = 0.0
+    stored_bits: int = 0    # deployment SRAM cells of the arm (policy sweeps:
+                            # the cost axis the policy search minimizes)
 
     @property
     def mean(self) -> float:
@@ -442,6 +444,7 @@ class SweepEngine:
                 raise TypeError(f"arm {name!r}: expected ReliabilityPolicy, "
                                 f"got {type(policy).__name__}")
             dep = dep_lib.CIMDeployment.deploy(params, policy)
+            arm_bits = dep.bit_cost()["stored_bits"]
             dep = dep._replace_stores(self._shard_stores(dep.stores))
             key, subs = _split_schedule(key, len(plan.bers) * plan.n_trials)
             rand = self._shard_trials(
@@ -460,5 +463,6 @@ class SweepEngine:
             for i, ber in enumerate(plan.bers):
                 results.append(SweepResult(
                     ber, "policy", name, [float(a) for a in accs[i]],
-                    float(corr[i].mean()), float(unc[i].mean())))
+                    float(corr[i].mean()), float(unc[i].mean()),
+                    stored_bits=arm_bits))
         return results

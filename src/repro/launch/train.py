@@ -23,7 +23,7 @@ import os
 import jax
 
 from repro.configs import SHAPES, RunConfig, get_config
-from repro.core.api import ReliabilityConfig
+from repro.core.deployment import PolicyRule, ReliabilityPolicy
 from repro.data.synthetic import MarkovLM, batches_for
 from repro.distributed import sharding as shlib
 from repro.launch.mesh import make_host_mesh
@@ -71,16 +71,23 @@ def main(argv=None):
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
 
-    # validated at construction (typos fail here with the allowed vocabulary);
-    # rel.policy is the uniform single-rule ReliabilityPolicy the training
-    # fault schedule (repro.core.deployment.training_fault_schedule) applies
-    rel = ReliabilityConfig(mode=args.rel_mode, n_group=args.n_group,
-                            index=args.index, ber=args.ber,
-                            protect=args.protect, inject=args.inject)
+    # the policy-native surface: flags build a uniform single-rule
+    # ReliabilityPolicy (validated at construction — typos fail here with the
+    # allowed vocabulary); --rel-mode align trains aligned but fault-free
+    # (ber 0), cim adds the dynamic fault schedule
+    rel_kw = {}
+    if args.rel_mode != "off":
+        rel_kw = dict(
+            policy=ReliabilityPolicy(default=PolicyRule(
+                protect=args.protect, n_group=args.n_group,
+                index=args.index)),
+            ber=args.ber if args.rel_mode == "cim" else 0.0,
+            inject=args.inject)
     run = RunConfig(arch=args.arch, steps=args.steps, learning_rate=args.lr,
                     seed=args.seed, checkpoint_dir=args.checkpoint_dir,
-                    checkpoint_every=args.checkpoint_every, reliability=rel,
-                    grad_compression=args.grad_compression, remat=False)
+                    checkpoint_every=args.checkpoint_every,
+                    grad_compression=args.grad_compression, remat=False,
+                    **rel_kw)
 
     if cfg.modality == "text":
         data = MarkovLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
@@ -109,14 +116,18 @@ def main(argv=None):
         if logf:
             logf.write(json.dumps(line) + "\n")
 
-    state, history, info = run_training(cfg, run, batches, log_fn=log)
-    n = lm.param_count(state.params)
-    print(f"done: {len(history)} steps, {n/1e6:.2f}M params, "
-          f"resumed_from={info['resumed_from']}, "
-          f"stragglers={info['stragglers_flagged']}")
+    res = run_training(cfg, run, batches, log_fn=log)
+    n = lm.param_count(res.state.params)
+    print(f"done: {len(res.history)} steps, {n/1e6:.2f}M params, "
+          f"resumed_from={res.info['resumed_from']}, "
+          f"stragglers={res.info['stragglers_flagged']}")
+    if args.rel_mode == "cim":
+        stats = res.ecc_stats
+        print(f"deployment: {stats['stored_bits']} stored bits "
+              f"({stats['overhead']:+.1%} vs raw fp16)")
     if logf:
         logf.close()
-    return state, history, info
+    return res
 
 
 if __name__ == "__main__":

@@ -36,3 +36,53 @@ def lm_loss(logits, labels):
     # 13 GB/step/device at olmo-1b train_4k).
     acc = jnp.sum((picked >= m) & mask) / denom
     return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+# ------------------------------------------------- exponent-compression reg
+#
+# Co-design fine-tuning stage 1 (paper §III-C in spirit, before alignment):
+# exponent alignment forces every N-block onto one shared exponent, so any
+# weight whose magnitude sits far from its block's chosen octave gets crushed
+# by the min–max rescale. The regularizer pre-shrinks that damage: it
+# penalizes each block's log2-magnitude *spread* beyond a margin, pushing the
+# distribution toward block-shareable exponents while the task loss keeps
+# accuracy — measured as before/after accuracy-at-BER in
+# benchmarks/fig7_training.py.
+
+
+def exponent_spread_penalty(w, n_group: int = 8, margin: float = 1.0,
+                            eps: float = 1e-8):
+    """Mean ReLU(log2-magnitude spread − margin) over N-blocks of ``w``.
+
+    Blocks group along the input-channel axis (axis ``ndim-2``, edge-padded),
+    matching :func:`repro.core.align.align_matrix`'s block view. ``margin``
+    is the spread (in octaves) a shared-exponent block can represent without
+    loss — one octave for the [LL, UL] mantissa range of Fig. 5. Smooth a.e.,
+    so it trains with plain SGD/AdamW."""
+    from repro.core.align import _block_view
+    blocks, _ = _block_view(w.astype(jnp.float32), n_group, w.ndim - 2)
+    loge = jnp.log2(jnp.maximum(jnp.abs(blocks), eps))
+    spread = jnp.max(loge, axis=1) - jnp.min(loge, axis=1)
+    return jnp.mean(jax.nn.relu(spread - margin))
+
+
+def exponent_compression_penalty(params, policy, margin: float = 1.0):
+    """Policy-weighted exponent-compression regularizer over a params pytree.
+
+    Each leaf that its :class:`~repro.core.deployment.ReliabilityPolicy` rule
+    deploys contributes ``exponent_spread_penalty`` at the RULE's ``n_group``
+    (so the penalty targets exactly the block structure the leaf will be
+    aligned and packed with); ``deploy=False`` leaves contribute nothing.
+    Returns a scalar (0 when the policy deploys no leaf).
+    """
+    from repro.core.align import is_alignable
+    from repro.core.deployment import path_str
+    leaves_wp, _ = jax.tree_util.tree_flatten_with_path(params)
+    pens = []
+    for path, leaf in leaves_wp:
+        rule = policy.rule_for(path_str(path))
+        if rule.deploy and is_alignable(path, leaf):
+            pens.append(exponent_spread_penalty(leaf, rule.n_group, margin))
+    if not pens:
+        return jnp.zeros(())
+    return jnp.mean(jnp.stack(pens))

@@ -1,0 +1,538 @@
+"""The co-design loop (paper §III-C + beyond): resilience-aware fine-tuning
+and automatic reliability-policy search.
+
+The paper's headline result is a two-sided trade: **fine-tune** the model so
+its exponent distribution compresses into shared-block exponents, then
+**protect** the (now small) sensitive field with lightweight ECC at ~9%
+stored-bit overhead. This module closes that loop end to end:
+
+* :class:`Finetuner` — two-stage resilience-aware fine-tuning *through* the
+  deployment stack, on a ("data","model") host mesh:
+
+    1. **reshape** — train with the exponent-compression regularizer
+       (:func:`repro.models.losses.exponent_compression_penalty`, weighted per
+       the policy's rule groups) and *unfrozen* exponents, shrinking each
+       N-block's log-magnitude spread so the subsequent alignment loses less;
+    2. **aligned** — re-align the reshaped weights per rule
+       (:func:`repro.core.align.align_pytree_policy`), freeze (exponent,
+       sign), and train mantissas under the policy's dynamic fault schedule
+       (:func:`repro.core.deployment.training_fault_schedule` inside the
+       jitted step) — the model learns *under* the soft errors it will serve
+       with.
+
+  Fault streams follow the counter-PRNG contract: per-step keys derive from
+  (seed, step) and split across flat leaves, so streams are bit-identical on
+  1 device and any forced multi-device mesh.
+
+* :class:`PolicySearch` — finds the cheapest per-layer protection meeting an
+  accuracy-vs-BER SLO. The search space is per-group (pattern) choices of
+  ``protect x field x n_group`` (:class:`SearchSpace`); the evaluator is
+  ``SweepEngine.run_policies`` (one compiled (BER x trial) plane per
+  candidate arm); the cost axis is deployed ``stored_bits``
+  (:meth:`repro.core.deployment.CIMDeployment.bit_cost`). Greedy cost-ascent:
+  start every group at its cheapest candidate, batch-evaluate single-step
+  upgrades, accept the best accuracy-per-bit move until the SLO holds, then a
+  prune pass walks groups back down while the SLO still holds.
+
+``python -m repro.training.codesign --quick --json out.json`` runs the CI
+smoke: a short fine-tune plus a 2-candidate policy selection, asserting
+finite losses and reporting the SLO verdict (see ``codesign-smoke`` in CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import cim as cim_lib
+from repro.core import sweep as sweep_lib
+from repro.core.deployment import (PolicyRule, ReliabilityPolicy, path_str,
+                                   VALID_PROTECTS, VALID_FIELDS, check_enum)
+from repro.training import steps as steps_lib
+from repro.training.loop import TrainResult, run_training
+
+
+# ---------------------------------------------------------------- fine-tune
+
+
+@dataclasses.dataclass
+class Finetuner:
+    """Two-stage resilience-aware fine-tuning under a reliability policy.
+
+    ``run(batches, params=...)`` fine-tunes ``params`` (or trains from
+    scratch when None) and returns the stage-2 :class:`TrainResult`, whose
+    ``deployment`` is the final weights packed under ``policy`` and whose
+    ``info['reshape']`` carries the stage-1 curve. ``batches`` is an iterator
+    (consumed across both stages) or a zero-arg callable returning one per
+    stage. ``mesh='auto'`` builds the ("data","model") host mesh over all
+    local devices; pass None to stay unplaced or a prebuilt mesh to control
+    the shape.
+    """
+
+    cfg: ModelConfig
+    policy: ReliabilityPolicy
+    ber: float = 0.0
+    reshape_steps: int = 40
+    aligned_steps: int = 40
+    learning_rate: float = 1e-3
+    exp_reg_coef: float = 5e-2
+    exp_reg_margin: float = 1.0
+    weight_decay: float = 0.0
+    seed: int = 0
+    mesh: object = "auto"
+
+    def _mesh(self):
+        if isinstance(self.mesh, str):
+            if self.mesh != "auto":
+                raise ValueError(f"Finetuner: mesh must be 'auto', None or a "
+                                 f"Mesh, got {self.mesh!r}")
+            from repro.launch.mesh import make_host_mesh
+            return make_host_mesh(model_axis=1)
+        return self.mesh
+
+    def _run_cfg(self, **kw) -> RunConfig:
+        base = dict(arch=self.cfg.arch_id, policy=self.policy,
+                    learning_rate=self.learning_rate,
+                    weight_decay=self.weight_decay, seed=self.seed,
+                    checkpoint_dir="", remat=False, warmup_steps=0)
+        base.update(kw)
+        return RunConfig(**base)
+
+    def _batches(self, batches):
+        if callable(batches):
+            return iter(batches())
+        return iter(batches)
+
+    def run(self, batches, params=None,
+            log_fn: Optional[Callable] = None) -> TrainResult:
+        mesh = self._mesh()
+        key = jax.random.PRNGKey(self.seed)
+        reshape_hist: List[Dict] = []
+        if self.reshape_steps > 0:
+            run1 = self._run_cfg(steps=self.reshape_steps, ber=0.0,
+                                 exp_reg_coef=self.exp_reg_coef,
+                                 exp_reg_margin=self.exp_reg_margin,
+                                 freeze_exponents=False)
+            state1 = steps_lib.init_train_state(key, self.cfg, run1,
+                                                params=params)
+            res1 = run_training(self.cfg, run1, self._batches(batches),
+                                log_fn=log_fn, state=state1, mesh=mesh)
+            params = res1.state.params
+            reshape_hist = res1.history
+
+        run2 = self._run_cfg(steps=self.aligned_steps, ber=self.ber,
+                             inject="dynamic", freeze_exponents=True)
+        state2 = steps_lib.init_train_state(jax.random.fold_in(key, 1),
+                                            self.cfg, run2, params=params)
+        res2 = run_training(self.cfg, run2, self._batches(batches),
+                            log_fn=log_fn, state=state2, mesh=mesh)
+        res2.info["reshape"] = {"steps": self.reshape_steps,
+                                "history": reshape_hist}
+        return res2
+
+
+# ------------------------------------------------------------ search space
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Per-layer protection search grammar.
+
+    ``groups`` is an ordered tuple of ``(name, pattern)`` rule groups —
+    pattern syntax is :class:`PolicyRule`'s (glob / ``re:`` regex, first
+    match wins, so order specific groups before catch-alls). Every group
+    independently picks one candidate from the ``protects x fields x
+    n_groups`` grid; leaves no group matches fall to ``default`` (fixed, not
+    searched).
+    """
+
+    groups: Tuple[Tuple[str, str], ...]
+    protects: Tuple[str, ...] = ("none", "one4n", "per_weight")
+    fields: Tuple[str, ...] = ("full",)
+    n_groups: Tuple[int, ...] = (8,)
+    default: PolicyRule = PolicyRule()
+
+    def __post_init__(self):
+        object.__setattr__(self, "groups", tuple(
+            (str(n), str(p)) for n, p in self.groups))
+        object.__setattr__(self, "protects", tuple(self.protects))
+        object.__setattr__(self, "fields", tuple(self.fields))
+        object.__setattr__(self, "n_groups", tuple(int(n)
+                                                   for n in self.n_groups))
+        if not self.groups:
+            raise ValueError("SearchSpace: need at least one (name, pattern) "
+                             "group")
+        names = [n for n, _ in self.groups]
+        if len(set(names)) != len(names):
+            raise ValueError(f"SearchSpace: duplicate group names in {names}")
+        for p in self.protects:
+            check_enum("protects", p, VALID_PROTECTS, "SearchSpace")
+        for f in self.fields:
+            check_enum("fields", f, VALID_FIELDS, "SearchSpace")
+        if not self.protects or not self.fields or not self.n_groups:
+            raise ValueError("SearchSpace: protects/fields/n_groups must be "
+                             "non-empty")
+
+    def candidates(self) -> Tuple[dict, ...]:
+        """The per-group candidate grid as PolicyRule kwargs."""
+        return tuple(dict(protect=p, field=f, n_group=n)
+                     for p, f, n in itertools.product(
+                         self.protects, self.fields, self.n_groups))
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracySLO:
+    """Accuracy floor at a BER: ``accuracy(ber) >= clean - max_drop`` (and
+    ``>= min_accuracy`` when given). ``floor`` resolves the effective bound
+    against the measured clean accuracy."""
+
+    ber: float
+    max_drop: float = 0.02
+    min_accuracy: Optional[float] = None
+
+    def __post_init__(self):
+        if self.ber < 0:
+            raise ValueError(f"AccuracySLO: ber must be >= 0, got {self.ber}")
+        if self.max_drop < 0:
+            raise ValueError(f"AccuracySLO: max_drop must be >= 0, got "
+                             f"{self.max_drop}")
+
+    def floor(self, clean_accuracy: float) -> float:
+        f = clean_accuracy - self.max_drop
+        if self.min_accuracy is not None:
+            f = max(f, self.min_accuracy)
+        return f
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of a policy search/selection."""
+
+    policy: ReliabilityPolicy
+    name: str
+    accuracy: float            # mean accuracy at slo.ber under the policy
+    clean_accuracy: float
+    floor: float               # resolved SLO floor
+    slo_met: bool
+    stored_bits: int
+    raw_bits: int
+    overhead: float            # stored_bits / raw_bits - 1
+    evals: int                 # total candidate-arm evaluations spent
+    trace: List[Dict]          # per-move search log
+
+    @property
+    def assignment(self) -> Dict[str, dict]:
+        """Group name -> chosen rule settings (search results only)."""
+        return {r.pattern: dict(protect=r.protect, field=r.field,
+                                n_group=r.n_group)
+                for r in self.policy.rules}
+
+
+class PolicySearch:
+    """Cheapest per-layer protection meeting an accuracy-vs-BER SLO.
+
+    ``eval_fn(params) -> scalar accuracy`` must be jit-compatible (same
+    contract as the characterization engine). Evaluation goes through
+    ``SweepEngine.run_policies`` — one compiled (BER x trial) plane per arm,
+    trials batched and mesh-sharded; cost comes from the arm's actual
+    deployed ``stored_bits``.
+    """
+
+    def __init__(self, params, eval_fn: Callable, slo: AccuracySLO,
+                 space: Optional[SearchSpace] = None, *, n_trials: int = 3,
+                 key=None, engine: Optional[sweep_lib.SweepEngine] = None):
+        self.params = params
+        self.eval_fn = eval_fn
+        self.slo = slo
+        self.space = space
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        if engine is None:
+            plan = sweep_lib.SweepPlan(bers=(slo.ber,), n_trials=n_trials)
+            engine = sweep_lib.SweepEngine(plan)
+        elif engine.plan.bers != (float(slo.ber),):
+            raise ValueError(f"engine.plan.bers={engine.plan.bers} must be "
+                             f"exactly (slo.ber,)=({slo.ber},)")
+        self.engine = engine
+        self.evals = 0
+        self.trace: List[Dict] = []
+        self._clean: Optional[float] = None
+        self._bits_cache: Dict[tuple, int] = {}
+
+    # ------------------------------------------------------------- plumbing
+
+    def clean_accuracy(self) -> float:
+        if self._clean is None:
+            self._clean = float(jax.device_get(self.eval_fn(self.params)))
+        return self._clean
+
+    def _leaf_bits(self, shape, rule: PolicyRule) -> int:
+        """Stored bits of one K x J leaf under ``rule`` — shape-only, so a
+        zeros probe pack is cached per (shape, packing config)."""
+        ck = (tuple(shape), rule.protect, rule.n_group, rule.index,
+              rule.row_weights, rule.fmt_name)
+        if ck not in self._bits_cache:
+            probe = cim_lib.pack(jnp.zeros(shape, jnp.float32), rule.cim_cfg)
+            self._bits_cache[ck] = int(probe.stored_bits)
+        return self._bits_cache[ck]
+
+    def _group_map(self) -> Dict[Optional[str], List[tuple]]:
+        """Group name -> [(path, shape)] of the deployable leaves it owns
+        (first matching group wins, mirroring rule order); key None holds the
+        default rule's leaves."""
+        from repro.core.cim import _deployable
+        probes = {name: PolicyRule(pattern)
+                  for name, pattern in self.space.groups}
+        out: Dict[Optional[str], List[tuple]] = {None: []}
+        out.update({name: [] for name, _ in self.space.groups})
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.params)[0]:
+            if not _deployable(path, leaf):
+                continue
+            p = path_str(path)
+            for name, _ in self.space.groups:
+                if probes[name].matches(p):
+                    out[name].append((p, tuple(leaf.shape)))
+                    break
+            else:
+                out[None].append((p, tuple(leaf.shape)))
+        return out
+
+    def _policy_of(self, assignment: Dict[str, dict]) -> ReliabilityPolicy:
+        rules = tuple(PolicyRule(pattern, **assignment[name])
+                      for name, pattern in self.space.groups)
+        return ReliabilityPolicy(rules=rules, default=self.space.default)
+
+    def _evaluate(self, named_policies) -> Dict[str, tuple]:
+        """One batched engine call -> {name: (mean accuracy, stored_bits)}."""
+        if isinstance(named_policies, dict):
+            named_policies = list(named_policies.items())
+        self.key, sub = jax.random.split(self.key)
+        results = self.engine.run_policies(sub, self.params, self.eval_fn,
+                                           named_policies)
+        self.evals += len(named_policies)
+        return {r.protect: (r.mean, r.stored_bits) for r in results}
+
+    # --------------------------------------------------------------- search
+
+    def search(self, max_rounds: Optional[int] = None) -> SearchResult:
+        """Greedy cost-ascent + prune over the :class:`SearchSpace`."""
+        if self.space is None:
+            raise ValueError("PolicySearch.search needs a SearchSpace (or "
+                             "use .select(named_policies))")
+        clean = self.clean_accuracy()
+        floor = self.slo.floor(clean)
+        cands = self.space.candidates()
+        gmap = self._group_map()
+        for name, _ in self.space.groups:
+            if not gmap[name]:
+                self.trace.append({"action": "warn-empty-group",
+                                   "group": name})
+
+        def group_bits(name: str, ci: int) -> int:
+            rule = PolicyRule("*", **cands[ci])
+            return sum(self._leaf_bits(shape, rule)
+                       for _, shape in gmap[name])
+
+        # per-group candidate order, cheapest stored-bits first
+        order = {name: sorted(range(len(cands)),
+                              key=lambda ci: (group_bits(name, ci), ci))
+                 for name, _ in self.space.groups}
+        pos = {name: 0 for name, _ in self.space.groups}
+
+        def assignment():
+            return {name: cands[order[name][pos[name]]]
+                    for name, _ in self.space.groups}
+
+        acc, bits = self._evaluate([("start", self._policy_of(assignment()))])[
+            "start"]
+        self.trace.append({"action": "start", "accuracy": acc,
+                           "stored_bits": bits, "floor": floor})
+
+        budget = max_rounds if max_rounds is not None else \
+            len(order) * len(cands)
+        rounds = 0
+        while acc < floor and rounds < budget:
+            rounds += 1
+            proposals = {}
+            for name, _ in self.space.groups:
+                if pos[name] + 1 < len(order[name]):
+                    a = assignment()
+                    a[name] = cands[order[name][pos[name] + 1]]
+                    proposals[name] = self._policy_of(a)
+            if not proposals:
+                break
+            res = self._evaluate([(n, p) for n, p in proposals.items()])
+            # a proposal that already meets the SLO wins on cheapness;
+            # otherwise climb the best accuracy-gain-per-added-bit slope
+            meeting = [(res[n][1], n) for n in proposals if res[n][0] >= floor]
+            if meeting:
+                _, pick = min(meeting)
+            else:
+                def slope(n):
+                    da = res[n][0] - acc
+                    db = max(res[n][1] - bits, 1)
+                    return da / db
+                pick = max(proposals, key=slope)
+            pos[pick] += 1
+            acc, bits = res[pick]
+            self.trace.append({"action": "upgrade", "group": pick,
+                               "candidate": cands[order[pick][pos[pick]]],
+                               "accuracy": acc, "stored_bits": bits})
+
+        # prune: walk groups back down while the SLO still holds
+        while acc >= floor:
+            downs = {}
+            for name, _ in self.space.groups:
+                if pos[name] > 0:
+                    a = assignment()
+                    a[name] = cands[order[name][pos[name] - 1]]
+                    downs[name] = self._policy_of(a)
+            if not downs:
+                break
+            res = self._evaluate([(n, p) for n, p in downs.items()])
+            ok = [(res[n][1], n) for n in downs if res[n][0] >= floor]
+            if not ok:
+                break
+            _, pick = min(ok)   # biggest saving = smallest resulting bits
+            pos[pick] -= 1
+            acc, bits = res[pick]
+            self.trace.append({"action": "prune", "group": pick,
+                               "candidate": cands[order[pick][pos[pick]]],
+                               "accuracy": acc, "stored_bits": bits})
+
+        policy = self._policy_of(assignment())
+        return self._result(policy, "searched", acc, clean, floor, bits)
+
+    def select(self, named_policies) -> SearchResult:
+        """Cheapest SLO-meeting policy from an explicit candidate list (the
+        2-candidate CI smoke path); falls back to the most accurate candidate
+        when none meets the floor (``slo_met=False``)."""
+        if isinstance(named_policies, dict):
+            named_policies = list(named_policies.items())
+        if not named_policies:
+            raise ValueError("select: empty candidate list")
+        clean = self.clean_accuracy()
+        floor = self.slo.floor(clean)
+        res = self._evaluate(named_policies)
+        by_name = dict(named_policies)
+        meeting = [(res[n][1], n) for n, _ in named_policies
+                   if res[n][0] >= floor]
+        if meeting:
+            _, name = min(meeting)
+        else:
+            name = max(res, key=lambda n: res[n][0])
+        acc, bits = res[name]
+        self.trace.append({"action": "select", "name": name,
+                           "accuracy": acc, "stored_bits": bits,
+                           "floor": floor,
+                           "arms": {n: {"accuracy": res[n][0],
+                                        "stored_bits": res[n][1]}
+                                    for n in res}})
+        return self._result(by_name[name], name, acc, clean, floor, bits)
+
+    def _result(self, policy, name, acc, clean, floor, bits) -> SearchResult:
+        from repro.core.deployment import CIMDeployment
+        cost = CIMDeployment.deploy(self.params, policy).bit_cost()
+        return SearchResult(policy=policy, name=name, accuracy=acc,
+                            clean_accuracy=clean, floor=floor,
+                            slo_met=acc >= floor,
+                            stored_bits=cost["stored_bits"],
+                            raw_bits=cost["raw_bits"],
+                            overhead=cost["overhead"], evals=self.evals,
+                            trace=list(self.trace))
+
+
+# ------------------------------------------------------------- CI smoke CLI
+
+
+def _smoke(args) -> dict:
+    """Quick fine-tune + 2-candidate policy selection (codesign-smoke CI)."""
+    import time
+    from repro.configs import get_config
+    from repro.data.synthetic import MarkovLM
+    from repro.models import lm
+    from repro.models.losses import lm_loss
+
+    t0 = time.time()
+    cfg = get_config("olmo-1b").reduced()
+    data = MarkovLM(cfg.vocab_size, 64, 8, seed=0)
+    policy = ReliabilityPolicy()      # uniform one4n
+    ft = Finetuner(cfg, policy, ber=args.ber,
+                   reshape_steps=args.reshape_steps,
+                   aligned_steps=args.aligned_steps, seed=0)
+    res = ft.run(iter(data))
+    losses = np.asarray(
+        [h["loss"] for h in res.info["reshape"]["history"]] +
+        [h["loss"] for h in res.history])
+    eval_batches = [data.batch(9000 + i) for i in range(2)]
+
+    def eval_fn(params):
+        accs = []
+        for batch in eval_batches:
+            logits, _, _ = lm.forward(params, cfg, batch, remat=False)
+            accs.append(lm_loss(logits, batch["labels"])[1]["accuracy"])
+        return jnp.mean(jnp.stack(accs))
+
+    search = PolicySearch(res.state.params, eval_fn,
+                          AccuracySLO(ber=args.ber, max_drop=args.max_drop),
+                          n_trials=2)
+    sel = search.select({
+        "uniform_one4n": ReliabilityPolicy(),
+        "embeds_only": ReliabilityPolicy(
+            rules=(PolicyRule("embed", protect="one4n"),
+                   PolicyRule("unembed", protect="one4n"),
+                   PolicyRule("*", protect="none"))),
+    })
+    return {
+        "quick": True,
+        "wall_s": time.time() - t0,
+        "finetune": {"steps": int(len(losses)),
+                     "final_loss": float(losses[-1]),
+                     "losses_finite": bool(np.isfinite(losses).all()),
+                     "ecc_stats": res.ecc_stats},
+        "search": {"selected": sel.name, "slo_met": bool(sel.slo_met),
+                   "accuracy": sel.accuracy,
+                   "clean_accuracy": sel.clean_accuracy,
+                   "floor": sel.floor, "stored_bits": sel.stored_bits,
+                   "overhead": sel.overhead, "evals": sel.evals},
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="co-design smoke: quick fine-tune + policy selection")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink steps further (CI)")
+    ap.add_argument("--ber", type=float, default=1e-3)
+    ap.add_argument("--max-drop", type=float, default=0.05)
+    ap.add_argument("--reshape-steps", type=int, default=20)
+    ap.add_argument("--aligned-steps", type=int, default=20)
+    ap.add_argument("--json", default=None, help="write the report here")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.reshape_steps = min(args.reshape_steps, 10)
+        args.aligned_steps = min(args.aligned_steps, 10)
+
+    out = _smoke(args)
+    print(json.dumps(out, indent=2))
+    if args.json:
+        import os
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    if not out["finetune"]["losses_finite"]:
+        print("codesign smoke: NON-FINITE training losses")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,8 +1,12 @@
 """The training loop: checkpointing, auto-resume, straggler watchdog, dynamic
 fault injection — the part of the framework that has to survive a fleet.
 
-``run_training`` is used by ``launch/train.py``, the examples and the
-fault-tolerance tests. Reliability modes:
+``run_training`` is used by ``launch/train.py``, the examples, the co-design
+fine-tuner (:mod:`repro.training.codesign`) and the fault-tolerance tests.
+Reliability is **policy-native**: pass ``RunConfig(policy=..., ber=...)``; the
+legacy ``RunConfig(reliability=ReliabilityConfig(...))`` path still works but
+raises a ``DeprecationWarning`` (it compiles into a single-rule policy
+bit-compatibly — training streams unchanged). Modes:
 
   * ``off`` / ``align`` — plain or frozen-exponent training (align projection
     lives inside ``train_step``);
@@ -11,15 +15,27 @@ fault-tolerance tests. Reliability modes:
     ``protect=one4n`` the exponent/sign field sees the post-ECC residual rate
     (closed form, ``residual_ber_after_secded``); with ``protect=none`` it
     sees the raw BER. Mantissa bits are always unprotected (the paper's
-    design decision).
+    design decision). Multi-rule policies give each leaf ITS rule's residual
+    rate, field restriction and BER scale.
+
+``run_training`` returns a structured :class:`TrainResult`; legacy callers
+that unpack ``state, history, info = run_training(...)`` keep working (the
+result iterates as that triple).
+
+Counter-PRNG contract: the per-step fault key is
+``fold_in(PRNGKey(seed+17), step)`` and splits across flat leaves — a pure
+function of (seed, step, policy, pytree structure), independent of device
+count or mesh shape. Training fault streams are bit-identical on 1 device and
+a forced-8-device ("data","model") mesh (tests/test_codesign.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import json
+import functools
 import os
 import time
-from typing import Callable, Dict, Iterable, Optional
+import warnings
+from typing import Callable, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,23 +50,96 @@ def make_fault_schedule(run: RunConfig):
     """Per-step weight corruption for dynamic injection (or None).
 
     Delegates to :func:`repro.core.deployment.training_fault_schedule`: with
-    the (uniform) policy of ``run.reliability`` every leaf sees the post-ECC
-    residual rate on exponent/sign and the raw BER on mantissas — the legacy
-    schedule, stream-for-stream; a multi-rule policy gives each layer ITS
-    rule's residual rate and BER scale."""
+    a uniform policy every leaf sees the post-ECC residual rate on
+    exponent/sign and the raw BER on mantissas — the legacy schedule,
+    stream-for-stream; a multi-rule policy gives each layer ITS rule's
+    residual rate and BER scale."""
     from repro.core import deployment as dep_lib
-    return dep_lib.training_fault_schedule(run.reliability)
+    return dep_lib.training_fault_schedule(run.rel)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """Structured result of :func:`run_training`.
+
+    Iterates as the legacy ``(state, history, info)`` triple, so existing
+    tuple-unpacking call sites keep working. ``deployment`` lazily packs the
+    final weights onto the emulated macro under the run's policy (None when
+    the run was not in ``cim`` mode); ``ecc_stats`` combines the deployment's
+    stored-bit cost accounting with its ECC counters.
+    """
+
+    state: steps_lib.TrainState
+    history: List[Dict]
+    info: Dict
+    cfg: ModelConfig
+    run: RunConfig
+
+    def __iter__(self):
+        # legacy compat: `state, history, info = run_training(...)`
+        return iter((self.state, self.history, self.info))
+
+    @functools.cached_property
+    def deployment(self):
+        """The final weights deployed under the run's policy (lazy; None
+        unless the resolved reliability mode is 'cim')."""
+        rel = self.run.rel
+        if rel.mode != "cim":
+            return None
+        from repro.core import deployment as dep_lib
+        return dep_lib.CIMDeployment.deploy(self.state.params, rel.policy)
+
+    @property
+    def ecc_stats(self) -> Dict:
+        """Stored-bit/overhead accounting + cumulative ECC counters of the
+        final deployment ({} when not deployed)."""
+        dep = self.deployment
+        if dep is None:
+            return {}
+        out = dict(dep.bit_cost())
+        out.update({k: int(v) for k, v in dep.ecc_stats.items()})
+        return out
+
+    @property
+    def final_loss(self) -> float:
+        return float(self.history[-1]["loss"]) if self.history else float("nan")
+
+
+def _shard_batch(batch, mesh):
+    """Data-parallel batch placement: leading-axis leaves split over "data"
+    when divisible, everything else replicated (bitwise-neutral — sharding
+    never changes the computed streams, only their placement)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = int(mesh.shape.get("data", 1))
+
+    def place(x):
+        x = jnp.asarray(x)
+        spec = P("data") if (x.ndim >= 1 and n > 1 and x.shape[0] % n == 0) \
+            else P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(place, batch)
 
 
 def run_training(cfg: ModelConfig, run: RunConfig, batches: Iterable[Dict],
                  log_fn: Optional[Callable[[int, Dict], None]] = None,
                  state: Optional[steps_lib.TrainState] = None,
-                 sleep_injector: Optional[Callable[[int], float]] = None):
+                 sleep_injector: Optional[Callable[[int], float]] = None,
+                 mesh=None) -> TrainResult:
     """Train for ``run.steps`` steps with checkpoint/resume + watchdog.
 
-    Returns (final state, history list, info dict)."""
+    ``mesh`` (optional, a ("data","model") mesh from
+    :func:`repro.launch.mesh.make_host_mesh`) turns on data-parallel batch
+    sharding; state stays replicated and GSPMD partitions the step. Returns a
+    :class:`TrainResult` (unpacks as the legacy ``(state, history, info)``).
+    """
+    if run.reliability is not None:
+        warnings.warn(
+            "RunConfig(reliability=ReliabilityConfig(...)) is deprecated; "
+            "pass RunConfig(policy=<ReliabilityPolicy>, ber=..., inject=...) "
+            "instead (ReliabilityConfig.from_policy compiles it "
+            "bit-compatibly).", DeprecationWarning, stacklevel=2)
     corrupt = make_fault_schedule(run)
-    rel = run.reliability
 
     def wrapped_step(state, batch, key):
         if corrupt is not None:
@@ -82,11 +171,20 @@ def run_training(cfg: ModelConfig, run: RunConfig, batches: Iterable[Dict],
     if state is None:
         state = steps_lib.init_train_state(jax.random.PRNGKey(run.seed), cfg, run)
 
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(mesh, P())
+        state = jax.tree_util.tree_map(
+            lambda x: None if x is None else jax.device_put(jnp.asarray(x), rep),
+            state, is_leaf=lambda x: x is None)
+
     watchdog = StragglerWatchdog(factor=run.straggler_factor)
     history, stragglers = [], 0
     it = iter(batches)
     for step in range(start_step, run.steps):
         batch = next(it)
+        if mesh is not None:
+            batch = _shard_batch(batch, mesh)
         t0 = time.time()
         if sleep_injector is not None:   # simulated host slowness (tests)
             time.sleep(sleep_injector(step))
@@ -110,4 +208,5 @@ def run_training(cfg: ModelConfig, run: RunConfig, batches: Iterable[Dict],
         checkpointer.close()
     info = {"stragglers_flagged": stragglers, "resumed_from": start_step,
             "ewma_step_time": watchdog.ewma}
-    return state, history, info
+    return TrainResult(state=state, history=history, info=info, cfg=cfg,
+                       run=run)

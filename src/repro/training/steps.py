@@ -39,12 +39,22 @@ class TrainState:
         return cls(*children)
 
 
-def init_train_state(key, cfg: ModelConfig, run: RunConfig) -> TrainState:
-    params = lm.init_lm(key, cfg)
-    rel = run.reliability
+def init_train_state(key, cfg: ModelConfig, run: RunConfig,
+                     params=None) -> TrainState:
+    """Fresh TrainState (new optimizer): init weights, or align+freeze the
+    given ``params`` (the co-design fine-tuning entry — stage 2 re-aligns a
+    reshaped model instead of re-initializing it)."""
+    if params is None:
+        params = lm.init_lm(key, cfg)
+    rel = run.rel
     exps = signs = jax.tree_util.tree_map(lambda _: None, params)
-    if rel.enabled():
-        params, exps = align_lib.align_pytree(params, rel.align_cfg)
+    if rel.enabled() and run.freeze_exponents:
+        if rel.policy.uniform:
+            # the legacy uniform path, stream/bit-compatible with every
+            # pre-policy checkpoint (tests pin the frozen exponents)
+            params, exps = align_lib.align_pytree(params, rel.align_cfg)
+        else:
+            params, exps = align_lib.align_pytree_policy(params, rel.policy)
         signs = jax.tree_util.tree_map(
             lambda w, e: jnp.sign(w).astype(jnp.int8) if e is not None else None,
             params, exps, is_leaf=lambda x: x is None)
@@ -57,7 +67,9 @@ def init_train_state(key, cfg: ModelConfig, run: RunConfig) -> TrainState:
 
 def make_train_step(cfg: ModelConfig, run: RunConfig,
                     unroll: bool = False) -> Callable:
-    rel = run.reliability
+    rel = run.rel
+    project = rel.enabled() and run.freeze_exponents
+    reg_policy = rel.policy if run.exp_reg_coef > 0 else None
     opt_cfg = adamw.AdamWConfig(weight_decay=run.weight_decay,
                                 grad_clip=run.grad_clip)
     lr_fn = adamw.make_lr_schedule(run.learning_rate, run.warmup_steps, run.steps)
@@ -78,6 +90,12 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
         logits, aux, _ = lm.forward(params_c, cfg, batch, remat=run.remat,
                                     unroll=unroll)
         loss, metrics = lm_loss(logits, batch["labels"])
+        if reg_policy is not None:
+            from repro.models.losses import exponent_compression_penalty
+            pen = exponent_compression_penalty(params, reg_policy,
+                                               margin=run.exp_reg_margin)
+            loss = loss + run.exp_reg_coef * pen
+            metrics = dict(metrics, exp_penalty=pen)
         return loss + aux, (metrics, aux)
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
@@ -92,9 +110,13 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
 
         lr = lr_fn(state.opt["step"])
         params, opt = adamw.adamw_update(grads, state.opt, state.params, lr, opt_cfg)
-        if rel.enabled():
-            params = align_lib.project_pytree(params, state.exps, state.signs,
-                                              rel.align_cfg)
+        if project:
+            if rel.policy.uniform:
+                params = align_lib.project_pytree(params, state.exps,
+                                                  state.signs, rel.align_cfg)
+            else:
+                params = align_lib.project_pytree_policy(
+                    params, state.exps, state.signs, rel.policy)
         metrics = dict(metrics, grad_norm=gnorm, lr=lr, aux_loss=aux)
         return TrainState(params, opt, state.exps, state.signs, ef), metrics
 

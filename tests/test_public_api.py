@@ -30,6 +30,14 @@ PUBLIC_API_SNAPSHOT = (
     "characterize_fields",
     "characterize_policies",
     "characterize_protection",
+    # co-design loop (resilience-aware fine-tuning + policy search)
+    "AccuracySLO",
+    "Finetuner",
+    "PolicySearch",
+    "SearchSpace",
+    "TrainResult",
+    "run_training",
+    "search_policies",
     # kernel ops
     "ber_to_threshold",
     "cim_linear_store",
@@ -67,11 +75,17 @@ def test_public_api_entry_points_are_usable():
     assert repro.PolicyRule().protect == "one4n"
     assert repro.ReliabilityConfig().mode == "off"
     for name in ("characterize_fields", "characterize_policies",
-                 "characterize_protection", "cim_linear_store",
+                 "characterize_protection", "search_policies",
+                 "run_training", "cim_linear_store",
                  "cim_linear_store_sharded", "dispatch_linear",
                  "dispatch_read_rows", "ber_to_threshold",
                  "fault_inject_bits"):
         assert callable(getattr(repro, name))
     assert inspect.isclass(repro.CIMDeployment)
     assert hasattr(repro.CIMDeployment, "deploy")
+    for name in ("Finetuner", "PolicySearch", "SearchSpace", "AccuracySLO",
+                 "TrainResult"):
+        assert inspect.isclass(getattr(repro, name))
+    assert hasattr(repro.PolicySearch, "search")
+    assert hasattr(repro.Finetuner, "run")
     assert repro.__version__
