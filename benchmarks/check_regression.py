@@ -114,6 +114,12 @@ def _flatten_engine(d: dict) -> dict:
         # KV reuse must keep beating recomputation
         out["engine.prefix_hit_ttft_ratio"] = \
             (LOWER, fleet["prefix_hit_ttft_ratio"])
+    scrub = d.get("scrub") or {}
+    if scrub.get("scrub_overhead_tok_s_ratio"):
+        # scrub-on / scrub-off end-to-end tok/s under the drift soak: the
+        # self-healing loop must not collapse throughput (hard floor)
+        out["engine.scrub_overhead_tok_s_ratio"] = \
+            (HIGHER, scrub["scrub_overhead_tok_s_ratio"])
     return out
 
 

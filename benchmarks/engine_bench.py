@@ -24,6 +24,15 @@ Two fleet arms ride along (``repro.launch.fleet``):
    prefill cost): gated ``engine.prefix_hit_ttft_ratio`` = warm / cold mean
    TTFT over the prefix-hit requests. Hard bound: <= 0.6x.
 
+A fifth arm measures the online-scrubbing loop (``repro.launch.scrub``):
+
+5. **scrub overhead** — the same drift-aging soak (per-step wear at
+   ``AGE_BER``, drift process) served scrub-off vs scrub-on
+   (ECC-threshold re-encode + params hot-swap mid-flight): gated
+   ``engine.scrub_overhead_tok_s_ratio`` = scrub-on / scrub-off end-to-end
+   ``tok_s``. Hard ``bound`` floor in the baseline — self-healing must not
+   collapse serving throughput.
+
 Gated metrics (``benchmarks/check_regression.py --engine``):
 
 * ``engine.continuous_vs_sequential_tok_s`` — aggregate decode tok/s ratio,
@@ -31,7 +40,9 @@ Gated metrics (``benchmarks/check_regression.py --engine``):
 * ``engine.decode_s_per_tok`` / ``engine.ttft_s_mean`` — absolute
   wall-clock guards (coarse 2x bound, runner-dependent);
 * ``engine.fleet_scaling_tok_s`` / ``engine.prefix_hit_ttft_ratio`` — the
-  fleet wins above, with hard ``bound`` floors/ceilings in the baseline.
+  fleet wins above, with hard ``bound`` floors/ceilings in the baseline;
+* ``engine.scrub_overhead_tok_s_ratio`` — the scrub-on throughput cost,
+  hard floor.
 
 Every arm runs once unmeasured to absorb jit compiles (TTFT would otherwise
 be compile time, not scheduling latency).
@@ -64,6 +75,9 @@ PREFIX_REQS = 8 if not QUICK else 6
 PREFIX_LEN = 24            # 3 full shared chunks; per-request tail runs cold
 FLEET_REQS = 32 if not QUICK else 12
 FLEET_SLOTS = 2            # keep per-replica decode batches full at half load
+SCRUB_REQS = 12 if not QUICK else 6
+AGE_BER = 1e-3             # per-step wear under the drift process
+SCRUB_THRESHOLD = 8        # per-store ECC events before a re-encode fires
 
 
 def _setup():
@@ -147,6 +161,47 @@ def _prefix_arm(cfg, sparams) -> dict:
             "prefix_hit_ttft_ratio": warm_s / max(cold_s, 1e-9)}
 
 
+def _scrub_arm(cfg) -> dict:
+    """Drift-aging soak scrub-off vs scrub-on: the gated ratio is end-to-end
+    ``tok_s`` (wall includes the on_step hook, so re-encode + hot-swap +
+    decoded-row-cache rewarm all land in the scrub-on arm). Both arms pay
+    the identical per-step wear injection, so the ratio isolates what the
+    self-healing itself costs."""
+    from repro.launch import scrub as scrub_lib
+
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dep = serve_lib.make_deployment(
+        params, ber=0.0, protect="one4n", n_group=8, index=2,
+        key=jax.random.fold_in(key, 1), inject_mode="static", field="full")
+    load = engine_lib.LoadGen(n_requests=SCRUB_REQS, prompt_lens=PROMPTS,
+                              gen_lens=GENS, vocab_size=cfg.vocab_size,
+                              seed=3)
+
+    def run(scrub: bool):
+        thresh = SCRUB_THRESHOLD if scrub else 10 ** 12
+        ctl = scrub_lib.ScrubController(
+            dep, scrub_lib.ScrubPolicy(threshold=thresh),
+            aging=scrub_lib.DriftAging(key=jax.random.PRNGKey(77),
+                                       ber=AGE_BER))
+        # accounting stays ON — it is the scrub-decision signal; the rotting
+        # scrub-off arm may go non-finite, which is the point
+        eng = engine_lib.Engine(cfg, dep.serving_params(), n_slots=SLOTS,
+                                max_len=load.max_len(), chunk=CHUNK,
+                                check_finite=False)
+        _, agg = eng.run(load.requests(), on_step=ctl)
+        return agg
+
+    run(False)     # warm: compiles + first cache decode
+    off, on = run(False), run(True)
+    return {"off": off, "on": on,
+            "scrub_events": on["scrub"]["events"],
+            "uncorrectable_off": off["ecc"]["uncorrectable"],
+            "uncorrectable_on": on["ecc"]["uncorrectable"],
+            "scrub_overhead_tok_s_ratio":
+                on["tok_s"] / max(off["tok_s"], 1e-9)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, help="write metrics JSON")
@@ -181,13 +236,20 @@ def main(argv=None):
           f"{prefix['admit_warm_s']*1e3:.1f} ms "
           f"({prefix['prefix_hit_ttft_ratio']:.2f}x)")
 
+    scrub = _scrub_arm(cfg)
+    print(f"scrub soak ({SCRUB_REQS} requests, wear {AGE_BER:.0e}/step): "
+          f"{scrub['off']['tok_s']:.1f} -> {scrub['on']['tok_s']:.1f} tok/s "
+          f"({scrub['scrub_overhead_tok_s_ratio']:.2f}x, "
+          f"{scrub['scrub_events']} scrubs, uncorrectable "
+          f"{scrub['uncorrectable_off']} -> {scrub['uncorrectable_on']})")
+
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         payload = {"quick": QUICK,
                    "n_requests": N_REQUESTS, "slots": SLOTS, "chunk": CHUNK,
                    "engine": eng, "sequential": seq,
                    "continuous_vs_sequential_tok_s": ratio,
-                   "fleet": fleet}
+                   "fleet": fleet, "scrub": scrub}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

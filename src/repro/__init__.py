@@ -26,6 +26,9 @@ from repro.core.api import ReliabilityConfig  # noqa: F401
 from repro.core.align import AlignmentConfig  # noqa: F401
 from repro.core.cim import CIMConfig, CIMStore  # noqa: F401
 from repro.core.fault import FaultModel  # noqa: F401
+# fault-model zoo (error processes on the counter-PRNG flip contract)
+from repro.core.faultmodels import (FaultProcess,  # noqa: F401
+                                    parse_fault_model)
 # characterization engine (paper Fig. 2 / Fig. 6 grids)
 from repro.core.resilience import (characterize_fields,  # noqa: F401
                                    characterize_policies,
@@ -46,6 +49,9 @@ from repro.launch.engine import (Engine, LoadGen,  # noqa: F401
                                  PrefixCache, Request)
 # fleet serving (data-parallel replicas behind the SLO-aware router)
 from repro.launch.fleet import Fleet  # noqa: F401
+# online ECC scrubbing (self-healing serving loop)
+from repro.launch.scrub import (DriftAging, ScrubController,  # noqa: F401
+                                ScrubPolicy)
 
 __all__ = [
     "__version__",
@@ -61,6 +67,9 @@ __all__ = [
     "CIMStore",
     "FaultModel",
     "ReliabilityConfig",
+    # fault-model zoo
+    "FaultProcess",
+    "parse_fault_model",
     # characterization
     "SweepEngine",
     "SweepPlan",
@@ -88,4 +97,8 @@ __all__ = [
     "Request",
     # fleet serving
     "Fleet",
+    # online ECC scrubbing
+    "DriftAging",
+    "ScrubController",
+    "ScrubPolicy",
 ]

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core import align as align_lib
 from repro.core import bitops, bitpack
+from repro.core import faultmodels as fm
 from repro.core.bitops import FP16, FloatFormat
 from repro.core.ecc import One4NRowCodec, SecdedCode
 
@@ -224,16 +225,20 @@ def fold_seed(seed, i):
     return hash_u32(jnp.asarray(seed, jnp.uint32) ^ salt)
 
 
-def counter_flip_words(words: jnp.ndarray, seed, threshold,
-                       valid) -> jnp.ndarray:
+def counter_flip_words(words: jnp.ndarray, seed, threshold, valid,
+                       model=None) -> jnp.ndarray:
     """Flip bits of a packed word plane per the counter-PRNG contract.
 
     ``valid`` is a uint32 mask (scalar or array broadcastable to
     ``words.shape``) of the bit lanes that are real stored cells; only those
-    see Bernoulli draws. Pure jnp — usable under jit/vmap (the Pallas kernels
-    implement the identical streams for the batched/fused paths).
+    see Bernoulli draws. ``model`` (a :class:`~repro.core.faultmodels
+    .FaultProcess`) compiles to per-element thresholds before the draw;
+    ``None``/``iid`` leave the threshold — and the streams — untouched. Pure
+    jnp — usable under jit/vmap (the Pallas kernels implement the identical
+    streams for the batched/fused paths).
     """
     elem = jnp.arange(words.size, dtype=jnp.uint32).reshape(words.shape)
+    threshold = fm.plane_thresholds(model, threshold, elem, seed, words.shape)
     return _flip_gathered(words, elem, seed, threshold, valid)
 
 
@@ -244,41 +249,48 @@ def codeword_valid_masks(cfg: CIMConfig) -> np.ndarray:
     return cfg.codec.code.code_word_masks
 
 
-def inject_with_seeds(store: CIMStore, seeds: dict, thr_man,
-                      thr_meta) -> CIMStore:
+def inject_with_seeds(store: CIMStore, seeds: dict, thr_man, thr_meta,
+                      model=None) -> CIMStore:
     """Flip stored bits from explicit per-plane seeds + field thresholds.
 
     ``thr_man`` gates the mantissa plane, ``thr_meta`` the exponent/sign
     cells (codeword words when protected — payload and check bits alike are
-    SRAM cells). A zero threshold leaves that field untouched. This is the
-    single source of truth for the flip streams: :func:`inject`, the sweep
-    engine's kernel route and the fused ``cim_read`` kernel's in-VMEM dynamic
-    injection all draw the same (seed, element, bit) decisions.
+    SRAM cells). A zero threshold leaves that field untouched. ``model``
+    compiles an error process (:mod:`repro.core.faultmodels`) into the
+    per-element thresholds of every plane. This is the single source of
+    truth for the flip streams: :func:`inject`, the sweep engine's kernel
+    route and the fused ``cim_read`` kernel's in-VMEM dynamic injection all
+    draw the same (seed, element, bit) decisions.
     """
     man, sign, exp, cw = store.man, store.sign, store.exp, store.codewords
     cfg = store.cfg
     mb = cfg.fmt.man_bits
 
-    man = counter_flip_words(man, seeds["man"], thr_man, (1 << mb) - 1)
+    man = counter_flip_words(man, seeds["man"], thr_man, (1 << mb) - 1,
+                             model=model)
     if cw is not None:
         cw = counter_flip_words(cw, seeds["cw"], thr_meta,
-                                codeword_valid_masks(cfg))
+                                codeword_valid_masks(cfg), model=model)
     else:
         eb = cfg.fmt.exp_bits
-        exp = counter_flip_words(exp, seeds["meta"], thr_meta, (1 << eb) - 1)
+        exp = counter_flip_words(exp, seeds["meta"], thr_meta, (1 << eb) - 1,
+                                 model=model)
         k_pad = store.man.shape[0]
         sign = counter_flip_words(
             sign, seeds["cw"], thr_meta,
-            bitpack.word_masks(k_pad, sign.shape[0])[:, None])
+            bitpack.word_masks(k_pad, sign.shape[0])[:, None], model=model)
     return CIMStore(man=man, sign=sign, exp=exp, codewords=cw,
                     shape=store.shape, cfg=store.cfg)
 
 
-def inject(key, store: CIMStore, ber, field: str = "full") -> CIMStore:
+def inject(key, store: CIMStore, ber, field: str = "full",
+           model=None) -> CIMStore:
     """Flip stored bits at rate ``ber``; ``field`` restricts the target cells.
 
     field ∈ {'full', 'mantissa', 'exponent_sign'}: the macro stores mantissas,
-    and (exponent+sign [+check]) rows — the paper's protected path.
+    and (exponent+sign [+check]) rows — the paper's protected path. ``model``
+    selects a :class:`~repro.core.faultmodels.FaultProcess` (default/``iid``
+    is bit-for-bit the legacy stream).
     """
     if isinstance(ber, (int, float)) and ber <= 0.0:
         return store
@@ -288,7 +300,7 @@ def inject(key, store: CIMStore, ber, field: str = "full") -> CIMStore:
     return inject_with_seeds(
         store, plane_seeds(key),
         thr if field in ("full", "mantissa") else zero,
-        thr if field in ("full", "exponent_sign") else zero)
+        thr if field in ("full", "exponent_sign") else zero, model=model)
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +445,7 @@ def store_stats(store: CIMStore):
 
 
 def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
-              thr_meta=0):
+              thr_meta=0, model=None):
     """Decode-on-read row gather: FP32 rows ``[*idx.shape, J]`` of the stored
     matrix, decoding ONLY the gathered rows' codewords (embedding-table serving
     path — the full weight matrix is never materialized).
@@ -441,7 +453,9 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
     With ``seeds`` set (see :func:`plane_seeds`), fresh faults hit the
     gathered cells first — bit-identical to :func:`inject_with_seeds` on the
     whole store restricted to those cells (same counter-PRNG streams;
-    ``thr_man`` gates mantissa cells, ``thr_meta`` exponent/sign cells).
+    ``thr_man`` gates mantissa cells, ``thr_meta`` exponent/sign cells, and
+    ``model`` compiles a :class:`~repro.core.faultmodels.FaultProcess` into
+    per-element thresholds at the gathered cells' GLOBAL indices).
     """
     cfg = store.cfg
     n, rw = cfg.n_group, cfg.row_weights
@@ -450,17 +464,23 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
     mb = cfg.fmt.man_bits
     dyn = seeds is not None
 
+    def mthr(thr, elem_, seed_, shape_):
+        return fm.plane_thresholds(model, thr, elem_, seed_, shape_)
+
     man = store.man[idx]                                   # [..., J_pad]
     if dyn:
         elem = (idx[..., None].astype(jnp.uint32) * jnp.uint32(j_pad)
                 + jnp.arange(j_pad, dtype=jnp.uint32))
-        man = _flip_gathered(man, elem, seeds["man"], thr_man,
-                             (1 << mb) - 1)
+        man = _flip_gathered(man, elem, seeds["man"],
+                             mthr(thr_man, elem, seeds["man"],
+                                  store.man.shape), (1 << mb) - 1)
 
     if store.codewords is not None and cfg.protect == "per_weight":
         cw = store.codewords[idx]                          # [..., J_pad]
         if dyn:
-            cw = _flip_gathered(cw, elem, seeds["cw"], thr_meta,
+            cw = _flip_gathered(cw, elem, seeds["cw"],
+                                mthr(thr_meta, elem, seeds["cw"],
+                                     store.codewords.shape),
                                 int(codeword_valid_masks(cfg)))
         data, _ = cfg.pw_code.decode_packed(cw.astype(jnp.uint32)[..., None])
         data = data[..., 0]
@@ -477,7 +497,9 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
             inner = jnp.arange(g * s_ * w_, dtype=jnp.uint32).reshape(g, s_, w_)
             celem = blk[..., None, None, None].astype(jnp.uint32) \
                 * jnp.uint32(g * s_ * w_) + inner
-            cw = _flip_gathered(cw, celem, seeds["cw"], thr_meta,
+            cw = _flip_gathered(cw, celem, seeds["cw"],
+                                mthr(thr_meta, celem, seeds["cw"],
+                                     store.codewords.shape),
                                 codeword_valid_masks(cfg)[None, None, :])
         exp_rows, sign_words, _ = codec.decode_packed(cw)  # [..., G, rw], [..., G, Sw]
         e_rows = exp_rows.reshape(exp_rows.shape[:-2] + (j_pad,)).astype(jnp.uint32)
@@ -493,7 +515,9 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
         if dyn:
             eelem = (blk[..., None].astype(jnp.uint32) * jnp.uint32(j_pad)
                      + jnp.arange(j_pad, dtype=jnp.uint32))
-            e_rows = _flip_gathered(e_rows, eelem, seeds["meta"], thr_meta,
+            e_rows = _flip_gathered(e_rows, eelem, seeds["meta"],
+                                    mthr(thr_meta, eelem, seeds["meta"],
+                                         store.exp.shape),
                                     (1 << cfg.fmt.exp_bits) - 1)
             selem = ((idx // 32)[..., None].astype(jnp.uint32)
                      * jnp.uint32(j_pad) + jnp.arange(j_pad, dtype=jnp.uint32))
@@ -504,7 +528,9 @@ def read_rows(store: CIMStore, idx: jnp.ndarray, seeds=None, thr_man=0,
             full = (idx // 32 + 1) * 32 <= k_pad
             vmask = jnp.where(full[..., None], jnp.uint32(0xFFFFFFFF),
                               jnp.uint32(svalid))
-            sw = _flip_gathered(sw, selem, seeds["cw"], thr_meta, vmask)
+            sw = _flip_gathered(sw, selem, seeds["cw"],
+                                mthr(thr_meta, selem, seeds["cw"],
+                                     store.sign.shape), vmask)
         s_rows = (sw >> (idx % 32)[..., None].astype(jnp.uint32)) & 1
     w = bitops.combine_fields(s_rows, e_rows, man.astype(jnp.uint32), cfg.fmt)
     return jnp.asarray(w[..., :store.shape[1]], jnp.float32)
@@ -610,13 +636,17 @@ def _global_elem(local_shape, global_shape, sdim: int, start) -> jnp.ndarray:
 
 
 def inject_sharded(key, store: CIMStore, ber, field: str = "full", *, mesh,
-                   axis: str = "model", dim: str = "j") -> CIMStore:
+                   axis: str = "model", dim: str = "j",
+                   model=None) -> CIMStore:
     """``shard_map`` twin of :func:`inject` for a mesh-sharded store.
 
     Each shard draws flips for its LOCAL plane block at the block's GLOBAL
     C-order element indices (``axis_index * local_extent`` offset along the
     shard dimension), so the flip streams are bit-identical to the
     single-device image for the same key — no resharding, no all-gather.
+    ``model`` thresholds compile from the same global indices against the
+    GLOBAL plane shapes, so burst/correlated/drift masks are likewise
+    bit-identical shard by shard.
 
     Call under ``jit`` on hot paths: the per-bit-lane mask loop is ~100 tiny
     ops, and eager ``shard_map`` dispatch of those across many host devices
@@ -662,9 +692,9 @@ def inject_sharded(key, store: CIMStore, ber, field: str = "full", *, mesh,
             t = rt_loc["thr_man"] if name == "man" else rt_loc["thr_meta"]
             elem = _global_elem(words.shape, gshapes[name], sdim,
                                 i * words.shape[sdim])
-            out[name] = _flip_gathered(words, elem,
-                                       rt_loc["seeds"][seed_of[name]], t,
-                                       valids[name])
+            seed = rt_loc["seeds"][seed_of[name]]
+            t = fm.plane_thresholds(model, t, elem, seed, gshapes[name])
+            out[name] = _flip_gathered(words, elem, seed, t, valids[name])
         return out
 
     pspecs = store_plane_specs(store, axis, dim)
@@ -762,11 +792,11 @@ def inject_pytree(key, stores, ber, field: str = "full"):
     return inject_pytree_impl(key, stores, ber, field)
 
 
-def inject_pytree_impl(key, stores, ber, field: str = "full"):
+def inject_pytree_impl(key, stores, ber, field: str = "full", model=None):
     """Fresh faults into every store of a deployed model."""
     flat, treedef = jax.tree_util.tree_flatten(stores, is_leaf=_is_store)
     keys = jax.random.split(key, len(flat))
-    out = [inject(k, s, ber, field) if _is_store(s) else s
+    out = [inject(k, s, ber, field, model=model) if _is_store(s) else s
            for k, s in zip(keys, flat)]
     return jax.tree_util.tree_unflatten(treedef, out)
 

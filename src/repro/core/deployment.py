@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import align as align_lib
 from repro.core import cim as cim_lib
+from repro.core import faultmodels as fm_lib
 from repro.core.bitops import FORMATS
 
 # ---------------------------------------------------------------------------
@@ -142,6 +143,11 @@ class PolicyRule:
                                      # sparse row gathers (embed tables)
                                      # should opt out — the packed image is
                                      # the whole point there.
+    fault_model: str = ""            # error process of matching stores
+                                     # (repro.core.faultmodels grammar, e.g.
+                                     # "burst:rate=0.3,axis=col"); "" means
+                                     # the deployment-level model (i.i.d. by
+                                     # default)
 
     def __post_init__(self):
         where = f"PolicyRule(pattern={self.pattern!r})"
@@ -152,6 +158,12 @@ class PolicyRule:
         if self.ber_scale < 0:
             raise ValueError(f"{where}: ber_scale must be >= 0, "
                              f"got {self.ber_scale}")
+        fm_lib.parse_fault_model(self.fault_model)   # validate eagerly
+
+    @property
+    def fault_process(self):
+        """Parsed :class:`~repro.core.faultmodels.FaultProcess` (or None)."""
+        return fm_lib.parse_fault_model(self.fault_model)
 
     @property
     def fmt(self):
@@ -304,7 +316,8 @@ class CIMDeployment:
     # ------------------------------------------------------------ fault state
 
     def inject(self, key, ber, field: Optional[str] = None,
-               request_id: Optional[int] = None) -> "CIMDeployment":
+               request_id: Optional[int] = None,
+               model=None) -> "CIMDeployment":
         """Fresh soft errors into every store at ``ber * rule.ber_scale`` in
         the rule's ``field`` (or the ``field`` override for all stores).
 
@@ -314,11 +327,17 @@ class CIMDeployment:
         ``request_id`` folds the key per serving request before the split, so
         a request-scoped static image draws the same streams no matter which
         engine slot (or co-batch) serves it.
+
+        ``model`` (a :class:`~repro.core.faultmodels.FaultProcess` or grammar
+        string) selects the error process for every store; per-rule
+        ``fault_model`` settings fill in where no override is given. The
+        default i.i.d. process reproduces the legacy streams bit for bit.
         """
         if field is not None:
             # a Fig. 2 axis like 'exponent' would silently inject NOTHING
             # downstream (both cim.inject threshold gates test False)
             check_enum("field", field, VALID_FIELDS, "CIMDeployment.inject")
+        model = fm_lib.parse_fault_model(model)
         if request_id is not None:
             key = jax.random.fold_in(key, request_id)
         flat, treedef = self._flat()
@@ -328,31 +347,42 @@ class CIMDeployment:
             if cim_lib._is_store(leaf):
                 leaf_ber = ber * rule.ber_scale
                 leaf_field = field if field is not None else rule.field
-                out.append(self._inject_one(k, leaf, leaf_ber, leaf_field))
+                leaf_model = model if model is not None else rule.fault_process
+                out.append(self._inject_one(k, leaf, leaf_ber, leaf_field,
+                                            leaf_model))
             else:
                 out.append(leaf)
         return self._replace_stores(jax.tree_util.tree_unflatten(treedef, out))
 
-    def _inject_one(self, key, store, ber, field):
+    def _inject_one(self, key, store, ber, field, model=None):
         if self.placement is not None:
             mesh, axis, dim = self.placement
             n_sh = int(mesh.shape[axis]) if axis in mesh.axis_names else 1
             if n_sh > 1 and cim_lib.can_shard_store(store, n_sh, dim):
                 return cim_lib.inject_sharded(key, store, ber, field,
-                                              mesh=mesh, axis=axis, dim=dim)
-        return cim_lib.inject(key, store, ber, field)
+                                              mesh=mesh, axis=axis, dim=dim,
+                                              model=model)
+        return cim_lib.inject(key, store, ber, field, model=model)
 
-    def runtime(self, key, ber, field: str = "full") -> dict:
+    def runtime(self, key, ber, field: str = "full", model=None) -> dict:
         """Per-read dynamic-injection runtime (the ``_cim`` entry the serving
         model folds per leaf and per read index): base counter-PRNG plane
-        seeds plus per-cell-class Bernoulli thresholds."""
+        seeds plus per-cell-class Bernoulli thresholds.
+
+        ``model`` (process or grammar string) rides along as static pytree
+        structure; serving reads compile it to per-element thresholds — drift
+        keys its tick on the request-local read position."""
         from repro.kernels.fault_inject.ops import ber_to_threshold
         check_enum("field", field, VALID_FIELDS, "CIMDeployment.runtime")
         thr = ber_to_threshold(ber)
         zero = jnp.uint32(0)
-        return {"seeds": cim_lib.plane_seeds(key),
-                "thr_man": thr if field in ("full", "mantissa") else zero,
-                "thr_meta": thr if field in ("full", "exponent_sign") else zero}
+        rt = {"seeds": cim_lib.plane_seeds(key),
+              "thr_man": thr if field in ("full", "mantissa") else zero,
+              "thr_meta": thr if field in ("full", "exponent_sign") else zero}
+        model = fm_lib.parse_fault_model(model)
+        if model is not None and model.kind != "iid":
+            rt["model"] = model
+        return rt
 
     # ------------------------------------------------------------ read paths
 
@@ -400,18 +430,19 @@ class CIMDeployment:
                        f"{sorted(self.paths)}")
 
     def read_rows(self, idx, path: str = "embed", *, seeds=None, thr_man=0,
-                  thr_meta=0):
+                  thr_meta=0, model=None):
         """Decode-on-read row gather of the store at ``path`` (embedding
         serving: only the gathered rows' codewords are decoded). ``seeds``
-        (see ``cim.plane_seeds``) turns on per-read dynamic injection."""
+        (see ``cim.plane_seeds``) turns on per-read dynamic injection;
+        ``model`` shapes it into a structured error process."""
         leaf, _ = self._leaf(path)
         if not cim_lib._is_store(leaf):
             return jnp.asarray(leaf, jnp.float32)[idx]
         return cim_lib.read_rows(leaf, idx, seeds=seeds, thr_man=thr_man,
-                                 thr_meta=thr_meta)
+                                 thr_meta=thr_meta, model=model)
 
     def linear(self, x, path: str, *, scalars=None, request=None, runtime=None,
-               with_info: bool = False):
+               with_info: bool = False, model=None):
         """``x [..., K] @ leaf(path) -> [..., J]``, route auto-dispatched.
 
         A passthrough leaf is a plain matmul. A store follows the module
@@ -439,8 +470,18 @@ class CIMDeployment:
             req_salt, pos = request
             seeds = request_read_seeds(runtime["seeds"], leaf_salt(path),
                                        req_salt, pos)
-            scalars = cr_ops.make_scalars(seeds, runtime["thr_man"],
-                                          runtime["thr_meta"])
+            model = runtime.get("model")
+            # drift keys its tick on the request-local read position; the
+            # thresholds absorb the time scaling here, so the model handed
+            # downstream carries tick=0 (no double scaling)
+            thr_man = fm_lib.compiled_threshold(model, runtime["thr_man"],
+                                                tick=pos)
+            thr_meta = fm_lib.compiled_threshold(model, runtime["thr_meta"],
+                                                 tick=pos)
+            if model is not None and model.kind == "drift":
+                model = dataclasses.replace(model, tick=0)
+            scalars = cr_ops.make_scalars(seeds, thr_man, thr_meta,
+                                          model=model)
         leaf, rule = self._leaf(path)
         if not cim_lib._is_store(leaf):
             if scalars is not None:
@@ -462,7 +503,8 @@ class CIMDeployment:
             return (out, {"route": "hbm"}) if with_info else out
         _, axis, dim = self.placement or (None, "model", "j")
         return dispatch_linear(x, leaf, scalars=scalars, mesh=self.mesh,
-                               axis=axis, dim=dim, with_info=with_info)
+                               axis=axis, dim=dim, with_info=with_info,
+                               model=model)
 
     # ------------------------------------------------------------ placement
 
@@ -480,7 +522,8 @@ class CIMDeployment:
     # ------------------------------------------------------------ serving
 
     def serving_params(self, *, dynamic_key=None, ber: float = 0.0,
-                       field: str = "full", row_cache: bool = True):
+                       field: str = "full", row_cache: bool = True,
+                       model=None):
         """The params pytree handed to the jitted model steps.
 
         Fused rules keep their stores packed; ``serve_path='hbm'`` rules are
@@ -518,7 +561,7 @@ class CIMDeployment:
                 raise TypeError("dynamic serving runtime needs a dict params "
                                 f"pytree, got {type(params).__name__}")
             params = dict(params)
-            rt = self.runtime(dynamic_key, ber, field)
+            rt = self.runtime(dynamic_key, ber, field, model=model)
             if self.placement is not None:
                 from jax.sharding import NamedSharding, PartitionSpec as P
                 rep = NamedSharding(self.placement[0], P())
@@ -678,7 +721,7 @@ def _read_w_jit(store):
 
 
 def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
-                    dim: str = "j", with_info: bool = False):
+                    dim: str = "j", with_info: bool = False, model=None):
     """Route ``x @ store`` by placement and dtype (module dispatch table).
 
     With a mesh carrying ``axis`` (default: the ambient mesh's "model" axis),
@@ -700,7 +743,7 @@ def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
     if mesh is not None and axis in mesh.axis_names:
         return cr_ops.cim_linear_store_sharded(
             x, store, scalars=scalars, mesh=mesh, axis=axis, dim=dim,
-            with_info=with_info)
+            with_info=with_info, model=model)
     if scalars is None and store.cache is not None:
         b_shape = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
@@ -710,10 +753,11 @@ def dispatch_linear(x, store, *, scalars=None, mesh=None, axis: str = "model",
                          "route": "cached"}
         return out
     return cr_ops.cim_linear_store(x, store, scalars=scalars,
-                                   with_info=with_info)
+                                   with_info=with_info, model=model)
 
 
-def dispatch_read_rows(store, idx, *, seeds=None, thr_man=0, thr_meta=0):
+def dispatch_read_rows(store, idx, *, seeds=None, thr_man=0, thr_meta=0,
+                       model=None):
     """Row-gather route: decode-on-read off the packed image (no sharded
     variant — gathers are data-local; GSPMD partitions the jnp decode). A
     warmed decoded-row cache short-circuits static gathers; dynamic seeds
@@ -721,7 +765,7 @@ def dispatch_read_rows(store, idx, *, seeds=None, thr_man=0, thr_meta=0):
     if seeds is None and store.cache is not None:
         return store.cache[idx]
     return cim_lib.read_rows(store, idx, seeds=seeds, thr_man=thr_man,
-                             thr_meta=thr_meta)
+                             thr_meta=thr_meta, model=model)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,309 @@
+"""Fault-model zoo: structured error processes over the counter-PRNG streams.
+
+Every injection path in the repo draws i.i.d. Bernoulli flips from the
+counter PRNG: bit ``p`` of the word at C-order flat index ``e`` flips iff
+``murmur3(e*32 + p XOR seed*GOLD) < threshold``. The CIM-reliability
+literature the paper builds on (Wan et al., arXiv:2008.02400; Yan et al.,
+arXiv:2205.13018) models richer processes — spatially-correlated failures,
+row/column/bank bursts, and time-dependent drift. This module defines that
+vocabulary as :class:`FaultProcess` and **compiles every process to a
+per-element uint32 threshold** derived from the GLOBAL C-order element index
+of the packed plane:
+
+    ==========  ===========================================================
+    kind        compiled threshold at element ``e``
+    ==========  ===========================================================
+    iid         ``thr`` unchanged — bit-for-bit today's streams (the
+                default; the zoo costs nothing when unused)
+    burst       ``thr`` where the element's row/column/bank *unit* draws a
+                Bernoulli hit at ``rate`` (one draw per aligned run of
+                ``length`` units), else 0 — whole word lines / macro column
+                groups fail together
+    correlated  ``thr`` scaled per macro-column group by a hash-derived
+                factor in ``[1-strength, 1]`` (Q16 fixed point, exact
+                uint32 arithmetic) — per-column retention-margin spread
+    drift       ``thr * (1+drift_rate)**tick`` — a BER-vs-time schedule
+                keyed on a logical tick (element-independent; the serving
+                engine keys ``tick`` on the request-local read position)
+    ==========  ===========================================================
+
+Because the compiled threshold is a pure function of (plane seed, model,
+global element index), every consumer — the jnp ``inject`` path, the
+``shard_map`` local blocks of ``inject_sharded``, ``read_rows`` gathers, and
+the ``fault_inject``/``cim_read`` Pallas kernels — derives bit-identical
+masks, so the PR-2/PR-3 reproducibility contract extends to the whole zoo:
+same key + model ⇒ identical streams solo vs co-batched vs sharded vs
+cached-prefix.
+
+Scaled thresholds never exceed the i.i.d. threshold (burst zeroes, the
+correlated factor is ≤ 1), so a process's flip set is a *subset* of the
+i.i.d. flip set at the same (seed, threshold) — the property the model-zoo
+tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fault_inject.kernel import hash_u32
+
+VALID_KINDS = ("iid", "burst", "correlated", "drift")
+VALID_AXES = ("row", "col", "bank")
+
+_GOLD = 0x9E3779B9
+# Salt folding a plane seed into the burst/correlated *unit* stream, so unit
+# hit decisions never alias the per-bit flip stream of the same seed. The
+# fold mirrors cim.fold_seed(seed, MODEL_SEED_SALT) exactly (inlined here —
+# cim imports this module, not the reverse).
+MODEL_SEED_SALT = 0x0DD5EED5
+# threshold saturation (mirrors fault_inject.ops.ber_to_threshold): values at
+# or above this map to the all-ones threshold
+_THR_SAT = 4294967040.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FaultProcess:
+    """One error process of the zoo. Hashable and static under ``jit``.
+
+    Registered as a *leafless* pytree (all fields ride in the aux data), so a
+    process can sit inside the serving runtime dict (``params['_cim']``) and
+    pass through ``jax.jit`` as compile-time structure — exactly like the
+    PR-3 shard offsets, the model's *parameters* are traced (SMEM scalars)
+    while its *kind* picks the compiled code path.
+
+    Fields (unused ones ignored per kind):
+
+    * ``rate`` — burst: fraction of units hit (Bernoulli per aligned run).
+    * ``length`` — burst: units per aligned run (a hit knocks out ``length``
+      consecutive rows/columns; for ``axis='bank'`` a ``length x length``
+      tile).
+    * ``axis`` — burst alignment: ``row`` (word lines / exponent block
+      rows), ``col`` (macro column groups), ``bank`` (2-D tiles).
+    * ``strength`` — correlated: per-column scaling spread in ``[0, 1]``
+      (0 ⇒ exactly i.i.d.).
+    * ``period`` — correlated: macro column groups per probability draw.
+    * ``drift_rate`` — drift: per-tick multiplicative BER growth.
+    * ``tick`` — drift: logical time of a *static* injection (serving paths
+      override it per read position and keep the stored tick at 0).
+    """
+
+    kind: str = "iid"
+    rate: float = 0.25
+    length: int = 4
+    axis: str = "row"
+    strength: float = 0.5
+    period: int = 1
+    drift_rate: float = 0.02
+    tick: int = 0
+
+    def __post_init__(self):
+        if self.kind not in VALID_KINDS:
+            raise ValueError(f"FaultProcess: kind={self.kind!r} is not valid; "
+                             f"expected one of {', '.join(VALID_KINDS)}")
+        if self.axis not in VALID_AXES:
+            raise ValueError(f"FaultProcess: axis={self.axis!r} is not valid; "
+                             f"expected one of {', '.join(VALID_AXES)}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"FaultProcess: rate must be in [0, 1], "
+                             f"got {self.rate}")
+        if not 0.0 <= self.strength <= 1.0:
+            raise ValueError(f"FaultProcess: strength must be in [0, 1], "
+                             f"got {self.strength}")
+        if self.length < 1 or self.period < 1:
+            raise ValueError("FaultProcess: length and period must be >= 1")
+        if self.drift_rate < 0 or self.tick < 0:
+            raise ValueError("FaultProcess: drift_rate and tick must be >= 0")
+
+    # -------------------------------------------------------- constructors
+
+    @classmethod
+    def iid(cls) -> "FaultProcess":
+        return cls()
+
+    @classmethod
+    def burst(cls, rate: float = 0.25, length: int = 4,
+              axis: str = "row") -> "FaultProcess":
+        return cls(kind="burst", rate=rate, length=length, axis=axis)
+
+    @classmethod
+    def correlated(cls, strength: float = 0.5,
+                   period: int = 1) -> "FaultProcess":
+        return cls(kind="correlated", strength=strength, period=period)
+
+    @classmethod
+    def drift(cls, drift_rate: float = 0.02, tick: int = 0) -> "FaultProcess":
+        return cls(kind="drift", drift_rate=drift_rate, tick=tick)
+
+    # ------------------------------------------------------------- pytree
+
+    def tree_flatten(self):
+        return (), self
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return aux
+
+
+def parse_fault_model(spec) -> Optional[FaultProcess]:
+    """CLI/policy grammar -> :class:`FaultProcess` (``None``/'' -> ``None``).
+
+    ``'burst'`` takes the kind's defaults; ``'burst:rate=0.3,length=8,
+    axis=col'`` overrides fields (floats/ints coerced per field).
+    """
+    if spec is None or isinstance(spec, FaultProcess):
+        return spec
+    spec = str(spec).strip()
+    if not spec:
+        return None
+    kind, _, rest = spec.partition(":")
+    if kind not in VALID_KINDS:
+        raise ValueError(f"unknown fault model {kind!r}; expected one of "
+                         f"{', '.join(VALID_KINDS)}")
+    kw = {"kind": kind}
+    if rest:
+        fields = {f.name: f.type for f in dataclasses.fields(FaultProcess)}
+        for part in rest.split(","):
+            name, _, val = part.partition("=")
+            name = name.strip()
+            if name not in fields or name == "kind":
+                raise ValueError(f"fault model {kind!r}: unknown parameter "
+                                 f"{name!r}")
+            kw[name] = (val.strip() if fields[name] == "str"
+                        else int(val) if fields[name] == "int"
+                        else float(val))
+    return FaultProcess(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Compilation: process -> (SMEM scalar payload, per-element thresholds).
+# ---------------------------------------------------------------------------
+
+
+def model_scalars(model: Optional[FaultProcess]):
+    """The traced uint32 SMEM payload ``(m_thr, m_len)`` of a process.
+
+    ``burst``: (hit threshold of ``rate``, run ``length``); ``correlated``:
+    (Q16 ``strength``, ``period``); ``iid``/``drift``: (0, 0) — their
+    compiled thresholds need no per-element parameters.
+    """
+    if model is None or model.kind in ("iid", "drift"):
+        return jnp.uint32(0), jnp.uint32(0)
+    if model.kind == "burst":
+        from repro.kernels.fault_inject.ops import ber_to_threshold
+        return ber_to_threshold(model.rate), jnp.uint32(model.length)
+    q16 = max(0, min(65536, int(round(model.strength * 65536.0))))
+    return jnp.uint32(q16), jnp.uint32(model.period)
+
+
+def plane_geometry(shape) -> tuple:
+    """``(width, col_div)`` of a packed plane's C-order layout.
+
+    ``width`` is the number of flat elements per logical row (word line /
+    exponent block row / sign word row); ``col_div`` divides an intra-row
+    offset down to its macro-column *unit*. 2-D planes ``[R, C]`` address
+    columns directly; the 4-D One4N codeword plane ``[B, G, S, W]`` has
+    ``G*S*W`` words per block row with ``S*W`` words per column group.
+    """
+    if len(shape) == 4:
+        return (int(shape[1]) * int(shape[2]) * int(shape[3]),
+                int(shape[2]) * int(shape[3]))
+    return int(shape[-1]), 1
+
+
+def unit_seed(plane_seed):
+    """The burst/correlated unit-decision seed of a plane seed (one fold by
+    ``MODEL_SEED_SALT``, the ``cim.fold_seed`` chain extended sideways)."""
+    salt = jnp.uint32(MODEL_SEED_SALT) * jnp.uint32(0x85EBCA6B) \
+        + jnp.uint32(0x9E3779B9)
+    return hash_u32(jnp.asarray(plane_seed, jnp.uint32) ^ salt)
+
+
+def scale_elem_thresholds(elem, threshold, plane_seed, *, kind: str,
+                          axis: str, m_thr, m_len, width: int,
+                          col_div: int = 1):
+    """Per-element flip thresholds of a compiled burst/correlated process.
+
+    ``elem`` holds GLOBAL C-order flat element indices (any shape), so the
+    jnp inject path, shard_map local blocks, row gathers and the Pallas
+    kernels all derive bit-identical thresholds. ``kind``/``axis`` are
+    static (they pick the code path); ``m_thr``/``m_len`` are traced SMEM
+    scalars. Pure jnp/uint32 — the ``cim_read`` kernel calls this function
+    verbatim inside its tiles.
+    """
+    threshold = jnp.asarray(threshold, jnp.uint32)
+    if kind in ("iid", "drift"):
+        return threshold
+    elem = jnp.asarray(elem, jnp.uint32)
+    m_thr = jnp.asarray(m_thr, jnp.uint32)
+    m_len = jnp.asarray(m_len, jnp.uint32)
+    useed = unit_seed(plane_seed) * jnp.uint32(_GOLD)
+    row = elem // jnp.uint32(width)
+    col = (elem % jnp.uint32(width)) // jnp.uint32(col_div)
+    if kind == "burst":
+        if axis == "row":
+            unit = row // m_len
+        elif axis == "col":
+            unit = col // m_len
+        else:  # bank: length x length tiles, mixed into one unit index
+            unit = (row // m_len) * jnp.uint32(0x10001) + col // m_len
+        hit = hash_u32(unit ^ useed) < m_thr
+        return jnp.where(hit, threshold, jnp.uint32(0))
+    # correlated: scale by s/65536 with s = 65536 - strength_q16 * h16 / 65536
+    # drawn per column group. Split multiply keeps every intermediate < 2^32
+    # and makes strength=0 reproduce `threshold` EXACTLY (s = 65536).
+    grp = col // m_len
+    h16 = hash_u32(grp ^ useed) >> jnp.uint32(16)
+    var = (m_thr * h16) >> jnp.uint32(16)              # [0, 65536)
+    s = jnp.uint32(65536) - var                        # (0, 65536]
+    hi = (threshold >> jnp.uint32(16)) * s
+    lo = ((threshold & jnp.uint32(0xFFFF)) * s) >> jnp.uint32(16)
+    return hi + lo
+
+
+def drift_threshold(threshold, drift_rate, tick):
+    """Drift time scaling: ``thr * (1+drift_rate)**tick``, saturating like
+    ``ber_to_threshold``. ``tick`` may be traced (read position)."""
+    thr_f = jnp.asarray(threshold, jnp.uint32).astype(jnp.float32)
+    scale = jnp.power(jnp.float32(1.0) + jnp.float32(drift_rate),
+                      jnp.asarray(tick, jnp.float32))
+    scaled = thr_f * scale
+    return jnp.where(scaled >= jnp.float32(_THR_SAT),
+                     jnp.uint32(0xFFFFFFFF),
+                     scaled.astype(jnp.uint32))
+
+
+def compiled_threshold(model: Optional[FaultProcess], threshold, tick=None):
+    """The element-independent part of a process: drift's time scaling
+    (identity for every other kind). ``tick=None`` uses the model's static
+    tick; serving paths pass the traced request-local read position."""
+    if model is None or model.kind != "drift":
+        return jnp.asarray(threshold, jnp.uint32)
+    t = model.tick if tick is None else tick
+    if isinstance(t, int) and t == 0:
+        # static tick 0 is exactly identity — skip the f32 roundtrip so a
+        # drift model at t=0 reproduces the i.i.d. streams bit for bit
+        return jnp.asarray(threshold, jnp.uint32)
+    return drift_threshold(threshold, model.drift_rate, t)
+
+
+def plane_thresholds(model: Optional[FaultProcess], threshold, elem,
+                     plane_seed, shape):
+    """Full compile of ``model`` for one packed plane: drift time scaling
+    plus the burst/correlated per-element mask at global indices ``elem``.
+    ``model=None`` / ``iid`` return ``threshold`` untouched — the zero-cost
+    legacy path."""
+    if model is None or model.kind == "iid":
+        return jnp.asarray(threshold, jnp.uint32)
+    threshold = compiled_threshold(model, threshold)
+    if model.kind == "drift":
+        return threshold
+    m_thr, m_len = model_scalars(model)
+    width, col_div = plane_geometry(shape)
+    return scale_elem_thresholds(elem, threshold, plane_seed,
+                                 kind=model.kind, axis=model.axis,
+                                 m_thr=m_thr, m_len=m_len, width=width,
+                                 col_div=col_div)

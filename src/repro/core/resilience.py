@@ -32,20 +32,25 @@ from repro.core.sweep import SweepResult  # noqa: F401  (re-export, stable API)
 def characterize_fields(key, params, eval_fn: Callable, bers: Sequence[float],
                         fields: Sequence[str] = ("sign", "exponent", "mantissa", "full"),
                         n_trials: int = 10, fmt=FP16,
-                        engine: Optional[sweep_lib.SweepEngine] = None
+                        engine: Optional[sweep_lib.SweepEngine] = None,
+                        fault_models: Sequence[str] = ("iid",)
                         ) -> List[SweepResult]:
     """Fig. 2: per-field sensitivity of plain FP weights (static injection).
 
     ``eval_fn(params) -> scalar accuracy`` must be jit-compatible. Pass a
     prebuilt ``engine`` to reuse its compiled executors across calls; its plan
-    must describe the same grid as the explicit arguments."""
+    must describe the same grid as the explicit arguments. ``fault_models``
+    adds an error-process axis (:mod:`repro.core.faultmodels` grammar): the
+    grid runs once per process arm."""
     if engine is None:
         plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials,
-                                   fields=tuple(fields), fmt=fmt)
+                                   fields=tuple(fields), fmt=fmt,
+                                   fault_models=tuple(fault_models))
         engine = sweep_lib.SweepEngine(plan)
     else:
         _check_engine_grid(engine, bers=tuple(float(b) for b in bers),
-                           n_trials=n_trials, fields=tuple(fields), fmt=fmt)
+                           n_trials=n_trials, fields=tuple(fields), fmt=fmt,
+                           fault_models=tuple(str(m) for m in fault_models))
     return engine.run_fields(key, params, eval_fn)
 
 
@@ -53,17 +58,21 @@ def characterize_protection(key, params, eval_fn: Callable, bers: Sequence[float
                             cim_cfg: Optional[cim_lib.CIMConfig] = None,
                             n_trials: int = 10,
                             protects: Sequence[str] = ("none", "one4n"),
-                            engine: Optional[sweep_lib.SweepEngine] = None
+                            engine: Optional[sweep_lib.SweepEngine] = None,
+                            fault_models: Sequence[str] = ("iid",)
                             ) -> List[SweepResult]:
     """Fig. 6: accuracy vs BER with/without One4N (optionally also the
-    Table III "traditional" per-weight SECDED arm) on the CIM deployment."""
+    Table III "traditional" per-weight SECDED arm) on the CIM deployment.
+    ``fault_models`` adds an error-process axis (one full grid per arm)."""
     if engine is None:
         plan = sweep_lib.SweepPlan(bers=tuple(bers), n_trials=n_trials,
-                                   protects=tuple(protects))
+                                   protects=tuple(protects),
+                                   fault_models=tuple(fault_models))
         engine = sweep_lib.SweepEngine(plan)
     else:
         _check_engine_grid(engine, bers=tuple(float(b) for b in bers),
-                           n_trials=n_trials, protects=tuple(protects))
+                           n_trials=n_trials, protects=tuple(protects),
+                           fault_models=tuple(str(m) for m in fault_models))
     return engine.run_protection(key, params, eval_fn, cim_cfg)
 
 

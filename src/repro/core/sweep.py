@@ -44,6 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core import bitops, bitpack
 from repro.core import cim as cim_lib
 from repro.core import fault as fault_lib
+from repro.core import faultmodels as fm_lib
 from repro.core.bitops import FP16, FloatFormat
 from repro.kernels.fault_inject import ops as fi_ops
 from repro.kernels.fault_inject.kernel import hash_u32
@@ -61,6 +62,7 @@ class SweepResult:
     uncorrectable: float = 0.0
     stored_bits: int = 0    # deployment SRAM cells of the arm (policy sweeps:
                             # the cost axis the policy search minimizes)
+    fault_model: str = "iid"    # error-process arm (faultmodels grammar)
 
     @property
     def mean(self) -> float:
@@ -88,11 +90,17 @@ class SweepPlan:
     backend: str = "auto"               # 'auto' | 'xla' | 'pallas'
     shard_trials: bool = True
     interpret: Optional[bool] = None    # Pallas interpret-mode override
+    fault_models: Tuple[str, ...] = ("iid",)   # error-process axis (specs in
+                                               # the faultmodels grammar)
 
     def __post_init__(self):
         object.__setattr__(self, "bers", tuple(float(b) for b in self.bers))
         object.__setattr__(self, "fields", tuple(self.fields))
         object.__setattr__(self, "protects", tuple(self.protects))
+        object.__setattr__(self, "fault_models",
+                          tuple(str(m) for m in self.fault_models))
+        for m in self.fault_models:
+            fm_lib.parse_fault_model(m)        # validate the grammar eagerly
         if self.backend not in ("auto", "xla", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
 
@@ -113,16 +121,24 @@ def _salted(seeds: jnp.ndarray, salt: int) -> jnp.ndarray:
                                        & 0xFFFFFFFF))
 
 
-def _leaf_inject_batched(bits2d, seeds, threshold, positions, interpret):
+def _arm_model(spec) -> Optional[fm_lib.FaultProcess]:
+    """Fault-model arm spec -> process; ``iid`` maps to ``None`` so default
+    arms take the zero-cost legacy code path (bit-identical streams)."""
+    model = fm_lib.parse_fault_model(spec)
+    return None if model is not None and model.kind == "iid" else model
+
+
+def _leaf_inject_batched(bits2d, seeds, threshold, positions, interpret,
+                         model=None, col_div: int = 1):
     return fi_ops.fault_inject_bits_batched(
         bits2d, seeds, threshold, positions=tuple(positions),
-        interpret=interpret)
+        interpret=interpret, model=model, col_div=col_div)
 
 
 def inject_pytree_batched(params, seeds: jnp.ndarray, threshold, field: str,
                           fmt: FloatFormat = FP16, *,
                           predicate=fault_lib._is_injectable,
-                          interpret: Optional[bool] = None):
+                          interpret: Optional[bool] = None, model=None):
     """Kernel-backed batched static injection: every injectable leaf gains a
     leading trial axis [T, ...]; pass-through leaves are broadcast to match.
 
@@ -137,7 +153,7 @@ def inject_pytree_batched(params, seeds: jnp.ndarray, threshold, field: str,
         if predicate(path, leaf):
             bits = bitops.to_bits(leaf.reshape(-1, leaf.shape[-1]), fmt)
             faulted = _leaf_inject_batched(bits, _salted(seeds, i), threshold,
-                                           positions, interpret)
+                                           positions, interpret, model)
             w = bitops.from_bits(faulted, fmt)
             out.append(jnp.asarray(w, leaf.dtype).reshape((t,) + leaf.shape))
         else:
@@ -146,7 +162,7 @@ def inject_pytree_batched(params, seeds: jnp.ndarray, threshold, field: str,
 
 
 def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
-                          interpret) -> cim_lib.CIMStore:
+                          interpret, model=None) -> cim_lib.CIMStore:
     """Batched SRAM-plane injection (field='full' of ``cim.inject``) on the
     word-packed planes: the trial-batched kernel draws per-word 32-lane flip
     masks, and lanes that are not stored cells (codeword tail words, the sign
@@ -156,7 +172,7 @@ def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
     eb = store.cfg.fmt.exp_bits
 
     man = _leaf_inject_batched(store.man, _salted(seeds, 101), threshold,
-                               tuple(range(mb)), interpret)
+                               tuple(range(mb)), interpret, model)
     sign = exp = cw = None
     if store.codewords is not None:
         cw_arr = store.codewords
@@ -165,22 +181,26 @@ def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
             # per-weight SECDED: one uint16 word per weight, n stored bits
             positions = tuple(p for p in range(16) if (int(masks) >> p) & 1)
             cw = _leaf_inject_batched(cw_arr, _salted(seeds, 102), threshold,
-                                      positions, interpret)
+                                      positions, interpret, model)
         else:
             cw2d = cw_arr.reshape(cw_arr.shape[0], -1)     # [B, G*S*W] uint32
+            # macro-column units of the flattened plane are S*W words wide
+            # (same geometry faultmodels.plane_geometry derives from 4-D)
+            cdiv = int(cw_arr.shape[2]) * int(cw_arr.shape[3])
             flipped = _leaf_inject_batched(cw2d, _salted(seeds, 102), threshold,
-                                           tuple(range(32)), interpret)
+                                           tuple(range(32)), interpret, model,
+                                           col_div=cdiv)
             valid = jnp.asarray(np.tile(masks, cw2d.shape[1] // masks.size),
                                 jnp.uint32)
             flipped = (flipped & valid) | (cw2d[None] & ~valid)
             cw = flipped.reshape((t,) + cw_arr.shape)
     else:
         exp = _leaf_inject_batched(store.exp, _salted(seeds, 103), threshold,
-                                   tuple(range(eb)), interpret)
+                                   tuple(range(eb)), interpret, model)
         k_pad = store.man.shape[0]
         smasks = bitpack.word_masks(k_pad, store.sign.shape[0])
         sflip = _leaf_inject_batched(store.sign, _salted(seeds, 104), threshold,
-                                     tuple(range(32)), interpret)
+                                     tuple(range(32)), interpret, model)
         valid = jnp.asarray(smasks, jnp.uint32)[:, None]
         sign = (sflip & valid) | (store.sign[None] & ~valid)
     return cim_lib.CIMStore(man=man, sign=sign, exp=exp, codewords=cw,
@@ -188,7 +208,7 @@ def _store_inject_batched(store: cim_lib.CIMStore, seeds, threshold,
 
 
 def cim_inject_pytree_batched(stores, seeds, threshold,
-                              interpret: Optional[bool] = None):
+                              interpret: Optional[bool] = None, model=None):
     """Batched ``cim.inject_pytree``: every leaf (store plane or pass-through)
     gains a leading [T] axis so the decode→eval pipeline can be vmapped."""
     t = seeds.shape[0]
@@ -197,7 +217,7 @@ def cim_inject_pytree_batched(stores, seeds, threshold,
     for i, leaf in enumerate(flat):
         if cim_lib._is_store(leaf):
             out.append(_store_inject_batched(leaf, _salted(seeds, 7 * i + 1),
-                                             threshold, interpret))
+                                             threshold, interpret, model))
         else:
             out.append(jnp.broadcast_to(leaf, (t,) + jnp.shape(leaf)))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -286,10 +306,10 @@ class SweepEngine:
             out[k] = int(fn._cache_size()) if hasattr(fn, "_cache_size") else -1
         return out
 
-    def _trial_randomness(self, key, n_bers: int):
+    def _trial_randomness(self, key, n_bers: int, backend: str = None):
         """(carried key, per-trial randomness [B, T, ...]) for one arm."""
         t = self.plan.n_trials
-        if self.backend == "pallas":
+        if (backend or self.backend) == "pallas":
             key, sub = jax.random.split(key)
             seeds = jax.random.bits(sub, (n_bers, t), jnp.uint32)
             return key, self._shard_trials(seeds)
@@ -299,15 +319,25 @@ class SweepEngine:
 
     # ------------------------------------------------------- Fig. 2 sweeps
 
-    def _build_field_plane(self, field: str, eval_fn: Callable):
+    def _field_backend(self, fault_model: str) -> str:
+        """Per-arm backend of a Fig. 2 field sweep: the XLA ``jax.random``
+        path has no counter-PRNG streams to compile a structured process
+        onto, so non-i.i.d. arms route through the batched kernel (interpret
+        mode off-TPU) regardless of the engine backend."""
+        return "pallas" if _arm_model(fault_model) is not None else self.backend
+
+    def _build_field_plane(self, field: str, eval_fn: Callable,
+                           fault_model: str = "iid"):
         fmt = self.plan.fmt
-        if self.backend == "pallas":
+        fp = _arm_model(fault_model)
+        if self._field_backend(fault_model) == "pallas":
             interpret = self.interpret
 
             def ber_step(params, seeds, ber):
                 thr = fi_ops.ber_to_threshold(ber)
                 corrupted = inject_pytree_batched(params, seeds, thr, field,
-                                                  fmt, interpret=interpret)
+                                                  fmt, interpret=interpret,
+                                                  model=fp)
                 return jax.vmap(eval_fn)(corrupted)
         else:
             model = fault_lib.FaultModel(ber=1.0, field=field, fmt=fmt)
@@ -326,31 +356,37 @@ class SweepEngine:
         return plane
 
     def run_fields(self, key, params, eval_fn: Callable) -> List[SweepResult]:
-        """Fig. 2: per-field sensitivity, whole (BER × trial) plane per field."""
+        """Fig. 2: per-field sensitivity, whole (BER × trial) plane per field
+        (× fault-model arm when the plan sweeps the process axis)."""
         plan = self.plan
         bers_arr = jnp.asarray(plan.bers, jnp.float32)
         results = []
-        for field in plan.fields:
-            key, rand = self._trial_randomness(key, len(plan.bers))
-            plane = self._executor(
-                ("fields", field, self.backend, id(eval_fn)),
-                lambda: self._build_field_plane(field, eval_fn))
-            accs = np.asarray(jax.device_get(plane(params, rand, bers_arr)))
-            for i, ber in enumerate(plan.bers):
-                results.append(SweepResult(ber, field, "raw",
-                                           [float(a) for a in accs[i]]))
+        for fm_spec in plan.fault_models:
+            for field in plan.fields:
+                key, rand = self._trial_randomness(
+                    key, len(plan.bers), self._field_backend(fm_spec))
+                plane = self._executor(
+                    ("fields", field, fm_spec, self.backend, id(eval_fn)),
+                    lambda: self._build_field_plane(field, eval_fn, fm_spec))
+                accs = np.asarray(jax.device_get(plane(params, rand, bers_arr)))
+                for i, ber in enumerate(plan.bers):
+                    results.append(SweepResult(ber, field, "raw",
+                                               [float(a) for a in accs[i]],
+                                               fault_model=fm_spec))
         return results
 
     # ------------------------------------------------------- Fig. 6 sweeps
 
-    def _build_protect_plane(self, eval_fn: Callable):
+    def _build_protect_plane(self, eval_fn: Callable,
+                             fault_model: str = "iid"):
+        fp = _arm_model(fault_model)
         if self.backend == "pallas":
             interpret = self.interpret
 
             def ber_step(stores, seeds, ber):
                 thr = fi_ops.ber_to_threshold(ber)
                 batched = cim_inject_pytree_batched(stores, seeds, thr,
-                                                    interpret)
+                                                    interpret, model=fp)
 
                 def decode_eval(st):
                     restored, stats = cim_lib.read_pytree_impl(st)
@@ -358,7 +394,7 @@ class SweepEngine:
                 return jax.vmap(decode_eval)(batched)
         else:
             def one_trial(stores, k, ber):
-                faulty = cim_lib.inject_pytree_impl(k, stores, ber)
+                faulty = cim_lib.inject_pytree_impl(k, stores, ber, model=fp)
                 restored, stats = cim_lib.read_pytree_impl(faulty)
                 return eval_fn(restored), stats
 
@@ -373,28 +409,33 @@ class SweepEngine:
     def run_protection(self, key, params, eval_fn: Callable,
                        cim_cfg: Optional[cim_lib.CIMConfig] = None
                        ) -> List[SweepResult]:
-        """Fig. 6: accuracy vs BER per protection arm on the CIM deployment."""
+        """Fig. 6: accuracy vs BER per protection arm on the CIM deployment
+        (× fault-model arm when the plan sweeps the process axis)."""
         plan = self.plan
         bers_arr = jnp.asarray(plan.bers, jnp.float32)
         results = []
-        for protect in plan.protects:
-            cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(),
-                                      protect=protect)
-            stores, _ = cim_lib.deploy_pytree_impl(params, cfg)
-            stores = self._shard_stores(stores)
-            key, rand = self._trial_randomness(key, len(plan.bers))
-            plane = self._executor(
-                ("protect", protect, self.backend, id(eval_fn)),
-                lambda: self._build_protect_plane(eval_fn))
-            accs, stats = plane(stores, rand, bers_arr)
-            accs = np.asarray(jax.device_get(accs))
-            corr = np.asarray(jax.device_get(stats["corrected"]), np.float64)
-            unc = np.asarray(jax.device_get(stats["uncorrectable"]), np.float64)
-            for i, ber in enumerate(plan.bers):
-                results.append(SweepResult(
-                    ber, "exponent_sign+mantissa", protect,
-                    [float(a) for a in accs[i]],
-                    float(corr[i].mean()), float(unc[i].mean())))
+        for fm_spec in plan.fault_models:
+            for protect in plan.protects:
+                cfg = dataclasses.replace(cim_cfg or cim_lib.CIMConfig(),
+                                          protect=protect)
+                stores, _ = cim_lib.deploy_pytree_impl(params, cfg)
+                stores = self._shard_stores(stores)
+                key, rand = self._trial_randomness(key, len(plan.bers))
+                plane = self._executor(
+                    ("protect", protect, fm_spec, self.backend, id(eval_fn)),
+                    lambda: self._build_protect_plane(eval_fn, fm_spec))
+                accs, stats = plane(stores, rand, bers_arr)
+                accs = np.asarray(jax.device_get(accs))
+                corr = np.asarray(jax.device_get(stats["corrected"]),
+                                  np.float64)
+                unc = np.asarray(jax.device_get(stats["uncorrectable"]),
+                                 np.float64)
+                for i, ber in enumerate(plan.bers):
+                    results.append(SweepResult(
+                        ber, "exponent_sign+mantissa", protect,
+                        [float(a) for a in accs[i]],
+                        float(corr[i].mean()), float(unc[i].mean()),
+                        fault_model=fm_spec))
         return results
 
     # ------------------------------------------------- policy (mixed) sweeps

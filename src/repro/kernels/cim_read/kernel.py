@@ -51,12 +51,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import bitpack
 from repro.core.ecc import One4NRowCodec
+from repro.core.faultmodels import scale_elem_thresholds
 from repro.kernels.fault_inject.kernel import hash_u32
 
 # jax renamed TPUCompilerParams -> CompilerParams across releases.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-# SMEM scalar layout (uint32[7]); thresholds of 0 mean "no flips".
+# SMEM scalar layout (uint32[9]); thresholds of 0 mean "no flips".
 SCALAR_THR_MAN = 0     # mantissa-field Bernoulli threshold
 SCALAR_THR_META = 1    # exponent_sign-field Bernoulli threshold
 SCALAR_SEED_MAN = 2    # mantissa-plane seed
@@ -64,11 +65,21 @@ SCALAR_SEED_META = 3   # raw-exponent-plane seed   (protect='none')
 SCALAR_SEED_CW = 4     # codeword-plane seed (protected) / sign-plane seed
 SCALAR_OFF_K = 5       # global K-row offset of this shard's plane block
 SCALAR_OFF_J = 6       # global J-column offset of this shard's plane block
+SCALAR_M_THR = 7       # fault-model parameter: burst hit threshold /
+                       # correlated strength (Q16)
+SCALAR_M_LEN = 8       # fault-model parameter: burst run length /
+                       # correlated period
 # The offsets put the dynamic flip streams in GLOBAL store coordinates when
 # the planes are mesh-sharded (ops.cim_linear_store_sharded): each shard's
 # kernel sees only its local block, but elem indices — and therefore the
 # counter-PRNG draws — match the single-device image bit for bit. They are
-# traced SMEM values, so every shard runs the same compiled program.
+# traced SMEM values, so every shard runs the same compiled program. The
+# fault-model *parameters* are traced the same way (sweeping a rate or run
+# length never recompiles), while the model's KIND/AXIS are static kernel
+# arguments picking the threshold-compilation code path — exactly like
+# `dynamic` itself. Per-element thresholds come from
+# ``faultmodels.scale_elem_thresholds`` on the same GLOBAL element indices,
+# so kernel streams stay bit-identical to the jnp inject paths per process.
 
 
 def _flip_mask(elem: jnp.ndarray, seed, threshold, positions) -> jnp.ndarray:
@@ -147,7 +158,8 @@ def _meta_decode_one4n(cw, *, codec: One4NRowCodec, n_group: int,
 def _decode_tile_one4n(scalars_ref, man, cw, j, kk, *, codec: One4NRowCodec,
                        n_group: int, man_bits: int, exp_bits: int, bias: int,
                        store_g: int, store_j: int, block_n: int, block_k: int,
-                       dynamic: bool):
+                       dynamic: bool, model_kind: str = "iid",
+                       model_axis: str = "row"):
     """Decode one (kk, j) plane tile -> reconstructed fp32 [bk, bn].
 
     Depends only on the (j, kk) tile coordinates (plus SMEM scalars), never
@@ -163,12 +175,17 @@ def _decode_tile_one4n(scalars_ref, man, cw, j, kk, *, codec: One4NRowCodec,
         seed_cw = scalars_ref[SCALAR_SEED_CW]
         off_k = scalars_ref[SCALAR_OFF_K]
         off_j = scalars_ref[SCALAR_OFF_J]
+        m_thr = scalars_ref[SCALAR_M_THR]
+        m_len = scalars_ref[SCALAR_M_LEN]
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
             + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
             + jnp.uint32(j * block_n) + off_j
         elem = rows * jnp.uint32(store_j) + cols     # GLOBAL store coordinates
-        man = man ^ _flip_mask(elem, seed_man, thr_man,
+        t_man = scale_elem_thresholds(
+            elem, thr_man, seed_man, kind=model_kind, axis=model_axis,
+            m_thr=m_thr, m_len=m_len, width=store_j)
+        man = man ^ _flip_mask(elem, seed_man, t_man,
                                tuple(range(man_bits))).astype(man.dtype)
         b_idx = jax.lax.broadcasted_iota(jnp.uint32, (bkb, bng), 0) \
             + jnp.uint32(kk * bkb) + off_k // jnp.uint32(n_group)
@@ -183,8 +200,12 @@ def _decode_tile_one4n(scalars_ref, man, cw, j, kk, *, codec: One4NRowCodec,
             for w in range(w_):
                 positions = tuple(p for p in range(32)
                                   if (int(masks[w]) >> p) & 1)
-                m = _flip_mask(base + jnp.uint32(s * w_ + w), seed_cw,
-                               thr_meta, positions)
+                celem = base + jnp.uint32(s * w_ + w)
+                t_cw = scale_elem_thresholds(
+                    celem, thr_meta, seed_cw, kind=model_kind,
+                    axis=model_axis, m_thr=m_thr, m_len=m_len,
+                    width=store_g * s_ * w_, col_div=s_ * w_)
+                m = _flip_mask(celem, seed_cw, t_cw, positions)
                 words.append(cw[:, :, s, w] ^ m)
             planes.append(jnp.stack(words, axis=-1))
         cw = jnp.stack(planes, axis=-2)              # [bkb, bng, S, W]
@@ -200,7 +221,8 @@ def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref,
                            man_bits: int, exp_bits: int, bias: int,
                            store_g: int, store_j: int, block_m: int,
                            block_n: int, block_k: int, dynamic: bool,
-                           hoist: bool):
+                           hoist: bool, model_kind: str = "iid",
+                           model_axis: str = "row"):
     j = pl.program_id(0)
     i = pl.program_id(1)
     kk = pl.program_id(2)
@@ -212,7 +234,8 @@ def _cim_read_kernel_one4n(scalars_ref, x_ref, man_ref, cw_ref, o_ref,
     decode = functools.partial(
         _decode_tile_one4n, codec=codec, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_g=store_g, store_j=store_j,
-        block_n=block_n, block_k=block_k, dynamic=dynamic)
+        block_n=block_n, block_k=block_k, dynamic=dynamic,
+        model_kind=model_kind, model_axis=model_axis)
 
     if hoist:
         w_strip = scratch[0]                         # VMEM [n_k*bk, bn] f32
@@ -246,7 +269,8 @@ def _meta_decode_raw(e_block, signw, *, n_group: int, block_k: int,
 
 def _decode_tile_raw(scalars_ref, man, e_block, signw, j, kk, *, n_group: int,
                      man_bits: int, exp_bits: int, bias: int, store_k: int,
-                     store_j: int, block_n: int, block_k: int, dynamic: bool):
+                     store_j: int, block_n: int, block_k: int, dynamic: bool,
+                     model_kind: str = "iid", model_axis: str = "row"):
     """protect='none' twin of :func:`_decode_tile_one4n` (same (j, kk)-only
     dependence)."""
     bkw = signw.shape[0]
@@ -259,12 +283,20 @@ def _decode_tile_raw(scalars_ref, man, e_block, signw, j, kk, *, n_group: int,
         seed_sign = scalars_ref[SCALAR_SEED_CW]
         off_k = scalars_ref[SCALAR_OFF_K]
         off_j = scalars_ref[SCALAR_OFF_J]
+        m_thr = scalars_ref[SCALAR_M_THR]
+        m_len = scalars_ref[SCALAR_M_LEN]
+
+        def scale(elem_, thr_, seed_):
+            return scale_elem_thresholds(
+                elem_, thr_, seed_, kind=model_kind, axis=model_axis,
+                m_thr=m_thr, m_len=m_len, width=store_j)
+
         rows = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 0) \
             + jnp.uint32(kk * block_k) + off_k
         cols = jax.lax.broadcasted_iota(jnp.uint32, (block_k, block_n), 1) \
             + jnp.uint32(j * block_n) + off_j
         elem = rows * jnp.uint32(store_j) + cols
-        man = man ^ _flip_mask(elem, seed_man, thr_man,
+        man = man ^ _flip_mask(elem, seed_man, scale(elem, thr_man, seed_man),
                                tuple(range(man_bits))).astype(man.dtype)
         bkb = block_k // n_group
         b_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 0) \
@@ -272,14 +304,17 @@ def _decode_tile_raw(scalars_ref, man, e_block, signw, j, kk, *, n_group: int,
         b_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkb, block_n), 1) \
             + jnp.uint32(j * block_n) + off_j
         e_elem = b_rows * jnp.uint32(store_j) + b_cols
-        e_block = e_block ^ _flip_mask(e_elem, seed_meta, thr_meta,
+        e_block = e_block ^ _flip_mask(e_elem, seed_meta,
+                                       scale(e_elem, thr_meta, seed_meta),
                                        tuple(range(exp_bits))).astype(e_block.dtype)
         w_rows = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 0) \
             + jnp.uint32(kk * bkw) + off_k // jnp.uint32(32)
         w_cols = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n), 1) \
             + jnp.uint32(j * block_n) + off_j
         s_elem = w_rows * jnp.uint32(store_j) + w_cols
-        smask = _flip_mask(s_elem, seed_sign, thr_meta, tuple(range(32)))
+        smask = _flip_mask(s_elem, seed_sign,
+                           scale(s_elem, thr_meta, seed_sign),
+                           tuple(range(32)))
         # lanes beyond the store's K rows are not cells: mask them off
         lane = jax.lax.broadcasted_iota(jnp.uint32, (bkw, block_n, 32), 2)
         lane_k = w_rows[:, :, None] * jnp.uint32(32) + lane
@@ -297,7 +332,8 @@ def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
                          o_ref, *scratch, n_group: int, man_bits: int,
                          exp_bits: int, bias: int, store_k: int, store_j: int,
                          block_m: int, block_n: int, block_k: int,
-                         dynamic: bool, hoist: bool):
+                         dynamic: bool, hoist: bool, model_kind: str = "iid",
+                         model_axis: str = "row"):
     """protect='none': raw exponent plane + K-packed sign words."""
     j = pl.program_id(0)
     i = pl.program_id(1)
@@ -310,7 +346,8 @@ def _cim_read_kernel_raw(scalars_ref, x_ref, man_ref, exp_ref, signw_ref,
     decode = functools.partial(
         _decode_tile_raw, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
-        block_n=block_n, block_k=block_k, dynamic=dynamic)
+        block_n=block_n, block_k=block_k, dynamic=dynamic,
+        model_kind=model_kind, model_axis=model_axis)
 
     if hoist:
         w_strip = scratch[0]                         # VMEM [n_k*bk, bn] f32
@@ -346,11 +383,14 @@ def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
                           bias: int, store_g: int, store_j: int,
                           block_m: int, block_n: int, block_k: int,
                           dynamic: bool, hoist: bool = False,
-                          interpret: bool = True):
+                          interpret: bool = True, model_kind: str = "iid",
+                          model_axis: str = "row"):
     """x [M, K] float; man uint16 [K, N]; cw uint32 [K//n, N//rw, S, W];
-    scalars uint32 [7] (see SCALAR_*) -> [M, N] f32, decode fused into the
+    scalars uint32 [9] (see SCALAR_*) -> [M, N] f32, decode fused into the
     matmul. ``hoist=True`` decodes each (j, kk) plane tile once into VMEM
-    scratch and reuses the strip across the M-row revisits."""
+    scratch and reuses the strip across the M-row revisits. ``model_kind`` /
+    ``model_axis`` statically select the fault-model threshold compilation
+    (its traced parameters ride in SCALAR_M_THR/SCALAR_M_LEN)."""
     m, k = x.shape
     k2, n = man.shape
     rw = codec.row_weights
@@ -365,7 +405,8 @@ def cim_read_matmul_one4n(x, man, cw, scalars, *, codec: One4NRowCodec,
         _cim_read_kernel_one4n, codec=codec, n_group=n_group,
         man_bits=man_bits, exp_bits=exp_bits, bias=bias, store_g=store_g,
         store_j=store_j, block_m=block_m, block_n=block_n, block_k=block_k,
-        dynamic=dynamic, hoist=hoist)
+        dynamic=dynamic, hoist=hoist, model_kind=model_kind,
+        model_axis=model_axis)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -388,9 +429,10 @@ def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
                         man_bits: int, exp_bits: int, bias: int, store_k: int,
                         store_j: int, block_m: int, block_n: int,
                         block_k: int, dynamic: bool, hoist: bool = False,
-                        interpret: bool = True):
+                        interpret: bool = True, model_kind: str = "iid",
+                        model_axis: str = "row"):
     """protect='none' variant: exp uint8 [K//n, N], signw uint32 [K//32, N];
-    scalars uint32 [7] (see SCALAR_*)."""
+    scalars uint32 [9] (see SCALAR_*)."""
     m, k = x.shape
     k2, n = man.shape
     assert k == k2 and exp.shape == (k // n_group, n)
@@ -404,7 +446,7 @@ def cim_read_matmul_raw(x, man, exp, signw, scalars, *, n_group: int,
         _cim_read_kernel_raw, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
         block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
-        hoist=hoist)
+        hoist=hoist, model_kind=model_kind, model_axis=model_axis)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -20,7 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cim as cim_lib
-from repro.kernels.cim_read.kernel import (cim_read_matmul_one4n,
+from repro.core import faultmodels as fm_lib
+from repro.kernels.cim_read.kernel import (SCALAR_M_LEN, SCALAR_M_THR,
+                                           SCALAR_THR_MAN, SCALAR_THR_META,
+                                           cim_read_matmul_one4n,
                                            cim_read_matmul_raw)
 from repro.kernels.cim_read.ref import cim_read_ref  # noqa: F401
 
@@ -37,18 +40,23 @@ def _pad2(a, r, c):
     return jnp.pad(a, ((0, r - a.shape[0]), (0, c - a.shape[1])))
 
 
-def make_scalars(seeds=None, thr_man=0, thr_meta=0, off_k=0,
-                 off_j=0) -> jnp.ndarray:
+def make_scalars(seeds=None, thr_man=0, thr_meta=0, off_k=0, off_j=0,
+                 model=None) -> jnp.ndarray:
     """SMEM scalar vector for the fused kernel (see kernel.SCALAR_*).
 
     ``seeds`` is a :func:`repro.core.cim.plane_seeds` dict; zero thresholds
     mean static serving (no in-kernel flips are drawn on that field).
     ``off_k``/``off_j`` place a mesh shard's plane block at its global store
     coordinates (:func:`cim_linear_store_sharded` sets them per shard); zero
-    offsets are the single-device image.
+    offsets are the single-device image. ``model`` (a
+    :class:`~repro.core.faultmodels.FaultProcess`) fills the fault-model
+    parameter slots — its static kind/axis travel separately (the ``model=``
+    argument of the kernel wrappers), so sweeping a rate or run length never
+    recompiles.
     """
     z = jnp.uint32(0)
     seeds = seeds or {}
+    m_thr, m_len = fm_lib.model_scalars(model)
     return jnp.stack([
         jnp.asarray(thr_man, jnp.uint32),
         jnp.asarray(thr_meta, jnp.uint32),
@@ -57,33 +65,39 @@ def make_scalars(seeds=None, thr_man=0, thr_meta=0, off_k=0,
         jnp.asarray(seeds.get("cw", z), jnp.uint32),
         jnp.asarray(off_k, jnp.uint32),
         jnp.asarray(off_j, jnp.uint32),
+        jnp.asarray(m_thr, jnp.uint32),
+        jnp.asarray(m_len, jnp.uint32),
     ])
 
 
 @functools.partial(jax.jit, static_argnames=(
     "codec", "n_group", "man_bits", "exp_bits", "bias", "store_g", "store_j",
-    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret"))
+    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret",
+    "model_kind", "model_axis"))
 def _one4n_call(x, man, cw, scalars, *, codec, n_group, man_bits, exp_bits,
                 bias, store_g, store_j, block_m, block_n, block_k, dynamic,
-                hoist, interpret):
+                hoist, interpret, model_kind="iid", model_axis="row"):
     return cim_read_matmul_one4n(
         x, man, cw, scalars, codec=codec, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_g=store_g, store_j=store_j,
         block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
-        hoist=hoist, interpret=interpret)
+        hoist=hoist, interpret=interpret, model_kind=model_kind,
+        model_axis=model_axis)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "n_group", "man_bits", "exp_bits", "bias", "store_k", "store_j",
-    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret"))
+    "block_m", "block_n", "block_k", "dynamic", "hoist", "interpret",
+    "model_kind", "model_axis"))
 def _raw_call(x, man, exp, signw, scalars, *, n_group, man_bits, exp_bits,
               bias, store_k, store_j, block_m, block_n, block_k, dynamic,
-              hoist, interpret):
+              hoist, interpret, model_kind="iid", model_axis="row"):
     return cim_read_matmul_raw(
         x, man, exp, signw, scalars, n_group=n_group, man_bits=man_bits,
         exp_bits=exp_bits, bias=bias, store_k=store_k, store_j=store_j,
         block_m=block_m, block_n=block_n, block_k=block_k, dynamic=dynamic,
-        hoist=hoist, interpret=interpret)
+        hoist=hoist, interpret=interpret, model_kind=model_kind,
+        model_axis=model_axis)
 
 
 # Default per-call VMEM budget for tile selection: real TPU cores have
@@ -150,7 +164,8 @@ def autotuned_tile_shapes(store, ms=(2, 8, 128, 512)):
     return out
 
 
-def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
+def cim_linear_store(x, store, *, scalars=None, model=None,
+                     block_m: int | None = None,
                      block_n: int | None = None, block_k: int | None = None,
                      hoist: bool | None = None,
                      interpret: bool | None = None, use_kernel: bool = True,
@@ -176,6 +191,12 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
     is one shard of a larger image: dynamic elem indices are computed against
     the GLOBAL padded dims (offsets ride in via the scalars vector), so the
     per-shard flip streams equal the single-device image's.
+
+    ``model`` selects the :class:`~repro.core.faultmodels.FaultProcess` of a
+    dynamic read: its kind/axis pick the compiled threshold path (static, like
+    ``dynamic``), its parameters overwrite the SCALAR_M_* slots (traced), and
+    a static drift tick pre-scales the field thresholds — streams bit-
+    identical to ``cim.inject(..., model=model)`` at the same seeds.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -186,12 +207,25 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
     assert x2.shape[-1] == k_log, (x2.shape, store.shape)
     dynamic = scalars is not None
 
+    m_kind = model.kind if model is not None else "iid"
+    m_axis = model.axis if model is not None else "row"
+    if dynamic and model is not None:
+        m_thr, m_len = fm_lib.model_scalars(model)
+        scalars = scalars.at[SCALAR_M_THR].set(m_thr) \
+                         .at[SCALAR_M_LEN].set(m_len)
+        if m_kind == "drift":
+            # element-independent: pre-scale the field thresholds once
+            scalars = scalars.at[SCALAR_THR_MAN].set(
+                fm_lib.compiled_threshold(model, scalars[SCALAR_THR_MAN]))
+            scalars = scalars.at[SCALAR_THR_META].set(
+                fm_lib.compiled_threshold(model, scalars[SCALAR_THR_META]))
+
     supported = use_kernel and cfg.protect in ("one4n", "none") \
         and cfg.fmt.name == "fp16"
     if not supported:
         assert global_dims is None, \
             "sharded (global_dims) calls require the kernel route"
-        out = _fallback(x2, store, scalars)
+        out = _fallback(x2, store, scalars, model)
         out = out.reshape(*b_shape, j_log)
         return (out, {"used_kernel": False}) if with_info else out
 
@@ -213,7 +247,8 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
         scalars = make_scalars()
     common = dict(man_bits=cfg.fmt.man_bits, exp_bits=cfg.fmt.exp_bits,
                   bias=cfg.fmt.bias, block_m=bm, block_n=bn, block_k=bk,
-                  dynamic=dynamic, hoist=hoist, interpret=interpret)
+                  dynamic=dynamic, hoist=hoist, interpret=interpret,
+                  model_kind=m_kind, model_axis=m_axis)
     if cfg.protect == "one4n":
         cw = store.codewords
         b_t, g_t = k_t // n, j_t // rw
@@ -235,7 +270,7 @@ def cim_linear_store(x, store, *, scalars=None, block_m: int | None = None,
     return out
 
 
-def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
+def cim_linear_store_sharded(x, store, *, scalars=None, model=None, mesh=None,
                              axis: str = "model", dim: str = "j",
                              block_m: int | None = None,
                              block_n: int | None = None,
@@ -278,8 +313,9 @@ def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
         and cim_lib.can_shard_store(store, n_sh, dim) \
         and (dim == "j" or k_log == k_pad)   # K shards must tile whole slabs
     if not supported:
-        out = cim_linear_store(x, store, scalars=scalars, block_m=block_m,
-                               block_n=block_n, block_k=block_k, hoist=hoist,
+        out = cim_linear_store(x, store, scalars=scalars, model=model,
+                               block_m=block_m, block_n=block_n,
+                               block_k=block_k, hoist=hoist,
                                interpret=interpret, with_info=with_info)
         if with_info:
             out, info = out
@@ -310,7 +346,7 @@ def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
             exp=planes_loc.get("exp"), codewords=planes_loc.get("cw"),
             shape=shape, cfg=cfg)
         out = cim_linear_store(x_loc, loc, scalars=sc_i if dynamic else None,
-                               block_m=block_m, block_n=block_n,
+                               model=model, block_m=block_m, block_n=block_n,
                                block_k=block_k, hoist=hoist,
                                interpret=interpret,
                                global_dims=(k_pad, j_pad))
@@ -329,12 +365,18 @@ def cim_linear_store_sharded(x, store, *, scalars=None, mesh=None,
     return out
 
 
-def _fallback(x2, store, scalars):
+def _fallback(x2, store, scalars, model=None):
     """Reference path: packed jnp decode fused by XLA into the matmul (still
     no persistent fp16 copy; used for per_weight / non-fp16 formats). Dynamic
-    scalars draw the same flip streams as the fused kernel."""
+    scalars draw the same flip streams as the fused kernel; the fault model's
+    drift tick was already folded into the threshold slots by the caller, so
+    it is zeroed here to avoid double time-scaling."""
     if scalars is not None:
+        import dataclasses as _dc
+        if model is not None and model.kind == "drift" and model.tick:
+            model = _dc.replace(model, tick=0)
         seeds = {"man": scalars[2], "meta": scalars[3], "cw": scalars[4]}
-        store = cim_lib.inject_with_seeds(store, seeds, scalars[0], scalars[1])
+        store = cim_lib.inject_with_seeds(store, seeds, scalars[0], scalars[1],
+                                          model=model)
     w, _ = cim_lib.read(store)
     return x2 @ w

@@ -113,28 +113,50 @@ def fault_inject_pallas(bits: jnp.ndarray, *, seed: int, ber: float,
 #
 # The static kernel above bakes (seed, ber) into the compiled artifact — one
 # compile per sweep cell. Here both live in an SMEM scalar block instead:
-# scalars[0] is the uint32 Bernoulli threshold (round(ber * 2^32)) and
-# scalars[1 + t] is trial t's seed, so a whole (trial × element × bit) fault
-# plane evaluates under ONE compilation, with BER and trial count swept as
-# ordinary device values. The grid grows a leading trial dimension; every
-# (seed, element, bit) stream is identical to the static kernel's, so trial t
-# of the batched call is bit-exact with a static call at seed = seeds[t].
+# scalars[0] is the uint32 Bernoulli threshold (round(ber * 2^32)),
+# scalars[1:3] are the fault-model parameters (m_thr, m_len — zeros for
+# i.i.d.) and scalars[3 + t] is trial t's seed, so a whole (trial × element
+# × bit) fault plane evaluates under ONE compilation, with BER, model
+# parameters and trial count swept as ordinary device values. The model
+# *kind*/*axis* are static (they pick the compiled threshold code path, like
+# ``dynamic`` in the cim_read kernel). The grid grows a leading trial
+# dimension; every (seed, element, bit) stream is identical to the static
+# kernel's, so trial t of the batched call is bit-exact with a static call
+# at seed = seeds[t] (for the default i.i.d. model), and a non-i.i.d. model
+# only ever *lowers* the per-element threshold (subset-of-iid contract of
+# ``repro.core.faultmodels``).
 # ---------------------------------------------------------------------------
+
+SCALAR_B_THR = 0      # uint32 Bernoulli threshold round(ber * 2^32)
+SCALAR_B_M_THR = 1    # fault model: burst hit threshold / correlated Q16
+SCALAR_B_M_LEN = 2    # fault model: burst run length / correlated period
+SCALAR_B_SEEDS = 3    # trial seeds start here
 
 
 def _fault_kernel_batched(scalars_ref, bits_ref, o_ref, *,
                           positions: Tuple[int, ...], n_cols: int,
-                          block_r: int, block_c: int):
+                          block_r: int, block_c: int,
+                          model_kind: str = "iid", model_axis: str = "row",
+                          col_div: int = 1):
     t = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
-    threshold = scalars_ref[0]
-    seed = scalars_ref[1 + t]
+    threshold = scalars_ref[SCALAR_B_THR]
+    seed = scalars_ref[SCALAR_B_SEEDS + t]
     rows = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 0) \
         + jnp.uint32(i * block_r)
     cols = jax.lax.broadcasted_iota(jnp.uint32, (block_r, block_c), 1) \
         + jnp.uint32(j * block_c)
     elem = rows * jnp.uint32(n_cols) + cols
+
+    if model_kind not in ("iid", "drift"):
+        # lazy import: repro.core.faultmodels imports hash_u32 from here
+        from repro.core.faultmodels import scale_elem_thresholds
+        threshold = scale_elem_thresholds(
+            elem, threshold, seed, kind=model_kind, axis=model_axis,
+            m_thr=scalars_ref[SCALAR_B_M_THR],
+            m_len=scalars_ref[SCALAR_B_M_LEN],
+            width=n_cols, col_div=col_div)
 
     mask = jnp.zeros((block_r, block_c), jnp.uint32)
     for p in positions:
@@ -150,11 +172,16 @@ def _fault_kernel_batched(scalars_ref, bits_ref, o_ref, *,
 def fault_inject_batched_pallas(bits: jnp.ndarray, seeds: jnp.ndarray,
                                 threshold: jnp.ndarray, *,
                                 positions: Sequence[int], block_r: int = 256,
-                                block_c: int = 256, interpret: bool = True):
+                                block_c: int = 256, interpret: bool = True,
+                                m_thr=0, m_len=0, model_kind: str = "iid",
+                                model_axis: str = "row", col_div: int = 1):
     """bits uint [R, C], seeds uint32 [T] -> [T, R, C] faulted copies.
 
-    ``seeds`` and ``threshold`` are traced operands (SMEM scalars): one
-    compile covers every (BER, trial) the caller sweeps over.
+    ``seeds``, ``threshold`` and the fault-model parameters ``m_thr``/
+    ``m_len`` are traced operands (SMEM scalars): one compile covers every
+    (BER, model parameter, trial) the caller sweeps over. ``model_kind``/
+    ``model_axis`` are static; ``col_div`` gives the macro-column unit width
+    of the plane (words per column group for packed codeword planes).
     """
     r, c = bits.shape
     t = seeds.shape[0]
@@ -163,11 +190,15 @@ def fault_inject_batched_pallas(bits: jnp.ndarray, seeds: jnp.ndarray,
     block_c = _pick_block(c, block_c)
     scalars = jnp.concatenate([
         jnp.asarray(threshold, jnp.uint32).reshape(1),
+        jnp.asarray(m_thr, jnp.uint32).reshape(1),
+        jnp.asarray(m_len, jnp.uint32).reshape(1),
         seeds.astype(jnp.uint32)])
     grid = (t, r // block_r, c // block_c)
     return pl.pallas_call(
         functools.partial(_fault_kernel_batched, positions=tuple(positions),
-                          n_cols=c, block_r=block_r, block_c=block_c),
+                          n_cols=c, block_r=block_r, block_c=block_c,
+                          model_kind=model_kind, model_axis=model_axis,
+                          col_div=col_div),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
                   pl.BlockSpec((block_r, block_c), lambda t, i, j: (i, j))],

@@ -37,20 +37,36 @@ def fault_inject_bits(bits, *, seed: int, ber: float, positions,
                                positions=tuple(positions), interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("positions", "interpret"))
+@functools.partial(jax.jit, static_argnames=("positions", "interpret",
+                                             "model", "col_div"))
 def fault_inject_bits_batched(bits, seeds, threshold, *, positions,
-                              interpret: bool | None = None):
+                              interpret: bool | None = None, model=None,
+                              col_div: int = 1):
     """Trial-batched injection: bits [R, C] -> [T, R, C], one compile total.
 
     ``seeds`` (uint32 [T]) and ``threshold`` (uint32 scalar, see
     :func:`ber_to_threshold`) are traced — sweeping BER or trial seeds does
     NOT retrigger compilation, which is what lets the sweep engine evaluate a
-    whole (BER x trial) plane per arm."""
+    whole (BER x trial) plane per arm.
+
+    ``model`` is an optional :class:`repro.core.faultmodels.FaultProcess`
+    (hashable, static): burst/correlated compile to per-element thresholds
+    inside the kernel (parameters ride in SMEM, so sweeping rate/length does
+    not recompile either); drift pre-scales ``threshold`` by its tick.
+    ``model=None`` / i.i.d. is bit-identical to the legacy stream."""
     if interpret is None:
         interpret = not _on_tpu()
+    from repro.core import faultmodels as fm
+    threshold = fm.compiled_threshold(model, threshold)
+    m_thr, m_len = fm.model_scalars(model)
+    kind = model.kind if model is not None else "iid"
+    axis = model.axis if model is not None else "row"
     return fault_inject_batched_pallas(bits, seeds, threshold,
                                        positions=tuple(positions),
-                                       interpret=interpret)
+                                       interpret=interpret,
+                                       m_thr=m_thr, m_len=m_len,
+                                       model_kind=kind, model_axis=axis,
+                                       col_div=col_div)
 
 
 def fault_inject_fp16(w, *, seed: int, ber: float, field: str = "full",

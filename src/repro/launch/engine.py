@@ -140,6 +140,9 @@ class RequestResult:
     replica: str = ""                  # fleet: name of the serving replica
     prefix_tokens: int = 0             # prompt tokens reused from the trie
     salt: int = 0                      # uint32 request salt (decode streams)
+    ecc_window: List[Dict[str, int]] = dataclasses.field(
+        default_factory=list)          # per decode-chunk ECC time series
+    scrubs: int = 0                    # scrub events while this req was live
 
     def to_json(self) -> dict:
         tok_s = len(self.tokens) / self.decode_s if self.decode_s > 0 else 0.0
@@ -148,6 +151,9 @@ class RequestResult:
                 "queue_s": self.queue_s, "ttft_s": self.ttft_s,
                 "decode_s": self.decode_s, "tok_s": tok_s, "slot": self.slot,
                 "ecc": {k: int(v) for k, v in self.ecc.items()},
+                "ecc_window": [{k: int(v) for k, v in w.items()}
+                               for w in self.ecc_window],
+                "scrubs": self.scrubs,
                 "finite": self.finite, "replica": self.replica,
                 "prefix_hit": self.prefix_tokens > 0,
                 "prefix_tokens": self.prefix_tokens, "salt": self.salt}
@@ -276,6 +282,8 @@ class _Slot:
     ecc: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"reads": 0, "corrected": 0,
                                  "uncorrectable": 0})
+    ecc_window: List[Dict[str, int]] = dataclasses.field(default_factory=list)
+    scrubs: int = 0
 
 
 @dataclasses.dataclass
@@ -380,6 +388,11 @@ class Engine:
         self._ecc_accounting = ecc_accounting
         self._runtime = params.get("_cim") if isinstance(params, dict) \
             else None
+        # per-store cumulative ECC charges (path -> counters): the signal a
+        # ScrubPolicy thresholds on. Survives refresh_params — scrubbing
+        # resets it per store via launch.scrub, not here.
+        self.store_ecc: Dict[str, Dict[str, int]] = {}
+        self.scrub_events: List[dict] = []
         self._ecc_fns = self._build_ecc_fns() if ecc_accounting else []
 
     # ------------------------------------------------------------ ECC
@@ -402,36 +415,67 @@ class Engine:
         flat = jax.tree_util.tree_flatten_with_path(
             self.params, is_leaf=cim_lib._is_store)[0]
         rt = self._runtime
+        model = rt.get("model") if rt is not None else None
+        if model is not None and model.kind == "drift":
+            # reads absorb drift's time scaling into the thresholds (keyed on
+            # the request-local pos); the model handed downstream is tick-0
+            model0 = dataclasses.replace(model, tick=0)
+        else:
+            model0 = model
         for path, leafv in flat:
             if not cim_lib._is_store(leafv):
                 continue
-            salt = dep_lib.leaf_salt(dep_lib.path_str(path))
+            pstr = dep_lib.path_str(path)
+            salt = dep_lib.leaf_salt(pstr)
+            self.store_ecc.setdefault(
+                pstr, {"reads": 0, "corrected": 0, "uncorrectable": 0})
             if rt is None:
                 st = cim_lib.store_stats(leafv)
                 const = (int(st["corrected"]), int(st["uncorrectable"]))
-                fns.append(lambda req_salt, pos, c=const: c)
+                fns.append((pstr, lambda req_salt, pos, c=const: c))
             else:
+                from repro.core import faultmodels as fm_lib
+
                 def dyn(req_salt, pos, store=leafv, leaf_salt=salt):
                     seeds = dep_lib.request_read_seeds(
                         rt["seeds"], leaf_salt, req_salt, pos)
-                    faulted = cim_lib.inject_with_seeds(
-                        store, seeds, rt["thr_man"], rt["thr_meta"])
+                    tm = fm_lib.compiled_threshold(model, rt["thr_man"],
+                                                   tick=pos)
+                    tt = fm_lib.compiled_threshold(model, rt["thr_meta"],
+                                                   tick=pos)
+                    faulted = cim_lib.inject_with_seeds(store, seeds, tm, tt,
+                                                        model=model0)
                     st = cim_lib.store_stats(faulted)
                     return jnp.stack([st["corrected"], st["uncorrectable"]])
                 jfn = jax.jit(dyn)
-                fns.append(lambda req_salt, pos, f=jfn:
-                           tuple(int(v) for v in np.asarray(f(req_salt, pos))))
+                fns.append((pstr, lambda req_salt, pos, f=jfn:
+                            tuple(int(v)
+                                  for v in np.asarray(f(req_salt, pos)))))
         return fns
 
     def _charge_reads(self, slot: _Slot, salt, pos: int) -> None:
-        """Charge one CIM read (all deployed macros) at read index ``pos``."""
+        """Charge one CIM read (all deployed macros) at read index ``pos``.
+
+        Besides the request's cumulative counters, every charge lands in the
+        request's ``ecc_window`` time series (one row per decode chunk, the
+        scrub-decision observable) and the engine's per-store ``store_ecc``
+        totals (the ScrubPolicy threshold signal)."""
         if not self._ecc_fns:
             return
         slot.ecc["reads"] += 1
-        for fn in self._ecc_fns:
+        corr = unc = 0
+        for pstr, fn in self._ecc_fns:
             c, u = fn(jnp.uint32(salt), jnp.int32(pos))
-            slot.ecc["corrected"] += c
-            slot.ecc["uncorrectable"] += u
+            corr += c
+            unc += u
+            store = self.store_ecc[pstr]
+            store["reads"] += 1
+            store["corrected"] += c
+            store["uncorrectable"] += u
+        slot.ecc["corrected"] += corr
+        slot.ecc["uncorrectable"] += unc
+        slot.ecc_window.append({"pos": int(pos), "reads": 1,
+                                "corrected": corr, "uncorrectable": unc})
 
     # ------------------------------------------------------------ scheduling
 
@@ -528,7 +572,7 @@ class Engine:
             ecc=slot.ecc, finite=slot.finite,
             logits=np.stack(slot.logits) if slot.logits else None,
             replica=self.replica, prefix_tokens=slot.prefix_tokens,
-            salt=slot.salt)
+            salt=slot.salt, ecc_window=slot.ecc_window, scrubs=slot.scrubs)
         self.results[slot.rid] = res
         self.slots[slot_idx] = None
         # reset the slot's position so the next admission prefills from 0;
@@ -588,14 +632,19 @@ class Engine:
         back.sort(key=lambda r: (r.arrival, r.rid))
         return back
 
-    def refresh_params(self, params) -> None:
+    def refresh_params(self, params, *, force: bool = False) -> None:
         """Swap in a new deployed image/runtime (engine must be idle).
 
         The invalidation-on-inject contract: cached prefix KV embeds the
         faults of the image it was prefilled against, so ANY params change
         drops the trie before the next admission can hit it.
+
+        ``force=True`` swaps while requests are in flight — the online
+        scrubbing/aging path. In-flight KV stays (it embeds the faults of
+        the image it was computed against — exactly the physics: old reads
+        saw the old cells); subsequent reads see the new image.
         """
-        if self.busy:
+        if self.busy and not force:
             raise EngineError("refresh_params on a busy engine: drain first")
         self.params = params
         self._runtime = params.get("_cim") if isinstance(params, dict) \
@@ -603,6 +652,19 @@ class Engine:
         self._ecc_fns = self._build_ecc_fns() if self._ecc_accounting else []
         if self.prefix_cache is not None:
             self.prefix_cache.invalidate()
+
+    def record_scrub(self, event: dict) -> None:
+        """Log one scrub event (``launch.scrub`` calls this) and mark every
+        in-flight request as having lived through it; per-store cumulative
+        counters of the scrubbed stores reset (damage cleared)."""
+        self.scrub_events.append(dict(event))
+        for s in self.slots:
+            if s is not None:
+                s.scrubs += 1
+        for pstr in event.get("paths", ()):
+            if pstr in self.store_ecc:
+                self.store_ecc[pstr] = {"reads": 0, "corrected": 0,
+                                        "uncorrectable": 0}
 
     # ------------------------------------------------------------ stepping
 
@@ -669,19 +731,25 @@ class Engine:
         return {"idle": False, "admitted": admitted, "decoded": decoded,
                 "evicted": evicted}
 
-    def run(self, requests, *, open_loop: bool = False
+    def run(self, requests, *, open_loop: bool = False, on_step=None
             ) -> Tuple[Dict[int, RequestResult], dict]:
         """Serve ``requests`` to completion -> (results by rid, aggregate).
 
         ``open_loop=True`` gates admissions on each request's wall-clock
         ``arrival`` offset (the Poisson load); otherwise everything is
         admissible immediately and ``arrival`` only sets the queue order.
+
+        ``on_step(engine, event)`` runs after every engine step — the hook
+        the online scrub controller (``launch.scrub.ScrubController``) and
+        aging schedules interleave with request slots.
         """
         self._t0 = time.perf_counter()
         for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             self.submit(req, now=req.arrival if open_loop else 0.0)
         while self.queue or self.active.any():
             ev = self.step(now=None if open_loop else float("inf"))
+            if on_step is not None:
+                on_step(self, ev)
             if ev["idle"] and self.queue:
                 # open loop: nothing active and the next arrival is in the
                 # future — sleep to it instead of spinning
@@ -721,4 +789,18 @@ class Engine:
                              if self.prefix_cache is not None else None),
             "ecc": {k: int(sum(r.ecc[k] for r in res))
                     for k in ("reads", "corrected", "uncorrectable")},
+            "store_ecc": {p: dict(v) for p, v in self.store_ecc.items()},
+            "scrub": self._scrub_summary(),
+        }
+
+    def _scrub_summary(self) -> dict:
+        ev = self.scrub_events
+        return {
+            "events": len(ev),
+            "rows_reencoded": int(sum(e.get("rows", 0) for e in ev)),
+            "corrected_cleared": int(sum(e.get("corrected_cleared", 0)
+                                         for e in ev)),
+            "uncorrectable_cleared": int(sum(e.get("uncorrectable_cleared", 0)
+                                             for e in ev)),
+            "wall_s": float(sum(e.get("wall_s", 0.0) for e in ev)),
         }

@@ -320,5 +320,10 @@ class Fleet:
             "requeued": self.requeued,
             "prefix_hits": sum(p["prefix_hits"] for p in per.values()),
             "prefix_tokens": sum(p["prefix_tokens"] for p in per.values()),
+            "scrub": {
+                key: sum(p.get("scrub", {}).get(key, 0) for p in per.values())
+                for key in ("events", "rows_reencoded", "corrected_cleared",
+                            "uncorrectable_cleared", "wall_s")
+            },
             "replicas": per,
         }

@@ -1,0 +1,198 @@
+"""Online ECC scrubbing: a self-healing loop over the serving engine.
+
+SRAM soft errors accumulate between deployments — under a drift process
+(:mod:`repro.core.faultmodels`) the per-read BER grows with time, and every
+uncorrected double-bit row is permanent until the image is rewritten. Memory
+scrubbing is the classical answer: periodically read every word through the
+ECC decoder and write the corrected value back, converting correctable
+errors into clean cells before a second hit makes them uncorrectable.
+
+This module interleaves that loop with the engine's request slots:
+
+* :class:`ScrubPolicy` — when to scrub: a per-store cumulative ECC-event
+  threshold over ``engine.store_ecc`` (charged by the engine's per-read
+  accountants) plus a check interval in engine steps.
+* :class:`DriftAging` — the wear process for soaks: every ``every`` steps
+  the deployment takes a fresh static injection at the aging tick's
+  drift-scaled BER, keyed on ``fold_in(key, tick)`` so a scrub-on and a
+  scrub-off run draw bit-identical damage streams.
+* :class:`ScrubController` — the ``engine.run(on_step=...)`` hook tying
+  them together. A scrub re-encodes the affected stores exactly the way
+  deployment did (``cim.read`` through the decoder, ``cim.pack`` back into
+  a fresh image), swaps the engine's params via
+  ``refresh_params(force=True)`` — which drops the prefix cache, honouring
+  the PR-6 invalidation contract (decoded-row caches are rebuilt from the
+  clean image by ``serving_params``) — and logs per-scrub accounting
+  through ``engine.record_scrub`` (which also resets the scrubbed stores'
+  ``store_ecc`` counters and stamps in-flight requests).
+
+The controller mutates its ``dep`` attribute (aging and scrubbing both
+produce derived deployments); read ``controller.dep`` after a run for the
+final image, and ``engine.aggregate()['scrub']`` for the rollup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cim as cim_lib
+from repro.core import faultmodels as fm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrubPolicy:
+    """When the controller rewrites a store's SRAM image.
+
+    ``threshold``: cumulative ECC events (corrected + uncorrectable) charged
+    to one store in ``engine.store_ecc`` since its last scrub. ``interval``:
+    check cadence in engine steps. ``max_scrubs``: hard cap on scrub events
+    per run (0 = unbounded) — a safety valve for runaway thresholds.
+    """
+    threshold: int = 16
+    interval: int = 1
+    max_scrubs: int = 0
+
+    def __post_init__(self):
+        if self.threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {self.threshold}")
+        if self.interval < 1:
+            raise ValueError(f"interval must be >= 1, got {self.interval}")
+
+    def due(self, store_ecc: dict) -> List[str]:
+        """Store paths whose cumulative charges crossed the threshold."""
+        return [p for p, c in store_ecc.items()
+                if c["corrected"] + c["uncorrectable"] >= self.threshold]
+
+
+@dataclasses.dataclass
+class DriftAging:
+    """Cumulative wear: fresh static faults into the deployment per tick.
+
+    Each application injects at ``ber`` scaled by the drift curve at
+    ``tick`` (``model.tick`` is rewritten per call), keyed on
+    ``fold_in(key, tick)``. Damage accumulates because each injection lands
+    on the *current* (already-faulted) image — only a scrub's re-encode
+    clears it. The same (key, ber, model) sequence is bit-reproducible, so
+    scrub-on vs scrub-off soaks see identical incident errors.
+    """
+    key: jax.Array
+    ber: float
+    model: fm_lib.FaultProcess = dataclasses.field(
+        default_factory=fm_lib.FaultProcess.drift)
+    every: int = 1
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        self.model = fm_lib.parse_fault_model(self.model)
+
+    def age(self, dep, tick: int):
+        """One wear step at ``tick`` -> derived deployment."""
+        model = self.model
+        if model is not None and model.kind == "drift":
+            model = dataclasses.replace(model, tick=int(tick))
+        return dep.inject(jax.random.fold_in(self.key, tick), self.ber,
+                          model=model)
+
+
+class ScrubController:
+    """``engine.run(on_step=controller)`` — age, threshold, re-encode, swap.
+
+    Parameters
+    ----------
+    dep: the live :class:`~repro.core.deployment.CIMDeployment` behind the
+        engine's params (the controller owns it from here; aging and scrubs
+        replace it).
+    policy: :class:`ScrubPolicy` (default thresholds if omitted).
+    aging: optional :class:`DriftAging` wear process driven off engine steps.
+    serving_kw: kwargs for ``dep.serving_params`` when rebuilding the
+        engine's params after aging or a scrub (``dynamic_key``/``ber``/
+        ``model``/``row_cache``...). Must match how the engine's original
+        params were built or the swap changes serving semantics.
+    """
+
+    def __init__(self, dep, policy: Optional[ScrubPolicy] = None, *,
+                 aging: Optional[DriftAging] = None, serving_kw=None):
+        self.dep = dep
+        self.policy = policy or ScrubPolicy()
+        self.aging = aging
+        self.serving_kw = dict(serving_kw or {})
+        self.events: List[dict] = []
+        self.tick = 0
+
+    # ------------------------------------------------------------ hook
+
+    def __call__(self, engine, ev=None) -> None:
+        self.on_step(engine, ev)
+
+    def on_step(self, engine, ev=None) -> None:
+        self.tick += 1
+        dirty = False
+        if self.aging is not None and self.tick % self.aging.every == 0:
+            self.dep = self.aging.age(self.dep, self.tick)
+            dirty = True
+        if self.tick % self.policy.interval == 0:
+            due = self.policy.due(engine.store_ecc)
+            if due and not (self.policy.max_scrubs
+                            and len(self.events) >= self.policy.max_scrubs):
+                event = self.scrub(due)
+                event["step"] = int(getattr(engine, "steps", self.tick))
+                engine.record_scrub(event)
+                dirty = True
+        if dirty:
+            engine.refresh_params(self.dep.serving_params(**self.serving_kw),
+                                  force=True)
+
+    # ------------------------------------------------------------ scrub
+
+    def scrub(self, paths) -> dict:
+        """Re-encode the stores at ``paths`` -> accounting event dict.
+
+        Each store is read through its ECC decoder (clearing every
+        correctable error; uncorrectable rows are rewritten as their decoded
+        — wrong but now stable — values) and packed back into a fresh image,
+        exactly the deploy-time encode. Unprotected stores are skipped: with
+        no decoder a rewrite would only bake the faults in.
+        """
+        t0 = time.perf_counter()
+        paths = [str(p) for p in paths]
+        flat, treedef = self.dep._flat()
+        rows = words = corrected = uncorrectable = 0
+        scrubbed = []
+        for i, (pstr, leaf) in enumerate(zip(self.dep.paths, flat)):
+            if pstr not in paths or not cim_lib._is_store(leaf):
+                continue
+            if leaf.codewords is None:      # unprotected: nothing to heal
+                continue
+            st = cim_lib.store_stats(leaf)
+            w, _ = cim_lib.read(leaf)
+            fresh = cim_lib.pack(w, leaf.cfg)
+            rows += int(leaf.man.shape[0])  # whole image rewritten
+            old_pd = cim_lib._plane_dict(leaf)
+            new_pd = cim_lib._plane_dict(fresh)
+            words += sum(int((np.asarray(old_pd[n]) !=
+                              np.asarray(new_pd[n])).sum()) for n in old_pd)
+            corrected += int(st["corrected"])
+            uncorrectable += int(st["uncorrectable"])
+            flat[i] = fresh
+            scrubbed.append(pstr)
+        self.dep = self.dep._replace_stores(
+            jax.tree_util.tree_unflatten(treedef, flat))
+        event = {
+            "paths": scrubbed,
+            "rows": rows,
+            "words_healed": words,
+            "corrected_cleared": corrected,
+            # uncorrectable events this image would keep charging on every
+            # future read until rewritten — the scrub's averted estimate
+            "uncorrectable_cleared": uncorrectable,
+            "wall_s": time.perf_counter() - t0,
+            "tick": self.tick,
+        }
+        self.events.append(event)
+        return event

@@ -91,7 +91,7 @@ def serving_policy(*, protect: str, n_group: int, index: int,
 
 
 def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
-           key):
+           key, fault_model: str = ""):
     """HBM path through :class:`CIMDeployment`: align -> pack -> (inject) ->
     read. Returns the decoded fp16 weights the macro would serve, plus ECC
     statistics."""
@@ -99,12 +99,13 @@ def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
                             serve_path="hbm")
     dep = dep_lib.CIMDeployment.deploy(params, policy)
     if ber > 0:
-        dep = dep.inject(key, ber, field="full")
+        dep = dep.inject(key, ber, field="full", model=fault_model or None)
     return dep.read()
 
 
 def deploy_fused(params, *, ber: float, protect: str, n_group: int,
-                 index: int, key, inject_mode: str, field: str):
+                 index: int, key, inject_mode: str, field: str,
+                 fault_model: str = ""):
     """Fused path through :class:`CIMDeployment`: align -> pack; weights STAY
     packed. Static faults are injected into the image; dynamic faults ride in
     via the ``_cim`` runtime (per-read seeds + thresholds consumed by the
@@ -112,27 +113,37 @@ def deploy_fused(params, *, ber: float, protect: str, n_group: int,
     object itself comes from :func:`make_deployment`."""
     dep = make_deployment(params, ber=ber, protect=protect, n_group=n_group,
                           index=index, key=key, inject_mode=inject_mode,
-                          field=field)
-    return _serving_params(dep, ber=ber, key=key, inject_mode=inject_mode,
-                           field=field)
+                          field=field, fault_model=fault_model)
+    return dep.serving_params(**serving_kw(
+        ber=ber, key=key, inject_mode=inject_mode, field=field,
+        fault_model=fault_model))
 
 
 def make_deployment(params, *, ber: float, protect: str, n_group: int,
-                    index: int, key, inject_mode: str, field: str
-                    ) -> dep_lib.CIMDeployment:
+                    index: int, key, inject_mode: str, field: str,
+                    fault_model: str = "") -> dep_lib.CIMDeployment:
     policy = serving_policy(protect=protect, n_group=n_group, index=index,
                             field=field, serve_path="fused")
     dep = dep_lib.CIMDeployment.deploy(params, policy)
     if ber > 0 and inject_mode == "static":
-        dep = dep.inject(key, ber, field=field)
+        dep = dep.inject(key, ber, field=field, model=fault_model or None)
     return dep
 
 
-def _serving_params(dep, *, ber, key, inject_mode, field):
+def serving_kw(*, ber, key, inject_mode, field, fault_model: str = ""):
+    """The ``serving_params`` kwargs for this launch — shared with the scrub
+    controller so a post-scrub params rebuild serves identically."""
     dynamic = ber > 0 and inject_mode == "dynamic"
-    return dep.serving_params(
+    return dict(
         dynamic_key=jax.random.fold_in(key, 99) if dynamic else None,
-        ber=ber if dynamic else 0.0, field=field)
+        ber=ber if dynamic else 0.0, field=field,
+        model=(fault_model or None) if dynamic else None)
+
+
+def _serving_params(dep, *, ber, key, inject_mode, field, fault_model=""):
+    return dep.serving_params(**serving_kw(
+        ber=ber, key=key, inject_mode=inject_mode, field=field,
+        fault_model=fault_model))
 
 
 def make_serve_mesh(spec: str) -> Mesh:
@@ -182,9 +193,13 @@ def _parse_range(spec: str) -> tuple:
     return lo, hi
 
 
-def _serve_engine(args, cfg, params, mesh):
+def _serve_engine(args, cfg, params, mesh, dep=None, scrub_kw=None):
     """Thin frontend onto :class:`repro.launch.engine.Engine`: synthetic
-    Poisson load -> scheduler -> per-request ECC/latency artifact."""
+    Poisson load -> scheduler -> per-request ECC/latency artifact.
+
+    ``--scrub`` attaches a :class:`repro.launch.scrub.ScrubController` as the
+    engine's step hook (``dep`` + ``scrub_kw`` come from the fused deploy);
+    ``--age-ber`` adds a drift-aging wear process under it."""
     from repro.launch import engine as engine_lib
 
     load = engine_lib.LoadGen(
@@ -197,8 +212,26 @@ def _serve_engine(args, cfg, params, mesh):
     eng = engine_lib.Engine(cfg, params, n_slots=args.slots,
                             max_len=max_len, chunk=args.chunk,
                             ecc_accounting=not args.no_ecc_accounting)
+    scrubber = None
+    if args.scrub:
+        from repro.launch import scrub as scrub_lib
+        assert dep is not None, \
+            "--scrub needs the fused CIM serve path (--cim --serve-path fused)"
+        assert not args.no_ecc_accounting, \
+            "--scrub thresholds on per-store ECC accounting"
+        aging = None
+        if args.age_ber > 0:
+            aging = scrub_lib.DriftAging(
+                key=jax.random.fold_in(jax.random.PRNGKey(args.seed), 7),
+                ber=args.age_ber, model=args.fault_model or "drift",
+                every=args.age_every)
+        scrubber = scrub_lib.ScrubController(
+            dep, scrub_lib.ScrubPolicy(threshold=args.scrub_threshold,
+                                       interval=args.scrub_interval),
+            aging=aging, serving_kw=scrub_kw or {})
     requests = load.requests()
-    results, agg = eng.run(requests, open_loop=args.rate > 0)
+    results, agg = eng.run(requests, open_loop=args.rate > 0,
+                           on_step=scrubber)
 
     incomplete = [r.rid for r in requests if r.rid not in results]
     assert not incomplete, f"engine dropped requests: {incomplete}"
@@ -216,6 +249,12 @@ def _serve_engine(args, cfg, params, mesh):
         msg += (f" (mesh {mesh.shape['data']}x{mesh.shape['model']} "
                 f"data x model, {mesh.size} devices)")
     print(msg)
+    if scrubber is not None:
+        sc = agg["scrub"]
+        print(f"scrub: {sc['events']} events, {sc['rows_reencoded']} rows "
+              f"re-encoded, corrected cleared {sc['corrected_cleared']}, "
+              f"uncorrectable cleared {sc['uncorrectable_cleared']} "
+              f"({sc['wall_s']*1e3:.0f} ms scrub wall)")
 
     if args.engine_json:
         import json
@@ -228,7 +267,10 @@ def _serve_engine(args, cfg, params, mesh):
                        "rate": args.rate, "ber": args.ber,
                        "protect": args.protect, "inject": args.inject,
                        "serve_path": args.serve_path or "fused",
-                       "mesh": args.mesh, "seed": args.seed},
+                       "mesh": args.mesh, "seed": args.seed,
+                       "fault_model": args.fault_model,
+                       "scrub": bool(args.scrub),
+                       "age_ber": args.age_ber},
             "aggregate": agg,
             "requests": [results[r.rid].to_json() for r in requests],
         }
@@ -355,6 +397,11 @@ def main(argv=None):
                          "in-kernel faults on every weight read (fused only)")
     ap.add_argument("--field", default="full",
                     choices=["full", "mantissa", "exponent_sign"])
+    ap.add_argument("--fault-model", default="", metavar="SPEC",
+                    help="error process for injection "
+                         "(repro.core.faultmodels grammar, e.g. "
+                         "'burst:rate=0.3,length=8,axis=col' or "
+                         "'drift:drift_rate=0.05'; default: i.i.d.)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve on a (data, model) device mesh, e.g. 2x4: "
                          "request batches shard over 'data', CIM stores "
@@ -387,6 +434,23 @@ def main(argv=None):
                     help="skip per-read ECC accounting (dynamic accounting "
                          "re-decodes the codeword planes per read — "
                          "disable when measuring throughput)")
+    # online ECC scrubbing (repro.launch.scrub, engine mode only)
+    ap.add_argument("--scrub", action="store_true",
+                    help="engine: background ECC scrubbing — when a store's "
+                         "cumulative ECC events cross --scrub-threshold, "
+                         "re-encode its image and hot-swap the params "
+                         "(fused CIM path only)")
+    ap.add_argument("--scrub-threshold", type=int, default=16,
+                    help="scrub: per-store cumulative ECC events before a "
+                         "re-encode fires")
+    ap.add_argument("--scrub-interval", type=int, default=1,
+                    help="scrub: check cadence in engine steps")
+    ap.add_argument("--age-ber", type=float, default=0.0,
+                    help="scrub soak: per-step static wear injection at this "
+                         "BER under --fault-model (default drift), keyed per "
+                         "engine step — damage accumulates until scrubbed")
+    ap.add_argument("--age-every", type=int, default=1,
+                    help="scrub soak: apply wear every N engine steps")
     # fleet mode (repro.launch.fleet)
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="serve the engine load through N data-parallel "
@@ -428,23 +492,26 @@ def _serve(args, mesh):
 
     serve_path = args.serve_path or ReliabilityConfig().serve_path
     stats = None
+    dep = scrub_kw = None
     if args.cim or args.ber > 0:
         dkey = jax.random.fold_in(key, 1)
         if serve_path == "fused":
             dep = make_deployment(
                 params, ber=args.ber, protect=args.protect,
                 n_group=args.n_group, index=args.index, key=dkey,
-                inject_mode=args.inject, field=args.field)
+                inject_mode=args.inject, field=args.field,
+                fault_model=args.fault_model)
             if mesh is not None:
                 dep = dep.shard(mesh, axis="model", dim="j")
-            params = _serving_params(dep, ber=args.ber, key=dkey,
-                                     inject_mode=args.inject,
-                                     field=args.field)
+            scrub_kw = serving_kw(ber=args.ber, key=dkey,
+                                  inject_mode=args.inject, field=args.field,
+                                  fault_model=args.fault_model)
+            params = dep.serving_params(**scrub_kw)
             _fused_report(params)
         else:
             params, stats = deploy(params, ber=args.ber, protect=args.protect,
                                    n_group=args.n_group, index=args.index,
-                                   key=dkey)
+                                   key=dkey, fault_model=args.fault_model)
             print(f"CIM deploy (hbm): protect={args.protect} "
                   f"ber={args.ber:.1e} corrected={int(stats['corrected'])} "
                   f"uncorrectable={int(stats['uncorrectable'])}")
@@ -457,7 +524,8 @@ def _serve(args, mesh):
         return _serve_fleet(args, cfg, params)
 
     if args.engine:
-        return _serve_engine(args, cfg, params, mesh)
+        return _serve_engine(args, cfg, params, mesh, dep=dep,
+                             scrub_kw=scrub_kw)
 
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)
 

@@ -155,7 +155,8 @@ def _prefill_block_cache(p, cfg: ModelConfig, kind: str, h, positions):
 
 
 def _cim_read_state(params, pos, leaf, req_salt=None):
-    """(per-plane seeds, thr_man, thr_meta) for CIM decode-on-read leaves.
+    """(per-plane seeds, thr_man, thr_meta, model) for CIM decode-on-read
+    leaves.
 
     ``params['_cim']`` (optional, serving only) carries the dynamic-injection
     runtime: base counter-PRNG plane seeds plus per-field Bernoulli
@@ -165,14 +166,26 @@ def _cim_read_state(params, pos, leaf, req_salt=None):
     (the serving engine's batch-invariance contract), and the read index
     ``pos`` (so every prefill/decode step draws fresh soft errors) — per-read
     dynamic injection straight off the packed SRAM image. Absent, reads are
-    static (the image serves whatever faults `cim.inject` left in it)."""
+    static (the image serves whatever faults `cim.inject` left in it).
+
+    An optional fault ``model`` in the runtime shapes the streams into a
+    structured error process: a drift schedule keys its tick on the
+    request-local ``pos`` — the thresholds returned here absorb that time
+    scaling, so the model handed downstream always carries tick=0."""
     rt = params.get("_cim") if isinstance(params, dict) else None
     if rt is None:
-        return None, 0, 0
+        return None, 0, 0, None
     from repro.core import deployment as dep_lib
+    from repro.core import faultmodels as fm_lib
     seeds = dep_lib.request_read_seeds(rt["seeds"], dep_lib.leaf_salt(leaf),
                                        req_salt, pos)
-    return seeds, rt["thr_man"], rt["thr_meta"]
+    model = rt.get("model")
+    tm = fm_lib.compiled_threshold(model, rt["thr_man"], tick=pos)
+    tt = fm_lib.compiled_threshold(model, rt["thr_meta"], tick=pos)
+    if model is not None and model.kind == "drift":
+        import dataclasses as _dc
+        model = _dc.replace(model, tick=0)
+    return seeds, tm, tt, model
 
 
 def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0, req_salt=None):
@@ -183,9 +196,10 @@ def _embed_lookup(params, cfg: ModelConfig, tokens, pos=0, req_salt=None):
     emb = params["embed"]
     if isinstance(emb, cim_lib.CIMStore):
         from repro.core import deployment as dep_lib
-        seeds, tm, tt = _cim_read_state(params, pos, "embed", req_salt)
+        seeds, tm, tt, model = _cim_read_state(params, pos, "embed", req_salt)
         rows = dep_lib.dispatch_read_rows(emb, tokens, seeds=seeds,
-                                          thr_man=tm, thr_meta=tt)
+                                          thr_man=tm, thr_meta=tt,
+                                          model=model)
         return rows.astype(dt)
     return shard(emb.astype(dt), "vocab", None)[tokens]
 
@@ -201,10 +215,11 @@ def _unembed_logits(params, x, pos=0, req_salt=None):
     if isinstance(w_un, cim_lib.CIMStore):
         from repro.core import deployment as dep_lib
         from repro.kernels.cim_read import ops as cr_ops
-        seeds, tm, tt = _cim_read_state(params, pos, "unembed", req_salt)
-        scalars = cr_ops.make_scalars(seeds, tm, tt) if seeds is not None \
-            else None
-        return dep_lib.dispatch_linear(x, w_un, scalars=scalars)
+        seeds, tm, tt, model = _cim_read_state(params, pos, "unembed",
+                                               req_salt)
+        scalars = cr_ops.make_scalars(seeds, tm, tt, model=model) \
+            if seeds is not None else None
+        return dep_lib.dispatch_linear(x, w_un, scalars=scalars, model=model)
     # FSDP: gather the (small, bf16) weight rather than partial-summing the
     # contraction over its "data"-sharded D axis — the latter all-reduces the
     # full fp32 logits (13 GB/step/device measured; the gather is 0.2 GB).

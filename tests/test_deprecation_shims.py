@@ -1,0 +1,91 @@
+"""The legacy ``cim.*_pytree`` entry points are deprecation shims.
+
+Contract: each shim fires ``DeprecationWarning`` exactly once per call and
+returns **bit-identical** results to its private ``*_impl`` twin (the twins
+are what the deployment/sweep layers call; the shims only exist for old
+user code).
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cim
+
+
+@pytest.fixture(scope="module")
+def tree():
+    k = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(k, (64, 64)) * 0.1,
+              "b": {"w": jax.random.normal(jax.random.fold_in(k, 1),
+                                           (32, 64)) * 0.1},
+              "scalar": jax.numpy.float32(1.0)}
+    return params
+
+
+def _plane_equal(a, b):
+    for name, p in cim._plane_dict(a).items():
+        q = cim._plane_dict(b)[name]
+        assert (np.asarray(p) == np.asarray(q)).all(), name
+
+
+def _tree_stores_equal(x, y):
+    fx = jax.tree_util.tree_flatten(x, is_leaf=cim._is_store)[0]
+    fy = jax.tree_util.tree_flatten(y, is_leaf=cim._is_store)[0]
+    assert len(fx) == len(fy)
+    for a, b in zip(fx, fy):
+        assert cim._is_store(a) == cim._is_store(b)
+        if cim._is_store(a):
+            _plane_equal(a, b)
+        else:
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+@pytest.mark.parametrize("name", ["deploy_pytree", "inject_pytree",
+                                  "read_pytree"])
+def test_shim_warns(tree, name):
+    cfg = cim.CIMConfig()
+    stores, _ = cim.deploy_pytree_impl(tree, cfg)
+    calls = {
+        "deploy_pytree": lambda: cim.deploy_pytree(tree, cfg),
+        "inject_pytree": lambda: cim.inject_pytree(
+            jax.random.PRNGKey(1), stores, 1e-3),
+        "read_pytree": lambda: cim.read_pytree(stores),
+    }
+    with pytest.warns(DeprecationWarning, match=name):
+        calls[name]()
+
+
+def test_impl_twins_do_not_warn(tree):
+    cfg = cim.CIMConfig()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        stores, _ = cim.deploy_pytree_impl(tree, cfg)
+        faulty = cim.inject_pytree_impl(jax.random.PRNGKey(1), stores, 1e-3)
+        cim.read_pytree_impl(faulty)
+
+
+def test_shims_bit_identical_to_impl(tree):
+    cfg = cim.CIMConfig()
+    key = jax.random.PRNGKey(2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s_old, meta_old = cim.deploy_pytree(tree, cfg)
+        s_new, meta_new = cim.deploy_pytree_impl(tree, cfg)
+        _tree_stores_equal(s_old, s_new)
+        assert jax.tree_util.tree_structure(meta_old) == \
+            jax.tree_util.tree_structure(meta_new)
+
+        f_old = cim.inject_pytree(key, s_old, 5e-3)
+        f_new = cim.inject_pytree_impl(key, s_new, 5e-3)
+        _tree_stores_equal(f_old, f_new)
+
+        r_old, st_old = cim.read_pytree(f_old)
+        r_new, st_new = cim.read_pytree_impl(f_new)
+        for a, b in zip(jax.tree_util.tree_leaves(r_old),
+                        jax.tree_util.tree_leaves(r_new)):
+            a, b = np.asarray(a), np.asarray(b)
+            assert ((a == b) | (np.isnan(a) & np.isnan(b))).all()
+        assert int(st_old["corrected"]) == int(st_new["corrected"])
+        assert int(st_old["uncorrectable"]) == int(st_new["uncorrectable"])

@@ -23,6 +23,9 @@ PUBLIC_API_SNAPSHOT = (
     "CIMStore",
     "FaultModel",
     "ReliabilityConfig",
+    # fault-model zoo (error processes on the counter-PRNG contract)
+    "FaultProcess",
+    "parse_fault_model",
     # characterization
     "SweepEngine",
     "SweepPlan",
@@ -50,6 +53,10 @@ PUBLIC_API_SNAPSHOT = (
     "Request",
     # fleet serving (data-parallel replicas, SLO router, prefix reuse)
     "Fleet",
+    # online ECC scrubbing (self-healing serving loop)
+    "DriftAging",
+    "ScrubController",
+    "ScrubPolicy",
 )
 
 
@@ -88,4 +95,10 @@ def test_public_api_entry_points_are_usable():
         assert inspect.isclass(getattr(repro, name))
     assert hasattr(repro.PolicySearch, "search")
     assert hasattr(repro.Finetuner, "run")
+    assert repro.parse_fault_model("burst:rate=0.5,length=4").kind == "burst"
+    assert repro.FaultProcess.iid().kind == "iid"
+    for name in ("DriftAging", "ScrubController", "ScrubPolicy"):
+        assert inspect.isclass(getattr(repro, name))
+    assert hasattr(repro.ScrubController, "on_step")
+    assert repro.ScrubPolicy().threshold >= 1
     assert repro.__version__

@@ -1,0 +1,178 @@
+"""Online ECC scrubbing (``repro.launch.scrub``) + the engine's scrub hooks.
+
+Acceptance contracts:
+
+* a drift-aging soak with scrubbing enabled accumulates **strictly fewer**
+  cumulative uncorrectable ECC events than the identical soak (same key,
+  same wear stream) with scrubbing off, while every request still completes
+  with finite logits and scrub events are logged with accounting;
+* ``RequestResult.to_json`` carries the per-request ``ecc_window`` time
+  series (one row per decode chunk: reads/corrected/uncorrectable);
+* a scrub resets the scrubbed store's cumulative ``store_ecc`` counters and
+  drops the prefix cache (the PR-6 invalidation contract: a hot-swapped
+  image must not serve stale KV);
+* ``Fleet.aggregate`` rolls replica scrub summaries up.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import cim
+from repro.core import faultmodels as fm
+from repro.launch import engine as engine_lib
+from repro.launch import scrub as scrub_lib
+from repro.launch import serve as serve_lib
+from repro.models import lm
+
+CHUNK = 8
+MAX_LEN = 24
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("olmo-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_lm(key, cfg)
+    dkey = jax.random.fold_in(key, 1)
+    dep = serve_lib.make_deployment(params, ber=0.0, protect="one4n",
+                                    n_group=8, index=2, key=dkey,
+                                    inject_mode="static", field="full")
+    return cfg, dep
+
+
+def _requests(n=4, seed=5):
+    load = engine_lib.LoadGen(n_requests=n, prompt_lens=(3, 12),
+                              gen_lens=(4, 6), vocab_size=256, seed=seed)
+    return load.requests()
+
+
+def _soak(cfg, dep, *, scrub: bool, n=4):
+    """One drift-aging engine run -> (engine, results, aggregate)."""
+    aging = scrub_lib.DriftAging(key=jax.random.PRNGKey(77), ber=1e-3,
+                                 model=fm.FaultProcess.drift(drift_rate=0.2))
+    policy = scrub_lib.ScrubPolicy(threshold=4, interval=1)
+    ctl = scrub_lib.ScrubController(dep, policy if scrub else
+                                    scrub_lib.ScrubPolicy(threshold=10**9),
+                                    aging=aging, serving_kw={})
+    # the unscrubbed arm is ALLOWED to rot into non-finite logits — that
+    # divergence is the vulnerability scrubbing averts, so don't raise on it
+    eng = engine_lib.Engine(cfg, dep.serving_params(), n_slots=2,
+                            max_len=MAX_LEN, chunk=CHUNK,
+                            collect_logits=True, check_finite=False)
+    results, agg = eng.run(_requests(n), on_step=ctl)
+    assert sorted(results) == list(range(n))
+    return eng, results, agg
+
+
+def test_scrub_on_beats_scrub_off(setup):
+    cfg, dep = setup
+    _, res_off, agg_off = _soak(cfg, dep, scrub=False)
+    _, res_on, agg_on = _soak(cfg, dep, scrub=True)
+
+    # same wear stream either way; scrubbing strictly reduces cumulative
+    # uncorrectable events (the self-healing acceptance bound)
+    assert agg_off["scrub"]["events"] == 0
+    assert agg_on["scrub"]["events"] > 0
+    assert agg_on["scrub"]["rows_reencoded"] > 0
+    assert agg_on["ecc"]["uncorrectable"] < agg_off["ecc"]["uncorrectable"]
+    assert agg_off["ecc"]["uncorrectable"] > 0   # the soak actually wears
+
+    # every request completes; the self-healing arm keeps its logits finite
+    for res in (res_on, res_off):
+        for r in res.values():
+            assert len(r.tokens) >= 1
+    for r in res_on.values():
+        assert all(np.isfinite(np.asarray(lg)).all() for lg in r.logits)
+
+    # per-scrub accounting is populated
+    for ev in agg_on["scrub"], :
+        assert ev["wall_s"] > 0
+        assert ev["corrected_cleared"] + ev["uncorrectable_cleared"] > 0
+
+
+def test_ecc_window_in_request_json(setup):
+    cfg, dep = setup
+    _, results, _ = _soak(cfg, dep, scrub=True, n=2)
+    for r in results.values():
+        j = r.to_json()
+        assert j["ecc_window"], "per-request ECC time series missing"
+        for row in j["ecc_window"]:
+            assert set(row) == {"pos", "reads", "corrected", "uncorrectable"}
+            assert all(isinstance(v, int) for v in row.values())
+        assert sum(w["reads"] for w in j["ecc_window"]) == j["ecc"]["reads"]
+        assert sum(w["corrected"] for w in j["ecc_window"]) == \
+            j["ecc"]["corrected"]
+        assert isinstance(j["scrubs"], int)
+
+
+def test_record_scrub_resets_store_counters(setup):
+    cfg, dep = setup
+    eng = engine_lib.Engine(cfg, dep.serving_params(), n_slots=2,
+                            max_len=MAX_LEN, chunk=CHUNK,
+                            prefix_cache=True)
+    eng.run(_requests(2))
+    assert any(v["reads"] > 0 for v in eng.store_ecc.values())
+    path = next(iter(eng.store_ecc))
+    eng.store_ecc[path]["corrected"] = 7
+    eng.record_scrub({"paths": [path], "rows": 1, "corrected_cleared": 7,
+                      "uncorrectable_cleared": 0, "wall_s": 0.0})
+    assert eng.store_ecc[path] == {"reads": 0, "corrected": 0,
+                                   "uncorrectable": 0}
+    assert eng.aggregate()["scrub"]["events"] == 1
+
+    # refresh_params(force=True) mid-flight is allowed and drops the prefix
+    # cache — the hot-swap invalidation contract
+    eng.prefix_cache.insert(None, [1, 2, 3, 4],
+                            jax.tree_util.tree_map(lambda x: x,
+                                                   eng.caches), 0)
+    assert len(eng.prefix_cache) > 0
+    eng.refresh_params(dep.serving_params(), force=True)
+    assert len(eng.prefix_cache) == 0
+
+
+def test_scrub_controller_reencodes_exactly(setup):
+    """Scrubbing a damaged image restores bit-exact clean planes when every
+    row is still correctable (single-bit hits only heal perfectly)."""
+    _, dep = setup
+    clean = {p: s for p, _, s in dep.store_leaves()}
+    damaged = dep.inject(jax.random.PRNGKey(3), 5e-4, field="exponent_sign")
+    pre = {p: cim.store_stats(s) for p, _, s in damaged.store_leaves()}
+    assert any(int(st["corrected"]) > 0 for st in pre.values())
+    ctl = scrub_lib.ScrubController(damaged)
+    ev = ctl.scrub(list(clean))
+    assert set(ev["paths"]) == set(clean)
+    for p, _, s in ctl.dep.store_leaves():
+        if int(pre[p]["uncorrectable"]) == 0:
+            for name, plane in cim._plane_dict(clean[p]).items():
+                got = cim._plane_dict(s)[name]
+                assert (np.asarray(plane) == np.asarray(got)).all(), (p, name)
+
+
+def test_policy_and_aging_validation():
+    with pytest.raises(ValueError):
+        scrub_lib.ScrubPolicy(threshold=0)
+    with pytest.raises(ValueError):
+        scrub_lib.ScrubPolicy(interval=0)
+    with pytest.raises(ValueError):
+        scrub_lib.DriftAging(key=jax.random.PRNGKey(0), ber=1e-3, every=0)
+    pol = scrub_lib.ScrubPolicy(threshold=3)
+    assert pol.due({"a": {"corrected": 2, "uncorrectable": 1},
+                    "b": {"corrected": 0, "uncorrectable": 0}}) == ["a"]
+
+
+def test_fleet_aggregate_scrub_rollup(setup):
+    cfg, dep = setup
+    from repro.launch import fleet as fleet_lib
+    fl = fleet_lib.Fleet.from_serving_params(
+        cfg, dep.serving_params(), n_replicas=1, n_slots=2,
+        max_len=MAX_LEN, chunk=CHUNK)
+    fl.run(_requests(2))
+    agg = fl.aggregate()
+    assert set(agg["scrub"]) == {"events", "rows_reencoded",
+                                 "corrected_cleared",
+                                 "uncorrectable_cleared", "wall_s"}
+    assert agg["scrub"]["events"] == 0
