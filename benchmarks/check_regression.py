@@ -120,6 +120,17 @@ def _flatten_engine(d: dict) -> dict:
         # self-healing loop must not collapse throughput (hard floor)
         out["engine.scrub_overhead_tok_s_ratio"] = \
             (HIGHER, scrub["scrub_overhead_tok_s_ratio"])
+    kinds = d.get("kinds") or {}
+    if kinds.get("recurrent_vs_attn_tok_s_ratio"):
+        # rwkv / attn aggregate decode tok/s at matched widths: serving a
+        # recurrent fold through the slot-state protocol must not become
+        # disproportionately slower than attention (hard floor)
+        out["engine.recurrent_vs_attn_tok_s_ratio"] = \
+            (HIGHER, kinds["recurrent_vs_attn_tok_s_ratio"])
+    if kinds.get("local_vs_attn_tok_s_ratio"):
+        # rolling-window local attention / attn, same contract
+        out["engine.local_vs_attn_tok_s_ratio"] = \
+            (HIGHER, kinds["local_vs_attn_tok_s_ratio"])
     return out
 
 

@@ -33,6 +33,18 @@ A fifth arm measures the online-scrubbing loop (``repro.launch.scrub``):
    ``tok_s``. Hard ``bound`` floor in the baseline — self-healing must not
    collapse serving throughput.
 
+A sixth arm benches the slot-state protocol across architecture kinds:
+
+6. **per-kind engines** — the same ragged load served through engines at
+   **matched widths** (reduced configs share d_model=128 / 2 layers /
+   d_ff=256 / vocab=256): full attention (olmo), an RWKV6 recurrent fold,
+   and a pure rolling-window local-attention model. Gated
+   ``engine.recurrent_vs_attn_tok_s_ratio`` and
+   ``engine.local_vs_attn_tok_s_ratio`` = per-kind aggregate decode tok/s
+   over the attn baseline, with hard ``bound`` floors — serving a
+   recurrent or windowed architecture through the unified protocol must
+   not become disproportionately slower than attention.
+
 Gated metrics (``benchmarks/check_regression.py --engine``):
 
 * ``engine.continuous_vs_sequential_tok_s`` — aggregate decode tok/s ratio,
@@ -42,7 +54,10 @@ Gated metrics (``benchmarks/check_regression.py --engine``):
 * ``engine.fleet_scaling_tok_s`` / ``engine.prefix_hit_ttft_ratio`` — the
   fleet wins above, with hard ``bound`` floors/ceilings in the baseline;
 * ``engine.scrub_overhead_tok_s_ratio`` — the scrub-on throughput cost,
-  hard floor.
+  hard floor;
+* ``engine.recurrent_vs_attn_tok_s_ratio`` /
+  ``engine.local_vs_attn_tok_s_ratio`` — the per-kind arm above, hard
+  floors.
 
 Every arm runs once unmeasured to absorb jit compiles (TTFT would otherwise
 be compile time, not scheduling latency).
@@ -53,6 +68,7 @@ Quick (CI smoke): BENCH_QUICK=1 ... --json artifacts/engine_bench.json
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -78,6 +94,8 @@ FLEET_SLOTS = 2            # keep per-replica decode batches full at half load
 SCRUB_REQS = 12 if not QUICK else 6
 AGE_BER = 1e-3             # per-step wear under the drift process
 SCRUB_THRESHOLD = 8        # per-store ECC events before a re-encode fires
+KIND_REQS = 16 if not QUICK else 8
+LOCAL_WINDOW = 16          # < max prompt len, so the ring actually rolls
 
 
 def _setup():
@@ -202,6 +220,38 @@ def _scrub_arm(cfg) -> dict:
                 on["tok_s"] / max(off["tok_s"], 1e-9)}
 
 
+def _kind_arms() -> dict:
+    """Per-kind engine throughput at matched widths: the reduced configs all
+    share d_model=128 / 2 layers / d_ff=256 / vocab=256, so the gated ratios
+    compare what each slot-state kind costs the scheduler, not model size.
+    Same ragged load, same slots/chunk, fused static-image serving."""
+    arms = (("attn", get_config("olmo-1b").reduced()),
+            ("rwkv", get_config("rwkv6-1.6b").reduced()),
+            ("local", dataclasses.replace(
+                get_config("olmo-1b").reduced(),
+                block_pattern=("local",), local_window=LOCAL_WINDOW)))
+    out = {}
+    for kind, cfg in arms:
+        key = jax.random.PRNGKey(0)
+        params = lm.init_lm(key, cfg)
+        sparams = serve_lib.deploy_fused(
+            params, ber=BER, protect="one4n", n_group=8, index=2,
+            key=jax.random.fold_in(key, 1), inject_mode="static",
+            field="full")
+        load = engine_lib.LoadGen(n_requests=KIND_REQS, prompt_lens=PROMPTS,
+                                  gen_lens=GENS, vocab_size=cfg.vocab_size,
+                                  seed=4)
+        agg = _arm(cfg, sparams, load, SLOTS)
+        out[kind] = {"decode_tok_s": agg["decode_tok_s"],
+                     "ttft_s_mean": agg["ttft_s_mean"],
+                     "total_tokens": agg["total_tokens"]}
+    attn = max(out["attn"]["decode_tok_s"], 1e-9)
+    out["recurrent_vs_attn_tok_s_ratio"] = \
+        out["rwkv"]["decode_tok_s"] / attn
+    out["local_vs_attn_tok_s_ratio"] = out["local"]["decode_tok_s"] / attn
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, help="write metrics JSON")
@@ -243,13 +293,21 @@ def main(argv=None):
           f"{scrub['scrub_events']} scrubs, uncorrectable "
           f"{scrub['uncorrectable_off']} -> {scrub['uncorrectable_on']})")
 
+    kinds = _kind_arms()
+    print(f"per-kind engines (matched widths, {KIND_REQS} requests): "
+          f"attn {kinds['attn']['decode_tok_s']:.1f}, "
+          f"rwkv {kinds['rwkv']['decode_tok_s']:.1f} "
+          f"({kinds['recurrent_vs_attn_tok_s_ratio']:.2f}x), "
+          f"local {kinds['local']['decode_tok_s']:.1f} tok/s "
+          f"({kinds['local_vs_attn_tok_s_ratio']:.2f}x)")
+
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         payload = {"quick": QUICK,
                    "n_requests": N_REQUESTS, "slots": SLOTS, "chunk": CHUNK,
                    "engine": eng, "sequential": seq,
                    "continuous_vs_sequential_tok_s": ratio,
-                   "fleet": fleet, "scrub": scrub}
+                   "fleet": fleet, "scrub": scrub, "kinds": kinds}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

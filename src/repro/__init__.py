@@ -44,6 +44,12 @@ from repro.kernels.cim_read.ops import (cim_linear_store,  # noqa: F401
                                         cim_linear_store_sharded)
 from repro.kernels.fault_inject.ops import (ber_to_threshold,  # noqa: F401
                                             fault_inject_bits)
+# expert-parallel MoE deployment (each expert its own macro)
+from repro.core.deployment import ExpertDeployment  # noqa: F401
+# serving model/state protocol (the engine <-> architecture boundary)
+from repro.models.lm import (SlotStateSpec,  # noqa: F401
+                             extract_state_chunk, init_slot_states,
+                             inject_state_chunk, slot_state_spec)
 # serving engine (continuous batching over a deployment, per-request streams)
 from repro.launch.engine import (Engine, LoadGen,  # noqa: F401
                                  PrefixCache, Request)
@@ -90,6 +96,14 @@ __all__ = [
     "cim_linear_store",
     "cim_linear_store_sharded",
     "fault_inject_bits",
+    # expert-parallel MoE deployment
+    "ExpertDeployment",
+    # slot-state protocol (engine <-> architecture boundary)
+    "SlotStateSpec",
+    "extract_state_chunk",
+    "init_slot_states",
+    "inject_state_chunk",
+    "slot_state_spec",
     # serving engine
     "Engine",
     "LoadGen",

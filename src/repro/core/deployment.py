@@ -624,6 +624,134 @@ def place_stores(stores, mesh, *, axis: str = "model", dim: str = "j"):
 
 
 # ---------------------------------------------------------------------------
+# Expert-parallel MoE deployment: each expert is its own macro.
+# ---------------------------------------------------------------------------
+
+# the stacked MoE expert tensors ([E, D, F] per block, [G, E, D, F] under
+# group-scan stacking) — >2-D, so the plain CIMDeployment never touches them
+EXPERT_LEAF_NAMES = ("moe_win", "moe_wgate", "moe_wout")
+
+
+@dataclasses.dataclass(eq=False)
+class ExpertDeployment:
+    """Per-expert CIM deployment of a model's stacked MoE weights.
+
+    Physically each expert's matrices live on their own macro (that is what
+    expert parallelism shards), so each expert can carry its own protection
+    level and BER scale. This class slices every stacked expert tensor
+    (:data:`EXPERT_LEAF_NAMES`, ``[E, D, F]`` or group-stacked
+    ``[G, E, D, F]``) into per-expert 2-D matrices at paths like
+    ``groups/blk0/moe_win/g0/expert3`` and deploys them through one
+    :class:`CIMDeployment` — :class:`ReliabilityPolicy` rules match the
+    per-expert paths (``PolicyRule("*/expert3", ber_scale=4.0)`` targets one
+    weak expert across all its matrices).
+
+    Serving is decode-once (hbm-style): :meth:`serving_params` reads every
+    expert store back, restacks the dense tensors in the model's dtype, and
+    the existing ``moe`` / ``moe_a2a`` dispatch consumes them unchanged — the
+    a2a all-to-all IS the expert-parallel routing; this class only decides
+    what image those expert weights were read from. Injection is therefore
+    **static only**: faults flip each expert's packed image once, and every
+    read of the restacked tensor sees the same faulted weights (which keeps
+    the engine's bitwise solo-vs-cobatched guarantee intact — the faults are
+    a deterministic property of the image, not of the read). Per-read
+    dynamic streams would need a per-expert fused-read path inside the
+    dispatch kernels; that is out of scope here.
+
+    ECC accounting is per expert: :meth:`stats_by_expert` exposes each
+    expert store's corrected/uncorrectable counters (the serving launcher's
+    ``--expert-cim`` artifact).
+    """
+
+    inner: CIMDeployment
+    leaves: Tuple[Tuple[str, tuple], ...]   # (params path, stacked shape)
+
+    @classmethod
+    def deploy(cls, params, policy: ReliabilityPolicy) -> "ExpertDeployment":
+        """Slice + deploy every stacked expert tensor of ``params``.
+
+        Raises if ``params`` has no expert leaves (deploying nothing would
+        silently serve unprotected experts)."""
+        leaves_wp, _ = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=cim_lib._is_store)
+        expert_params, meta = {}, []
+        for path, leaf in leaves_wp:
+            p = path_str(path)
+            if cim_lib._is_store(leaf) or \
+                    p.split("/")[-1] not in EXPERT_LEAF_NAMES:
+                continue
+            if getattr(leaf, "ndim", 0) == 4:      # [G, E, D, F]
+                expert_params[p] = {
+                    f"g{g}": {f"expert{e}": leaf[g, e]
+                              for e in range(leaf.shape[1])}
+                    for g in range(leaf.shape[0])}
+            elif getattr(leaf, "ndim", 0) == 3:    # [E, D, F]
+                expert_params[p] = {f"expert{e}": leaf[e]
+                                    for e in range(leaf.shape[0])}
+            else:
+                continue
+            meta.append((p, tuple(leaf.shape)))
+        if not expert_params:
+            raise ValueError(
+                "ExpertDeployment.deploy: params has no stacked MoE expert "
+                f"leaves (looked for {', '.join(EXPERT_LEAF_NAMES)})")
+        return cls(inner=CIMDeployment.deploy(expert_params, policy),
+                   leaves=tuple(meta))
+
+    def inject(self, key, ber, field: Optional[str] = None,
+               model=None) -> "ExpertDeployment":
+        """Static soft errors into every expert store (per-rule BER scales
+        apply, so a per-expert rule can age one expert harder)."""
+        return ExpertDeployment(
+            inner=self.inner.inject(key, ber, field=field, model=model),
+            leaves=self.leaves)
+
+    def serving_params(self, params):
+        """Decode every expert store once and restack the dense tensors into
+        ``params`` (the model's moe/moe_a2a dispatch consumes them as-is).
+
+        ``params`` may already be a fused/hbm serving pytree — store leaves
+        and the ``_cim`` runtime pass through untouched; only the expert
+        leaf paths recorded at deploy time are replaced. ECC stats of the
+        read fold into the inner deployment's cumulative counters.
+        """
+        decoded, _ = self.inner.read()
+        shapes = dict(self.leaves)
+        leaves_wp, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=cim_lib._is_store)
+        out = []
+        for path, leaf in leaves_wp:
+            p = path_str(path)
+            if p not in shapes or cim_lib._is_store(leaf):
+                out.append(leaf)
+                continue
+            shape, sub = shapes[p], decoded[p]
+            if len(shape) == 4:
+                w = jnp.stack([
+                    jnp.stack([sub[f"g{g}"][f"expert{e}"]
+                               for e in range(shape[1])])
+                    for g in range(shape[0])])
+            else:
+                w = jnp.stack([sub[f"expert{e}"] for e in range(shape[0])])
+            out.append(w.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def stats_by_expert(self) -> dict:
+        """Per-expert-store ECC counters: path -> counts + rule settings."""
+        out = {}
+        for p, rule, s in self.inner.store_leaves():
+            st = cim_lib.store_stats(s)
+            out[p] = {"corrected": int(st["corrected"]),
+                      "uncorrectable": int(st["uncorrectable"]),
+                      "protect": rule.protect,
+                      "ber_scale": rule.ber_scale}
+        return out
+
+    def report(self) -> str:
+        return self.inner.report()
+
+
+# ---------------------------------------------------------------------------
 # Per-request counter-PRNG key derivation (the serving engine's contract).
 #
 # A dynamic-injection read's flip streams are keyed by the chain

@@ -7,14 +7,25 @@ slots over the :class:`~repro.core.deployment.CIMDeployment` dispatch path:
 
 * **admit** — a queued request (arrived, open-loop) takes a free slot; its
   prompt is chunk-prefilled (``chunk`` tokens per jitted call, ragged tail
-  padded — the causal mask hides padding until later writes overwrite it)
-  into the slot's row of the batched KV caches. The final chunk's logits give
-  the first token (TTFT is measured here).
+  padded) into the slot's row of the batched slot states. Position-addressed
+  kinds hide padding behind the causal mask until later writes overwrite it;
+  fold kinds (rwkv/rec) mask padding out of the state fold itself. The final
+  chunk's logits give the first token (TTFT is measured here).
 * **decode** — one jitted :func:`repro.models.lm.decode_slots` step advances
   every active slot at its own position.
 * **evict** — a slot that hits its request's ``max_new`` (or the cache
   ceiling ``max_len``) frees; the next queued request reuses it, lowest slot
   index first.
+
+The engine is architecture-agnostic: it speaks only the slot-state protocol
+(:class:`repro.models.lm.SlotStateSpec` and the ``init_slot_states`` /
+``prefill_chunk`` / ``decode_slots`` / ``extract_state_chunk`` /
+``inject_state_chunk`` operations), so KV-cache transformers, windowed
+local attention, RWKV6, RecurrentGemma and expert-parallel MoE all serve
+through the same admit/decode/evict loop. The only per-kind concessions are
+shape clamps derived from the specs: ``chunk`` is clamped to the local
+window when any block is ``window_bound`` (a ring buffer cannot absorb a
+chunk larger than itself).
 
 **Batch-invariance contract.** Every CIM read folds its dynamic-injection
 seeds per (leaf salt, request salt, request-local position) — never per slot
@@ -22,27 +33,36 @@ index or engine step (:func:`repro.core.deployment.request_read_seeds`).
 Prompt-prefill reads salt by prompt *content*
 (:func:`repro.core.deployment.prefix_salt` of the tokens up through the
 chunk); decode reads salt by request id
-(:func:`repro.core.deployment.request_salt`). Dense decode math is
-row-independent, so a request's decoded tokens, logits and injected-fault
-streams are bit-identical whether it is served alone or continuously
-co-batched (``tests/test_engine.py``). The engine therefore refuses block
-kinds whose decode couples slots or cannot chunk (``lm.check_engine_kinds``);
-MoE is admitted with a warning — its capacity-based dispatch couples
-co-batched tokens, which voids the bitwise guarantee (fault-stream keying
-stays per-request).
+(:func:`repro.core.deployment.request_salt`). Decode math is row-independent
+across slots for every kind (recurrent folds advance per-slot state and are
+frozen while a slot is inactive), so a request's decoded tokens, logits and
+injected-fault streams are bit-identical whether it is served alone or
+continuously co-batched (``tests/test_engine.py`` asserts this for all five
+kinds). The one contract boundary is capacity-coupled MoE dispatch: when
+``moe.drop_free`` does not hold at the engine's shapes, co-batched tokens
+can evict each other from expert capacity and the bitwise guarantee is
+voided (fault-stream keying stays per-request). Drop-free configurations —
+including every engine with ``max(n_slots, chunk) <= 8``, via the capacity
+floor — retain the full guarantee; the engine warns only when actually
+coupled (:func:`repro.models.lm.engine_capacity_coupled`).
 
-**Prefix/KV-cache reuse.** With a :class:`PrefixCache` attached, admission
-walks the prompt's full leading chunks through a hash-consed token-chunk
-trie: a hit injects the cached KV rows into the slot
-(:func:`repro.models.lm.inject_kv_chunk`) instead of re-running
+**Prefix/state-cache reuse.** With a :class:`PrefixCache` attached,
+admission walks the prompt's full leading chunks through a hash-consed
+token-chunk trie: a hit injects the cached state chunk into the slot
+(:func:`repro.models.lm.inject_state_chunk`) instead of re-running
 ``prefill_chunk``, and replays the chunk's ECC accounting from the same
 (leaf, content-salt, position) counter-PRNG chain cold prefill would have
 drawn — tokens, logits, fault streams and ECC counts stay bitwise identical
-to a cold prefill, only TTFT drops. The final chunk always runs cold (its
-logits emit the first token). Any image or runtime change must go through
-:meth:`Engine.refresh_params`, which invalidates the trie (the
-invalidation-on-inject contract: cached KV embeds the faults of the image it
-was prefilled against).
+to a cold prefill, only TTFT drops. Cached units follow each block's spec:
+KV rows for position-addressed kinds, the post-chunk state *snapshot* for
+fold/window kinds — exact because those states are pure left folds over the
+salted token prefix, and the engine always prefills at fixed ``chunk``
+boundaries, so a cold recompute of the same prefix runs the same chunk
+shapes and reproduces the snapshot bitwise. The final chunk always runs
+cold (its logits emit the first token). Any image or runtime change must go
+through :meth:`Engine.refresh_params`, which invalidates the trie (the
+invalidation-on-inject contract: cached state embeds the faults of the
+image it was prefilled against).
 
 **Fleet hooks.** ``repro.launch.fleet`` runs N engines as data-parallel
 replicas behind an SLO-aware router: :meth:`Engine.drain` hands back queued
@@ -67,6 +87,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
@@ -86,7 +107,7 @@ class EngineError(RuntimeError):
     """Non-finite logits or an inconsistent scheduler state."""
 
 
-# one jitted (prefill_chunk, decode_slots, extract_kv, inject_kv) set per
+# one jitted (prefill_chunk, decode_slots, extract_state, inject_state) set per
 # (ModelConfig, ambient mesh): every Engine instance over the same arch AND
 # mesh shares the jit cache, so a fresh engine (e.g. a solo-request
 # invariance replay, or every replica of a single-device fleet) costs zero
@@ -102,8 +123,8 @@ def _jitted_steps(cfg: ModelConfig) -> tuple:
         _STEP_CACHE[key] = (
             jax.jit(steps_lib.make_prefill_chunk_step(cfg)),
             jax.jit(steps_lib.make_decode_slots_step(cfg)),
-            jax.jit(steps_lib.make_extract_kv_step(cfg), static_argnums=3),
-            jax.jit(steps_lib.make_inject_kv_step(cfg)))
+            jax.jit(steps_lib.make_extract_state_step(cfg), static_argnums=3),
+            jax.jit(steps_lib.make_inject_state_step(cfg)))
     return _STEP_CACHE[key]
 
 
@@ -161,36 +182,42 @@ class RequestResult:
 
 @dataclasses.dataclass
 class _PrefixNode:
-    """One full prefill chunk in the trie: (parent, chunk tokens) -> KV."""
+    """One full prefill chunk in the trie: (parent, chunk tokens) -> state."""
 
     nid: int
     key: tuple                         # (parent nid, chunk tokens bytes)
     salt: int                          # content salt its fault streams used
-    kv: object                         # KV rows pytree (lm.extract_kv_chunk)
+    state: object                      # state chunk (lm.extract_state_chunk)
     tokens: int                        # chunk length
 
 
 class PrefixCache:
-    """Hash-consed token-chunk trie of prefilled KV chunks (one per replica).
+    """Hash-consed token-chunk trie of prefilled state chunks (per replica).
 
     A node is one FULL prefill chunk keyed by ``(parent node id, chunk token
     bytes)`` — the path from the root spells a prompt prefix in chunk steps,
     and identical chunks under the same parent share one node (hash-consing:
     inserting an existing chunk returns the existing node). Admission walks
     the trie over the prompt's full leading chunks; each hit injects the
-    node's KV rows instead of recomputing them.
+    node's state chunk instead of recomputing it. Per-block cached units
+    follow the :class:`repro.models.lm.SlotStateSpec`: KV rows for
+    position-addressed kinds, post-chunk state snapshots for fold/window
+    kinds (injection overwrites the slot's state, so the deepest hit wins).
 
-    Reuse is exact: a node's KV was prefilled under the content salt of its
-    token prefix (``deployment.prefix_salt``), which is what a cold prefill
-    of the same tokens would use — bitwise, including per-read dynamic
-    injection. The cache is therefore ONLY valid for the image/runtime it
-    was filled against; :meth:`Engine.refresh_params` calls
-    :meth:`invalidate` on any change (the invalidation-on-inject contract).
+    Reuse is exact: a node's state was prefilled under the content salt of
+    its token prefix (``deployment.prefix_salt``), which is what a cold
+    prefill of the same tokens would use — bitwise, including per-read
+    dynamic injection; snapshot units are additionally exact because the
+    engine prefills at fixed chunk boundaries, so the fold that produced a
+    snapshot is re-run with identical chunk shapes on a cold recompute. The
+    cache is therefore ONLY valid for the image/runtime it was filled
+    against; :meth:`Engine.refresh_params` calls :meth:`invalidate` on any
+    change (the invalidation-on-inject contract).
 
     Capacity is bounded at ``max_chunks`` nodes with least-recently-used
     eviction restricted to LEAF chunks — a parent is always at least as
-    reachable as its children, so evicting interior nodes would orphan KV a
-    hot descendant still spells a path through.
+    reachable as its children, so evicting interior nodes would orphan state
+    a hot descendant still spells a path through.
     """
 
     def __init__(self, max_chunks: int = 256):
@@ -217,7 +244,7 @@ class PrefixCache:
         self._lru.move_to_end(node.key)
         return node
 
-    def insert(self, parent: Optional[_PrefixNode], tokens, kv,
+    def insert(self, parent: Optional[_PrefixNode], tokens, state,
                salt) -> _PrefixNode:
         key = self._key(parent, tokens)
         node = self._nodes.get(key)
@@ -225,7 +252,7 @@ class PrefixCache:
             self._lru.move_to_end(key)
             return node
         node = _PrefixNode(nid=self._next_id, key=key, salt=int(salt),
-                           kv=kv, tokens=int(np.asarray(tokens).size))
+                           state=state, tokens=int(np.asarray(tokens).size))
         self._next_id += 1
         self._nodes[key] = node
         self._children.setdefault(key[0], set()).add(key)
@@ -344,8 +371,8 @@ class Engine:
     packed stores (fused), decoded fp16 (hbm), or plain weights, plus the
     optional ``_cim`` dynamic-injection runtime. Four jitted programs total:
     one full-chunk prefill, one ragged-chunk prefill per distinct tail
-    length, one slot decode, and the KV extract/inject pair the prefix cache
-    rides on.
+    length, one slot decode, and the state extract/inject pair the prefix
+    cache rides on.
 
     ``prefix_cache`` attaches a :class:`PrefixCache` (pass your own, or
     ``True`` for a default-sized one). ``replica`` names this engine in
@@ -357,23 +384,39 @@ class Engine:
                  collect_logits: bool = False, ecc_accounting: bool = True,
                  check_finite: bool = True, prefix_cache=None,
                  replica: str = ""):
-        lm.check_engine_kinds(cfg)
+        specs = lm.check_engine_kinds(cfg)
         assert n_slots >= 1 and chunk >= 1 and max_len >= 2, \
             (n_slots, chunk, max_len)
         self.cfg = cfg
         self.params = params
         self.replica = replica
         # a chunk never writes past the cache ceiling (an overflowing padded
-        # dynamic_update_slice would clamp backwards over real prompt rows)
-        self.n_slots, self.max_len, self.chunk = n_slots, max_len, \
-            min(chunk, max_len)
+        # dynamic_update_slice would clamp backwards over real prompt rows);
+        # window-bound kinds additionally cap the chunk at the ring size (a
+        # W-slot ring cannot absorb more than W new tokens in one write)
+        chunk = min(chunk, max_len)
+        if any(s.window_bound for s in specs):
+            chunk = min(chunk, cfg.local_window)
+        self.n_slots, self.max_len, self.chunk = n_slots, max_len, chunk
+        # capacity-coupled MoE dispatch at these shapes voids the bitwise
+        # solo-vs-cobatched guarantee (moe.drop_free documents the boundary)
+        self.capacity_coupled = lm.engine_capacity_coupled(
+            cfg, max(n_slots, self.chunk))
+        if self.capacity_coupled:
+            warnings.warn(
+                "engine: MoE dispatch is capacity-coupled at these shapes "
+                f"(n_slots={n_slots}, chunk={self.chunk}): co-batched tokens "
+                "may contend for expert capacity, voiding the bitwise "
+                "solo-vs-cobatched guarantee (fault streams stay "
+                "per-request). Raise capacity_factor or shrink the batch "
+                "until moe.drop_free holds to restore it.")
         self.collect_logits = collect_logits
         self.check_finite = check_finite
         self._prefill, self._decode, self._extract, self._inject = \
             _jitted_steps(cfg)
         self.prefix_cache: Optional[PrefixCache] = \
             PrefixCache() if prefix_cache is True else prefix_cache
-        self.caches = lm.init_caches(cfg, n_slots, max_len)
+        self.caches = lm.init_slot_states(cfg, n_slots, max_len)
         self.caches["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.queue: deque[Tuple[Request, float]] = deque()
@@ -491,12 +534,12 @@ class Engine:
 
     def _admit(self, req: Request, slot_idx: int, submit_t: float) -> None:
         """Chunk-prefill the request's prompt into ``slot_idx`` and emit its
-        first token, reusing trie-cached KV chunks where they match.
+        first token, reusing trie-cached state chunks where they match.
 
         Prefill fault streams key on prompt *content*
         (:func:`repro.core.deployment.prefix_salt` of the tokens up through
-        the chunk), so a cached chunk's KV — and its replayed ECC charges —
-        are bitwise what a cold prefill of the same tokens would produce.
+        the chunk), so a cached chunk's state — and its replayed ECC charges
+        — are bitwise what a cold prefill of the same tokens would produce.
         The final chunk always runs cold: its logits emit the first token.
         """
         plen = req.tokens.size
@@ -515,7 +558,8 @@ class Engine:
         # final one — its logits are the first token, so it must run);
         # `prefill_chunk` masks off the explicit pos argument and the
         # always-cold final chunk leaves caches['pos'][slot] = plen, so
-        # injection only has to land the KV rows
+        # injection only has to land the state chunk (KV rows, or the
+        # post-chunk snapshot for fold/window kinds — deepest hit wins)
         starts = list(range(0, plen, self.chunk))
         node = None
         pos = 0
@@ -526,7 +570,8 @@ class Engine:
                 if hit is None:
                     break
                 self.caches = self._inject(
-                    self.caches, jnp.int32(slot_idx), jnp.int32(c0), hit.kv)
+                    self.caches, jnp.int32(slot_idx), jnp.int32(c0),
+                    hit.state)
                 # replay the ECC accounting of the read this chunk's cold
                 # prefill would have issued — same salt, same read index
                 self._charge_reads(slot, np.uint32(hit.salt), c0)
@@ -549,9 +594,9 @@ class Engine:
                 jnp.uint32(csalt))
             self._charge_reads(slot, csalt, c0)
             if self.prefix_cache is not None and length == self.chunk:
-                kv = self._extract(self.caches, jnp.int32(slot_idx),
-                                   jnp.int32(c0), self.chunk)
-                node = self.prefix_cache.insert(node, seg, kv, csalt)
+                state = self._extract(self.caches, jnp.int32(slot_idx),
+                                      jnp.int32(c0), self.chunk)
+                node = self.prefix_cache.insert(node, seg, state, csalt)
         logits = np.asarray(logits)
         self._check(logits, slot)
         tok = int(np.argmax(logits))
@@ -576,7 +621,8 @@ class Engine:
         self.results[slot.rid] = res
         self.slots[slot_idx] = None
         # reset the slot's position so the next admission prefills from 0;
-        # stale K/V rows stay causally masked until overwritten
+        # stale KV/ring rows stay causally masked until overwritten, and
+        # prefill_chunk zeroes fold states (rwkv/rec) at pos == 0
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
 
     def _check(self, logits: np.ndarray, slot: _Slot) -> None:
@@ -615,8 +661,8 @@ class Engine:
         fault streams of an uninterrupted run, because every stream keys on
         content/request/position, never on the attempt or the slot. Queued
         requests ride along. Slots and cache positions reset; the prefix
-        trie survives (its KV is a pure function of the image, not of which
-        requests ran).
+        trie survives (its state is a pure function of the image, not of
+        which requests ran).
         """
         back: List[Request] = []
         for i, slot in enumerate(self.slots):
@@ -635,14 +681,14 @@ class Engine:
     def refresh_params(self, params, *, force: bool = False) -> None:
         """Swap in a new deployed image/runtime (engine must be idle).
 
-        The invalidation-on-inject contract: cached prefix KV embeds the
+        The invalidation-on-inject contract: cached prefix state embeds the
         faults of the image it was prefilled against, so ANY params change
         drops the trie before the next admission can hit it.
 
         ``force=True`` swaps while requests are in flight — the online
-        scrubbing/aging path. In-flight KV stays (it embeds the faults of
-        the image it was computed against — exactly the physics: old reads
-        saw the old cells); subsequent reads see the new image.
+        scrubbing/aging path. In-flight slot state stays (it embeds the
+        faults of the image it was computed against — exactly the physics:
+        old reads saw the old cells); subsequent reads see the new image.
         """
         if self.busy and not force:
             raise EngineError("refresh_params on a busy engine: drain first")

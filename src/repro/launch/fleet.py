@@ -26,8 +26,12 @@ from the trie, or whether it was drained and re-admitted elsewhere:
    which differ only in device ids);
 3. fault streams key on (leaf salt, content/request salt, position) — no
    slot index, replica name, engine step or attempt count in the chain;
-4. dense decode math is row-independent, so co-batching on one replica
-   cannot couple into another request's rows.
+4. decode math is row-independent across slots for every slot-state kind:
+   attention rows are per-slot, recurrent folds (rwkv/rec) advance per-slot
+   state and are frozen while a slot is inactive (``lm.decode_slots``), and
+   drop-free MoE dispatch computes each token from its own capacity row.
+   Capacity-coupled MoE shapes (``lm.engine_capacity_coupled``) are the one
+   documented exception — the engine warns at construction.
 
 ``tests/test_fleet.py`` asserts this bitwise, and ``serve.py --probe`` does
 the same as a live fleet probe.

@@ -90,6 +90,24 @@ def serving_policy(*, protect: str, n_group: int, index: int,
         default=dep_lib.PolicyRule(deploy=False))
 
 
+def expert_serving_policy(*, protect: str, n_group: int, index: int,
+                          field: str = "full", ber_scales: dict = None
+                          ) -> dep_lib.ReliabilityPolicy:
+    """Per-expert MoE deployment policy (``--expert-cim``).
+
+    Every expert store (paths like ``groups/blk0/moe_win/g0/expert3``) gets
+    the launcher's protection settings; ``ber_scales`` maps expert index ->
+    BER scale for experts on weaker macros (``{3: 4.0}`` ages expert 3 of
+    every MoE matrix 4x harder).
+    """
+    base = dep_lib.PolicyRule(pattern="*", protect=protect, n_group=n_group,
+                              index=index, field=field, serve_path="hbm")
+    rules = tuple(
+        dataclasses.replace(base, pattern=f"*/expert{e}", ber_scale=s)
+        for e, s in sorted((ber_scales or {}).items()))
+    return dep_lib.ReliabilityPolicy(rules=rules, default=base)
+
+
 def deploy(params, *, ber: float, protect: str, n_group: int, index: int,
            key, fault_model: str = ""):
     """HBM path through :class:`CIMDeployment`: align -> pack -> (inject) ->
@@ -193,13 +211,17 @@ def _parse_range(spec: str) -> tuple:
     return lo, hi
 
 
-def _serve_engine(args, cfg, params, mesh, dep=None, scrub_kw=None):
+def _serve_engine(args, cfg, params, mesh, dep=None, scrub_kw=None,
+                  expert_dep=None):
     """Thin frontend onto :class:`repro.launch.engine.Engine`: synthetic
     Poisson load -> scheduler -> per-request ECC/latency artifact.
 
     ``--scrub`` attaches a :class:`repro.launch.scrub.ScrubController` as the
     engine's step hook (``dep`` + ``scrub_kw`` come from the fused deploy);
-    ``--age-ber`` adds a drift-aging wear process under it."""
+    ``--age-ber`` adds a drift-aging wear process under it. ``--probe RID``
+    re-serves one request through a fresh solo engine and asserts its tokens
+    and ECC stream match the co-batched run bitwise (skipped-with-a-note
+    when MoE capacity coupling voids the guarantee at these shapes)."""
     from repro.launch import engine as engine_lib
 
     load = engine_lib.LoadGen(
@@ -255,6 +277,37 @@ def _serve_engine(args, cfg, params, mesh, dep=None, scrub_kw=None):
               f"re-encoded, corrected cleared {sc['corrected_cleared']}, "
               f"uncorrectable cleared {sc['uncorrectable_cleared']} "
               f"({sc['wall_s']*1e3:.0f} ms scrub wall)")
+    if expert_dep is not None:
+        est = expert_dep.stats_by_expert()
+        print(f"expert CIM: {len(est)} expert stores, "
+              f"corrected={sum(v['corrected'] for v in est.values())} "
+              f"uncorrectable="
+              f"{sum(v['uncorrectable'] for v in est.values())}")
+
+    probe = None
+    if args.probe >= 0:
+        assert not args.scrub, \
+            "--probe replays against the launch image; --scrub mutates it"
+        preq = [r for r in requests if r.rid == args.probe]
+        assert preq, f"--probe {args.probe}: no such rid in the load"
+        solo_eng = engine_lib.Engine(
+            cfg, params, n_slots=args.slots, max_len=max_len,
+            chunk=args.chunk, ecc_accounting=not args.no_ecc_accounting)
+        pres, _ = solo_eng.run(preq)
+        routed, solo = results[args.probe], pres[args.probe]
+        ok = (routed.tokens == solo.tokens and routed.ecc == solo.ecc)
+        probe = {"rid": args.probe,
+                 "tokens_equal": routed.tokens == solo.tokens,
+                 "ecc_equal": routed.ecc == solo.ecc, "ok": ok,
+                 "capacity_coupled": eng.capacity_coupled}
+        print(f"probe rid={args.probe}: solo replay "
+              f"{'MATCHES' if ok else 'DIVERGES'} "
+              f"(tokens {probe['tokens_equal']}, ecc {probe['ecc_equal']})")
+        if eng.capacity_coupled:
+            print("probe: MoE capacity coupling active at these shapes — "
+                  "bitwise match not guaranteed (moe.drop_free)")
+        else:
+            assert ok, f"solo-vs-cobatched probe failed: {probe}"
 
     if args.engine_json:
         import json
@@ -270,8 +323,12 @@ def _serve_engine(args, cfg, params, mesh, dep=None, scrub_kw=None):
                        "mesh": args.mesh, "seed": args.seed,
                        "fault_model": args.fault_model,
                        "scrub": bool(args.scrub),
-                       "age_ber": args.age_ber},
+                       "age_ber": args.age_ber,
+                       "expert_cim": bool(args.expert_cim)},
             "aggregate": agg,
+            "probe": probe,
+            "expert_ecc": (expert_dep.stats_by_expert()
+                           if expert_dep is not None else None),
             "requests": [results[r.rid].to_json() for r in requests],
         }
         with open(args.engine_json, "w") as f:
@@ -397,6 +454,10 @@ def main(argv=None):
                          "in-kernel faults on every weight read (fused only)")
     ap.add_argument("--field", default="full",
                     choices=["full", "mantissa", "exponent_sign"])
+    ap.add_argument("--expert-cim", action="store_true",
+                    help="MoE archs: deploy every expert's matrices as its "
+                         "own per-expert CIM store (static faults, decode-"
+                         "once restack; per-expert ECC in the artifact)")
     ap.add_argument("--fault-model", default="", metavar="SPEC",
                     help="error process for injection "
                          "(repro.core.faultmodels grammar, e.g. "
@@ -465,9 +526,11 @@ def main(argv=None):
                          "every prompt (the system-prompt workload the "
                          "prefix cache accelerates)")
     ap.add_argument("--probe", type=int, default=-1, metavar="RID",
-                    help="fleet: after the run, re-serve request RID through "
-                         "a fresh single-replica fleet off the same spool "
-                         "and assert tokens+ECC match bitwise")
+                    help="after the run, re-serve request RID solo (engine "
+                         "mode: a fresh solo engine; fleet mode: a fresh "
+                         "single-replica fleet off the same spool) and "
+                         "assert tokens+ECC match the co-batched/routed run "
+                         "bitwise")
     args = ap.parse_args(argv)
     assert args.rounds >= 1, "--rounds must be >= 1"
 
@@ -489,6 +552,26 @@ def _serve(args, mesh):
     assert cfg.modality == "text", "serving demo uses text archs"
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_lm(key, cfg)
+
+    edep = None
+    if args.expert_cim:
+        # expert-parallel MoE deployment: per-expert stores, static faults,
+        # decode-once restack — runs BEFORE the embed/unembed deploy so the
+        # fused/hbm paths see the expert weights the macros would serve
+        epolicy = expert_serving_policy(
+            protect=args.protect, n_group=args.n_group, index=args.index,
+            field=args.field)
+        edep = dep_lib.ExpertDeployment.deploy(params, epolicy)
+        if args.ber > 0:
+            edep = edep.inject(jax.random.fold_in(key, 2), args.ber,
+                               model=args.fault_model or None)
+        params = edep.serving_params(params)
+        est = edep.stats_by_expert()
+        print(f"expert CIM deploy: {len(est)} per-expert stores "
+              f"(protect={args.protect} ber={args.ber:.1e}), "
+              f"corrected={sum(v['corrected'] for v in est.values())} "
+              f"uncorrectable="
+              f"{sum(v['uncorrectable'] for v in est.values())}")
 
     serve_path = args.serve_path or ReliabilityConfig().serve_path
     stats = None
@@ -525,7 +608,7 @@ def _serve(args, mesh):
 
     if args.engine:
         return _serve_engine(args, cfg, params, mesh, dep=dep,
-                             scrub_kw=scrub_kw)
+                             scrub_kw=scrub_kw, expert_dep=edep)
 
     data = MarkovLM(cfg.vocab_size, args.prompt_len, args.batch, seed=args.seed)
 

@@ -41,8 +41,8 @@ def abstract_params(cfg: ModelConfig):
 
 def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
     return jax.eval_shape(
-        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len,
-                               prefilled=shape.seq_len - 1))
+        lambda: lm.init_slot_states(cfg, shape.global_batch, shape.seq_len,
+                                    prefilled=shape.seq_len - 1))
 
 
 # ---------------------------------------------------------------- shardings

@@ -214,26 +214,88 @@ def init_local_cache(cfg, batch: int, window: int, dtype=None):
 
 
 def decode_local_attention(params, cfg, x, cache, pos, window: int):
-    """One-token decode against a rolling window cache."""
+    """One-token decode against a rolling window cache.
+
+    ``pos`` is a scalar (lock-step serve path: contiguous
+    ``dynamic_update_slice`` at the shared ring slot) or a per-slot ``[B]``
+    vector (continuous batching: each batch row overwrites its own ring
+    slot ``pos_b % W`` via scatter)."""
     b, _, d = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     g = h // kh
     w = cache["k"].shape[1]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    per_slot = pos_arr.ndim > 0
+    positions = pos_arr[:, None] if per_slot \
+        else jnp.full((b, 1), pos_arr, jnp.int32)                 # [B,1]
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     q = q.reshape(b, 1, kh, g, hd)
 
-    slot = jnp.mod(pos, w)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(cache["pos"], positions, (0, slot))
+    slot = jnp.mod(positions, w)                                  # [B,1]
+    if per_slot:
+        bi = jnp.arange(b)[:, None]
+        ck = cache["k"].at[bi, slot].set(k_new.astype(cache["k"].dtype))
+        cv = cache["v"].at[bi, slot].set(v_new.astype(cache["v"].dtype))
+        cpos = cache["pos"].at[bi, slot].set(positions)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot[0, 0], 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot[0, 0], 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], positions,
+                                            (0, slot[0, 0]))
 
-    valid = (cpos >= 0) & (cpos <= pos) & ((pos - cpos) < window)
+    valid = (cpos >= 0) & (cpos <= positions) & ((positions - cpos) < window)
     mask = valid[:, None, None, None, :]                  # [B,1,1,1,W]
     out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
     out = out.reshape(b, 1, h * hd) @ params["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def advance_local_attention(params, cfg, x, cache, pos, window: int,
+                            length=None):
+    """Chunked advance of the rolling-window cache. x [B,S,D] is one prompt
+    chunk at scalar offset ``pos``; the first ``length`` tokens are valid,
+    the ragged tail is padding.
+
+    Valid rows scatter into ring slots ``(pos + i) % W``; padded rows are
+    routed to the out-of-range slot ``W`` and dropped (``mode='drop'``), so
+    they never clobber ring entries that earlier queries' windows still need
+    (with ``slot = pos % W`` a pad at position p would land exactly where
+    position ``p - W`` lives — inside the window of every valid query past
+    ``p - W``). Chunk length must not exceed the ring (the engine clamps
+    ``chunk <= window``) so valid writes never collide. Per-query masks
+    handle intra-chunk causality; output rows past ``length`` are garbage
+    the caller must ignore.
+    """
+    b, s, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // kh
+    w = cache["k"].shape[1]
+    assert s <= w, f"chunk {s} exceeds the local ring ({w} slots)"
+    if length is None:
+        length = s
+    length = jnp.asarray(length, jnp.int32)
+    base = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(base + jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    q = q.reshape(b, s, kh, g, hd)
+
+    valid_tok = jnp.arange(s, dtype=jnp.int32) < length           # [S]
+    slots = jnp.where(valid_tok[None], jnp.mod(positions, w), w)  # [B,S]
+    bi = jnp.arange(b)[:, None]
+    ck = cache["k"].at[bi, slots].set(k_new.astype(cache["k"].dtype),
+                                      mode="drop")
+    cv = cache["v"].at[bi, slots].set(v_new.astype(cache["v"].dtype),
+                                      mode="drop")
+    cpos = cache["pos"].at[bi, slots].set(positions, mode="drop")
+
+    valid = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= positions[:, :, None]) \
+        & ((positions[:, :, None] - cpos[:, None, :]) < window)   # [B,S,W]
+    mask = valid[:, None, None]                                   # [B,1,1,S,W]
+    out = _attend(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    out = out.reshape(b, s, h * hd) @ params["wo"].astype(x.dtype)
     return out, {"k": ck, "v": cv, "pos": cpos}
 
 

@@ -18,7 +18,9 @@ last-token logits + caches) and ``decode`` (one token against caches).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -342,32 +344,46 @@ def prefill(params, cfg: ModelConfig, batch: Dict, unroll: bool = False):
 
 # ---------------------------------------------------------------- decode
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
-    """Zero caches sized for ``max_len`` (dry-run serve_step input spec)."""
+def init_slot_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Protocol op 1: one block's zero slot state — KV rows for attn/moe, a
+    rolling-window ring for local, the recurrent ``(wkv, x_shift)`` /
+    rg-lru hidden state for rwkv/rec. Unknown kinds fail with the
+    allowed-vocabulary error at :func:`slot_state_spec`."""
+    slot_state_spec(kind)
+    if kind in ("attn", "moe"):
+        return attn_lib.init_kv_cache(cfg, batch, max_len)
+    if kind == "local":
+        return attn_lib.init_local_cache(cfg, batch,
+                                         min(cfg.local_window, max_len))
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv_state(cfg, batch)
+    return rglru_lib.init_rglru_state(cfg, batch)
+
+
+def init_slot_states(cfg: ModelConfig, batch: int, max_len: int,
+                     prefilled: int = 0):
+    """Zero slot states for every layer, sized for ``max_len`` (dry-run
+    serve_step input spec; the engine's decode batch)."""
     pat, n_groups, tail = _group_kinds(cfg)
 
-    def one(kind):
-        if kind in ("attn", "moe"):
-            return attn_lib.init_kv_cache(cfg, batch, max_len)
-        if kind == "local":
-            return attn_lib.init_local_cache(cfg, batch,
-                                             min(cfg.local_window, max_len))
-        if kind == "rwkv":
-            return rwkv_lib.init_rwkv_state(cfg, batch)
-        if kind == "rec":
-            return rglru_lib.init_rglru_state(cfg, batch)
-        raise ValueError(kind)
-
     def stack(kind):
-        c = one(kind)
+        c = init_slot_state(cfg, kind, batch, max_len)
         return jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), c)
 
     groups = {f"blk{i}": stack(kind) for i, kind in enumerate(pat)} \
         if n_groups else None
     return {"groups": groups,
-            "tail": tuple(one(kind) for kind in tail),
+            "tail": tuple(init_slot_state(cfg, kind, batch, max_len)
+                          for kind in tail),
             "pos": jnp.asarray(prefilled, jnp.int32)}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, prefilled: int = 0):
+    """Deprecated shim: use :func:`init_slot_states` (bit-identical)."""
+    warnings.warn("lm.init_caches is deprecated; use lm.init_slot_states",
+                  DeprecationWarning, stacklevel=2)
+    return init_slot_states(cfg, batch, max_len, prefilled)
 
 
 def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
@@ -404,20 +420,75 @@ def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
     return x, cache
 
 
+def apply_block_advance(p, cfg: ModelConfig, kind: str, x, cache, pos,
+                        length):
+    """Protocol op 2 (chunked prefill): advance one block's slot state by a
+    prompt chunk x [B,C,D] at scalar offset ``pos``; the first ``length``
+    tokens are valid, the ragged tail padding.
+
+    ``'parallel'`` kinds are position-parallel: attn/moe pad rows land at
+    positions the causal mask hides until overwritten (`decode_attention`
+    handles S=C natively); local scatters valid rows into the ring and
+    *drops* pad writes. ``'scan'`` kinds (rwkv/rec) run the sequence
+    formulation with the carried state, identity-masking pads out of the
+    left fold — compiled once per chunk shape, ``length`` traced. Output
+    rows past ``length`` are garbage the caller must ignore.
+    """
+    if kind in ("attn", "moe"):
+        return apply_block_decode(p, cfg, kind, x, cache, pos)
+    if kind == "local":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, cache = attn_lib.advance_local_attention(p["attn"], cfg, h, cache,
+                                                    pos, cfg.local_window,
+                                                    length)
+        x = x + o
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        x = x + mlp_lib.apply_mlp(p["mlp"], cfg, h2)
+    elif kind == "rwkv":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, state = rwkv_lib.advance_rwkv_tmix(p["tmix"], cfg, h, cache,
+                                              length)
+        x = x + o
+        h2 = apply_norm(cfg.norm_type, p["norm2"], x)
+        h2s = jnp.concatenate(
+            [cache["x_cmix"].astype(h2.dtype)[:, None], h2[:, :-1]], axis=1)
+        x = x + mlp_lib.apply_mlp(p["cmix"], cfg, h2, h2s)
+        state["x_cmix"] = jax.lax.dynamic_slice_in_dim(
+            h2, length - 1, 1, axis=1)[:, 0].astype(jnp.float32)
+        cache = state
+    elif kind == "rec":
+        h = apply_norm(cfg.norm_type, p["norm1"], x)
+        o, cache = rglru_lib.advance_rglru_block(p["rec"], cfg, h, cache,
+                                                 length)
+        x = x + o
+        x = x + mlp_lib.apply_mlp(p["mlp"], cfg,
+                                  apply_norm(cfg.norm_type, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
 def _decode_stack(params, cfg: ModelConfig, caches, x, pos,
-                  unroll: bool = False):
+                  unroll: bool = False, length=None):
     """Shared decode-path block stack: x [B,S,D] appended to the caches at
     offset ``pos`` (scalar, or per-slot [B] vector) -> (final-normed hidden
-    [B,S,D], new group caches, new tail caches)."""
+    [B,S,D], new group caches, new tail caches). With ``length`` (chunked
+    prefill) blocks advance via :func:`apply_block_advance` — ragged chunks
+    mask their padded tail out of recurrent folds and ring writes."""
     pat, n_groups, tail = _group_kinds(cfg)
+
+    def step(p, kind, x, c):
+        if length is None:
+            return apply_block_decode(p, cfg, kind, x, c, pos)
+        return apply_block_advance(p, cfg, kind, x, c, pos, length)
+
     new_group_caches = None
     if n_groups:
         def body(x, xs):
             gp, gc = xs
             out_c = {}
             for i, kind in enumerate(pat):
-                x, c = apply_block_decode(gp[f"blk{i}"], cfg, kind, x,
-                                          gc[f"blk{i}"], pos)
+                x, c = step(gp[f"blk{i}"], kind, x, gc[f"blk{i}"])
                 out_c[f"blk{i}"] = c
             return x, out_c
         if unroll:
@@ -438,8 +509,7 @@ def _decode_stack(params, cfg: ModelConfig, caches, x, pos,
 
     new_tail = []
     for i, kind in enumerate(tail):
-        x, c = apply_block_decode(params["tail"][i], cfg, kind, x,
-                                  caches["tail"][i], pos)
+        x, c = step(params["tail"][i], kind, x, caches["tail"][i])
         new_tail.append(c)
 
     x = apply_norm(cfg.norm_type, params["final_norm"], x)
@@ -465,32 +535,130 @@ def decode(params, cfg: ModelConfig, caches, tokens, pos=None,
 
 
 # ------------------------------------------------- continuous-batching engine
+#
+# Slot-state protocol: the engine/model boundary. Every block kind declares a
+# SlotStateSpec, and the engine drives four kind-dispatched operations —
+# init_slot_state / advance (prefill_chunk + decode_slots) /
+# extract_state_chunk / inject_state_chunk — against it. The engine,
+# PrefixCache and Fleet consume only this protocol; they never look inside a
+# block's state pytree.
 
-# block kinds the slot-based serving engine supports. "local"/"rwkv"/"rec"
-# decode strictly token-by-token (rolling-window slots, recurrent state), so
-# they cannot chunk-prefill; MoE *runs* (with a warning) but its
-# capacity-based dispatch couples co-batched tokens, which voids the
-# bit-invariance contract (dense blocks are row-independent — see
-# docs/architecture.md §8).
-ENGINE_KINDS = ("attn", "moe")
+ENGINE_KINDS = ("attn", "local", "moe", "rwkv", "rec")
+
+_SPEC_VOCAB = {"kind": ENGINE_KINDS,
+               "advance": ("parallel", "scan"),
+               "cache_unit": ("rows", "state")}
 
 
-def check_engine_kinds(cfg: ModelConfig) -> None:
-    pat, _, tail = _group_kinds(cfg)
-    kinds = tuple(pat) + tuple(tail)
-    bad = sorted(set(k for k in kinds if k not in ENGINE_KINDS))
-    if bad:
+@dataclasses.dataclass(frozen=True)
+class SlotStateSpec:
+    """Per-block-kind contract of the serving engine's slot-state protocol.
+
+    * ``advance`` — how a prompt chunk enters the state: ``'parallel'``
+      (position-parallel attention over KV rows / ring slots) or ``'scan'``
+      (strictly-recurrent left fold, compiled once per chunk shape).
+    * ``cache_unit`` — the prefix cache's unit of reuse: ``'rows'`` states
+      are position-addressable (a chunk extracts/injects the rows it wrote);
+      ``'state'`` kinds cache the *final* state snapshot per trie node,
+      which is exact because the state is a pure left fold over the salted
+      prefix (see docs/architecture.md §8).
+    * ``fold_state`` — the state is a destructive left fold with no position
+      gating: the engine zeroes it on admission (``pos == 0``) and freezes
+      it for inactive slots, where attention-style states instead rely on
+      the causal mask to hide stale rows until overwritten.
+    * ``window_bound`` — the state is a rolling window: the engine clamps
+      its prefill chunk to the window so valid writes never collide.
+    * ``capacity_coupled`` — co-batched tokens *may* couple through
+      capacity-based dispatch; :func:`repro.models.moe.drop_free` decides
+      whether a given engine shape actually voids the bitwise guarantee.
+
+    Unknown vocabulary fails here, at construction — not deep inside
+    ``advance``.
+    """
+    kind: str
+    advance: str = "parallel"
+    cache_unit: str = "rows"
+    fold_state: bool = False
+    window_bound: bool = False
+    capacity_coupled: bool = False
+
+    def __post_init__(self):
+        for field, allowed in _SPEC_VOCAB.items():
+            got = getattr(self, field)
+            if got not in allowed:
+                raise ValueError(
+                    f"SlotStateSpec.{field}: unknown value {got!r}; allowed: "
+                    f"{', '.join(repr(a) for a in allowed)}")
+
+
+SLOT_STATE_SPECS = {
+    "attn": SlotStateSpec("attn"),
+    "moe": SlotStateSpec("moe", capacity_coupled=True),
+    "local": SlotStateSpec("local", cache_unit="state", window_bound=True),
+    "rwkv": SlotStateSpec("rwkv", advance="scan", cache_unit="state",
+                          fold_state=True),
+    "rec": SlotStateSpec("rec", advance="scan", cache_unit="state",
+                         fold_state=True),
+}
+
+
+def slot_state_spec(kind: str) -> SlotStateSpec:
+    """The :class:`SlotStateSpec` for one block kind (allowed-vocabulary
+    error for unknown kinds)."""
+    if kind not in SLOT_STATE_SPECS:
         raise ValueError(
-            f"serving engine supports block kinds {ENGINE_KINDS}, but arch "
-            f"{cfg.arch_id!r} uses {bad}: local/rwkv/rec blocks decode "
-            f"strictly token-by-token and cannot chunk-prefill into slots")
-    if "moe" in kinds:
-        import warnings
-        warnings.warn(
-            f"serving engine on MoE arch {cfg.arch_id!r}: capacity-based "
-            f"expert dispatch couples co-batched tokens, so the engine's "
-            f"bitwise batch-invariance contract does NOT hold (fault-stream "
-            f"keying is still per-request)", stacklevel=2)
+            f"slot_state_spec: unknown block kind {kind!r}; allowed: "
+            f"{', '.join(repr(k) for k in ENGINE_KINDS)}")
+    return SLOT_STATE_SPECS[kind]
+
+
+def slot_state_specs(cfg: ModelConfig) -> Tuple[SlotStateSpec, ...]:
+    """The distinct specs an arch's block pattern uses (validates every
+    kind up front — the engine calls this once at construction)."""
+    pat, _, tail = _group_kinds(cfg)
+    seen, out = set(), []
+    for kind in tuple(pat) + tuple(tail):
+        if kind not in seen:
+            seen.add(kind)
+            out.append(slot_state_spec(kind))
+    return tuple(out)
+
+
+def check_engine_kinds(cfg: ModelConfig) -> Tuple[SlotStateSpec, ...]:
+    """Validate every block kind of ``cfg`` against the slot-state protocol
+    (allowed-vocabulary error on unknown kinds) and return the specs.
+
+    Since the protocol redesign every shipped kind is servable; MoE's
+    capacity coupling is no longer a blanket warning here but a tested
+    contract boundary the engine checks per shape
+    (:func:`engine_capacity_coupled`)."""
+    return slot_state_specs(cfg)
+
+
+def engine_capacity_coupled(cfg: ModelConfig, tokens: int) -> bool:
+    """True when serving ``cfg`` at batches up to ``tokens`` tokens can
+    couple co-batched requests through capacity-based MoE dispatch — i.e.
+    some spec is ``capacity_coupled`` AND the shape is not provably
+    drop-free. Drop-free configs keep the bitwise solo-vs-cobatched
+    guarantee (see :func:`repro.models.moe.drop_free`)."""
+    if not any(s.capacity_coupled for s in slot_state_specs(cfg)):
+        return False
+    return not moe_lib.drop_free(cfg, tokens)
+
+
+def _map_block_states(cfg: ModelConfig, sub, fn):
+    """Apply ``fn(kind, *block_states)`` to every block of one or more
+    structurally-aligned slot-cache views (the protocol's kind-dispatch
+    walk)."""
+    pat, n_groups, tail = _group_kinds(cfg)
+    subs = sub if isinstance(sub, tuple) else (sub,)
+    g = None
+    if subs[0]["groups"] is not None:
+        g = {f"blk{i}": fn(kind, *(s["groups"][f"blk{i}"] for s in subs))
+             for i, kind in enumerate(pat)}
+    t = tuple(fn(kind, *(s["tail"][i] for s in subs))
+              for i, kind in enumerate(tail))
+    return {"groups": g, "tail": t}
 
 
 def slot_caches(caches, slot):
@@ -519,40 +687,73 @@ def merge_slot_caches(caches, slot, sub):
     return {"groups": g, "tail": t, "pos": caches["pos"]}
 
 
-def extract_kv_chunk(cfg: ModelConfig, caches, slot, pos, length: int):
-    """One slot's KV-cache rows for positions ``[pos, pos + length)``.
+def extract_state_chunk(cfg: ModelConfig, caches, slot, pos, length: int):
+    """Protocol op 3: one slot's per-block state contribution of the chunk
+    that just prefilled positions ``[pos, pos + length)``.
 
-    The engine-kind cache leaves (k/v and their int8 scales) all carry the
-    position axis at ``-3``, so a chunk is a uniform slice. The returned
-    pytree is exactly what :func:`inject_kv_chunk` consumes — the prefix
-    cache's unit of reuse. ``length`` is static (one trace per chunk shape);
-    ``slot``/``pos`` are traced.
+    Kind-dispatched on ``SlotStateSpec.cache_unit``: ``'rows'`` blocks
+    (attn/moe — KV leaves and their int8 scales carry the position axis at
+    ``-3``) return exactly the rows the chunk wrote; ``'state'`` blocks
+    (local/rwkv/rec) return the full post-chunk state snapshot — exact as a
+    prefix-cache unit because their state at a chunk boundary is a pure
+    left fold of the salted prefix (ring writes are position-gated, the
+    recurrences fold left-to-right). The returned pytree is what
+    :func:`inject_state_chunk` consumes. ``length`` is static (one trace
+    per chunk shape); ``slot``/``pos`` are traced.
     """
     check_engine_kinds(cfg)
     sub = slot_caches(caches, slot)
-    return jax.tree_util.tree_map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, pos, length,
-                                               axis=a.ndim - 3), sub)
+
+    def ex(kind, c):
+        if slot_state_spec(kind).cache_unit == "rows":
+            return jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, pos, length,
+                                                       axis=a.ndim - 3), c)
+        return c
+    return _map_block_states(cfg, sub, ex)
+
+
+def inject_state_chunk(cfg: ModelConfig, caches, slot, pos, chunk):
+    """Protocol op 4: prefill-from-cache entry — write a previously
+    extracted state chunk into ``slot`` at positions
+    ``[pos, pos + chunk_len)`` and return the updated caches.
+
+    ``'rows'`` blocks write the rows back in place; ``'state'`` blocks
+    overwrite the whole snapshot (injecting a trie path's chunks in order
+    leaves the last — deepest — snapshot standing, which IS the state after
+    that prefix). Injecting what another request prefilled for the same
+    token prefix (same content-salted fault streams, same image) leaves the
+    caches bitwise identical to having run :func:`prefill_chunk` on the
+    chunk — the prefix cache skips the compute, not the contract. The
+    caller still owns ``caches['pos']``.
+    """
+    check_engine_kinds(cfg)
+    sub = slot_caches(caches, slot)
+
+    def inj(kind, c, ch):
+        if slot_state_spec(kind).cache_unit == "rows":
+            return jax.tree_util.tree_map(
+                lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                    a, b.astype(a.dtype), pos, axis=a.ndim - 3), c, ch)
+        return jax.tree_util.tree_map(lambda a, b: b.astype(a.dtype), c, ch)
+    upd = _map_block_states(cfg, (sub, chunk), inj)
+    return merge_slot_caches(caches, slot, upd)
+
+
+def extract_kv_chunk(cfg: ModelConfig, caches, slot, pos, length: int):
+    """Deprecated shim: use :func:`extract_state_chunk` (bit-identical)."""
+    warnings.warn(
+        "lm.extract_kv_chunk is deprecated; use lm.extract_state_chunk",
+        DeprecationWarning, stacklevel=2)
+    return extract_state_chunk(cfg, caches, slot, pos, length)
 
 
 def inject_kv_chunk(cfg: ModelConfig, caches, slot, pos, chunk):
-    """Prefill-from-cached-KV entry: write a previously extracted KV chunk
-    into ``slot`` at positions ``[pos, pos + chunk_len)`` and return the
-    updated caches.
-
-    For engine block kinds (attn/moe) the KV rows are the *complete* layer
-    state of those positions, so injecting rows another request prefilled
-    for the same token prefix (same content-salted fault streams, same
-    image) leaves the caches bitwise identical to having run
-    :func:`prefill_chunk` on the chunk — the prefix cache skips the compute,
-    not the contract. The caller still owns ``caches['pos']``.
-    """
-    check_engine_kinds(cfg)
-    sub = slot_caches(caches, slot)
-    upd = jax.tree_util.tree_map(
-        lambda a, c: jax.lax.dynamic_update_slice_in_dim(
-            a, c.astype(a.dtype), pos, axis=a.ndim - 3), sub, chunk)
-    return merge_slot_caches(caches, slot, upd)
+    """Deprecated shim: use :func:`inject_state_chunk` (bit-identical)."""
+    warnings.warn(
+        "lm.inject_kv_chunk is deprecated; use lm.inject_state_chunk",
+        DeprecationWarning, stacklevel=2)
+    return inject_state_chunk(cfg, caches, slot, pos, chunk)
 
 
 def prefill_chunk(params, cfg: ModelConfig, caches, tokens, slot, pos,
@@ -560,11 +761,19 @@ def prefill_chunk(params, cfg: ModelConfig, caches, tokens, slot, pos,
     """Chunked prefill of ONE slot into the batched decode caches.
 
     ``tokens`` [C] is one prompt chunk (the first ``length`` entries valid;
-    the ragged tail is padding — its K/V land at positions the causal mask
-    hides until a later write overwrites them, so padding never reaches a
-    softmax). ``slot`` indexes the batch row, ``pos`` is the slot's current
-    token count, ``req_salt`` keys this request's dynamic-injection streams
-    (the chunk reads the CIM image once, at read index ``pos``).
+    the ragged tail is padding — attn/moe pad K/V land at positions the
+    causal mask hides until a later write overwrites them, local drops pad
+    ring writes, and the recurrent kinds identity-mask pads out of their
+    left fold; see :func:`apply_block_advance`). ``slot`` indexes the batch
+    row, ``pos`` is the slot's current token count, ``req_salt`` keys this
+    request's dynamic-injection streams (the chunk reads the CIM image
+    once, at read index ``pos``).
+
+    A chunk at ``pos == 0`` starts a fresh request: ``fold_state`` blocks
+    (rwkv/rec) have their slot state zeroed first — without position-gated
+    writes, the previous occupant's fold would otherwise leak into the new
+    request (attention-style states need no reset; stale rows stay masked
+    until overwritten).
 
     Returns (last-valid-token logits [V], updated caches with
     ``caches['pos'][slot] = pos + length``). Both ``slot`` and ``pos`` are
@@ -583,7 +792,16 @@ def prefill_chunk(params, cfg: ModelConfig, caches, tokens, slot, pos,
         x = params["embed"].astype(dt)[toks]
     x = shard(x, "batch", None, None)
     sub = slot_caches(caches, slot)
-    x, gc, tc = _decode_stack(params, cfg, sub, x, pos)
+    if any(s.fold_state for s in slot_state_specs(cfg)):
+        fresh = pos == 0
+
+        def reset(kind, c):
+            if not slot_state_spec(kind).fold_state:
+                return c
+            return jax.tree_util.tree_map(
+                lambda a: jnp.where(fresh, jnp.zeros_like(a), a), c)
+        sub = _map_block_states(cfg, sub, reset)
+    x, gc, tc = _decode_stack(params, cfg, sub, x, pos, length=length)
     h = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)  # [1,1,D]
     logits = _unembed_logits(params, h, pos=pos, req_salt=req_salt)[:, 0]
     out = merge_slot_caches(caches, slot, {"groups": gc, "tail": tc})
@@ -608,7 +826,9 @@ def decode_slots(params, cfg: ModelConfig, caches, tokens, active,
 
     Inactive slots flow through the fixed-shape batch but their positions do
     not advance; their stale cache writes stay causally masked (see
-    ``attention.decode_attention``).
+    ``attention.decode_attention``), and ``fold_state`` blocks (rwkv/rec —
+    no position gating) have their state frozen to the old value so an idle
+    slot's garbage tokens never advance a fold.
 
     Returns (logits [S,V], new caches).
     """
@@ -633,6 +853,27 @@ def decode_slots(params, cfg: ModelConfig, caches, tokens, active,
         x = emb.astype(dt)[tokens]
     x = shard(x, "batch", None, None)
     x, gc, tc = _decode_stack(params, cfg, caches, x, pos)
+    if any(sp.fold_state for sp in slot_state_specs(cfg)):
+        act = jnp.asarray(active, bool)
+
+        def keep_active(axis):
+            def f(n, o):
+                shape = [1] * n.ndim
+                shape[axis] = act.shape[0]
+                return jnp.where(act.reshape(shape), n, o)
+            return f
+
+        pat, _, tail_kinds = _group_kinds(cfg)
+        if gc is not None:
+            gc = {f"blk{i}": jax.tree_util.tree_map(
+                      keep_active(1), gc[f"blk{i}"],
+                      caches["groups"][f"blk{i}"])
+                  if slot_state_spec(kind).fold_state else gc[f"blk{i}"]
+                  for i, kind in enumerate(pat)}
+        tc = tuple(jax.tree_util.tree_map(keep_active(0), tc[i],
+                                          caches["tail"][i])
+                   if slot_state_spec(kind).fold_state else tc[i]
+                   for i, kind in enumerate(tail_kinds))
     if isinstance(params["unembed"], cim_lib.CIMStore) and dynamic:
         logits = jnp.concatenate(
             [_unembed_logits(params, x[i:i + 1], pos=pos[i],

@@ -40,6 +40,23 @@ def capacity(cfg, tokens: int) -> int:
     return max(8, c)
 
 
+def drop_free(cfg, tokens: int) -> bool:
+    """True when capacity-based dispatch provably never drops a token for any
+    batch of up to ``tokens`` tokens — the serving engine's contract boundary.
+
+    ``top_k`` expert ids are distinct per token, so an expert's worst-case
+    load in a ``t``-token batch is ``t`` (every token ranks it once). When
+    ``capacity(cfg, t) >= t`` for every batch size up to ``tokens``, no
+    assignment can rank past capacity: each kept token's expert output is
+    computed from its own buffer row alone (row-independent einsums), so
+    co-batched tokens cannot couple and the engine's bitwise
+    solo-vs-cobatched guarantee holds. The ``max(8, .)`` capacity floor makes
+    every batch of <= 8 tokens drop-free regardless of ``capacity_factor`` —
+    small engine shapes (slots, chunk <= 8) get the guarantee for free.
+    """
+    return all(capacity(cfg, t) >= t for t in range(1, tokens + 1))
+
+
 def apply_moe(params, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x [B,S,D] -> (out [B,S,D], aux load-balancing loss scalar)."""
     if cfg.moe_dispatch == "a2a":

@@ -104,6 +104,43 @@ def apply_rglru_block(params, cfg, x, state=None) -> Tuple[jnp.ndarray, dict]:
     return shard(out, "batch", "seq", None), new_state
 
 
+def advance_rglru_block(params, cfg, x, state, length) -> Tuple[jnp.ndarray, dict]:
+    """Chunked slot-state advance (serving engine). x [B,T,D]; the first
+    ``length`` tokens are valid, the ragged tail is padding.
+
+    ``associative_scan`` is a prefix scan — its output at index i folds
+    inputs 0..i only — so the hidden carry is simply read at ``length - 1``
+    (pads never enter it), and the conv carry is the last ``conv_width - 1``
+    *valid* inputs, sliced dynamically out of the carry-in ++ chunk stream.
+    ``length`` is traced: one compile per chunk shape. Output rows past
+    ``length`` are garbage the caller must ignore.
+    """
+    b, t, d = x.shape
+    dt = x.dtype
+    length = jnp.asarray(length, jnp.int32)
+    gate = jax.nn.gelu(x @ params["w_gate_br"].astype(dt))
+    xb = x @ params["w_x"].astype(dt)
+    gate = shard(gate, "batch", None, "heads")
+    xb = shard(xb, "batch", None, "heads")
+    xp = jnp.concatenate([state["conv"].astype(dt), xb], axis=1)
+    conv_carry = jax.lax.dynamic_slice_in_dim(xp, length,
+                                              cfg.conv_width - 1, axis=1)
+    xc, _ = _conv1d_causal(xb, params["conv_w"], params["conv_b"],
+                           state["conv"].astype(dt))
+    a, bx = _rg_lru_coeffs(params, xc)
+    bx = bx.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h_last = jax.lax.dynamic_slice_in_dim(hs, length - 1, 1, axis=1)[:, 0]
+    out = (gate * hs.astype(dt)) @ params["w_down"].astype(dt)
+    return out, {"h": h_last, "conv": conv_carry.astype(jnp.float32)}
+
+
 def decode_rglru_block(params, cfg, x, state) -> Tuple[jnp.ndarray, dict]:
     """Single-token recurrence. x [B,1,D]."""
     b, _, d = x.shape

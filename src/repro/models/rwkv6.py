@@ -175,6 +175,50 @@ def apply_rwkv_tmix(params, cfg, x, state=None) -> Tuple[jnp.ndarray, dict]:
     return shard(out, "batch", "seq", None), new_state
 
 
+def advance_rwkv_tmix(params, cfg, x, state, length) -> Tuple[jnp.ndarray, dict]:
+    """Chunked slot-state advance (serving engine). x [B,T,D]; the first
+    ``length`` tokens are valid, the ragged tail is padding.
+
+    Padding is identity-masked out of the recurrence exactly the way
+    :func:`_wkv_chunked` pads its own tail — w=1 (no decay), r=k=v=0 (no
+    contribution) — so the carried state is the pure left fold of the valid
+    tokens, and the token-shift carry is read at the last *valid* position.
+    ``length`` is traced: one compile covers every ragged fill of a chunk
+    shape. Output rows past ``length`` are garbage the caller must ignore.
+    """
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    dt = x.dtype
+    length = jnp.asarray(length, jnp.int32)
+    xs = _token_shift_targets(params, x, state["x_tmix"].astype(dt))
+    xr, xk, xv, xg, xw = xs[0], xs[1], xs[2], xs[3], xs[4]
+
+    def proj(inp, name):
+        y = inp @ params[name].astype(dt)
+        return shard(y.reshape(b, t, h, hd).astype(jnp.float32),
+                     "batch", None, "heads", None)
+
+    r, k, v = proj(xr, "w_r"), proj(xk, "w_k"), proj(xv, "w_v")
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    w = _decay(params, xw).reshape(b, t, h, hd)
+    w = shard(w, "batch", None, "heads", None)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    valid = (jnp.arange(t) < length)[None, :, None, None]
+    r = jnp.where(valid, r, 0.0)
+    k = jnp.where(valid, k, 0.0)
+    v = jnp.where(valid, v, 0.0)
+    w = jnp.where(valid, w, 1.0)
+
+    o, sT = _wkv_chunked(r, k, v, w, u, state["s"])
+    o = _group_norm(o.reshape(b, t, h * hd).astype(dt), params["gn_scale"], h)
+    out = (o * g) @ params["w_o"].astype(dt)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)[:, 0]
+    new_state = {"s": sT, "x_tmix": x_last.astype(jnp.float32),
+                 "x_cmix": state["x_cmix"]}
+    return out, new_state
+
+
 def decode_rwkv_tmix(params, cfg, x, state) -> Tuple[jnp.ndarray, dict]:
     """Single-token recurrence. x [B,1,D]."""
     b, _, d = x.shape

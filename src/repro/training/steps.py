@@ -155,17 +155,24 @@ def make_decode_slots_step(cfg: ModelConfig) -> Callable:
     return decode_slots_step
 
 
-def make_extract_kv_step(cfg: ModelConfig) -> Callable:
-    """Prefix cache: slice one slot's KV rows for a just-prefilled chunk.
-    Jit with ``length`` static (one trace per chunk shape)."""
-    def extract_kv_step(caches, slot, pos, length):
-        return lm.extract_kv_chunk(cfg, caches, slot, pos, length)
-    return extract_kv_step
+def make_extract_state_step(cfg: ModelConfig) -> Callable:
+    """Prefix cache: extract one slot's per-block state chunk after a
+    prefill — KV rows for position-addressable kinds, the final state
+    snapshot for recurrent folds. Jit with ``length`` static (one trace per
+    chunk shape)."""
+    def extract_state_step(caches, slot, pos, length):
+        return lm.extract_state_chunk(cfg, caches, slot, pos, length)
+    return extract_state_step
 
 
-def make_inject_kv_step(cfg: ModelConfig) -> Callable:
-    """Prefix cache: write a cached KV chunk into a slot (the
-    prefill-from-cached-KV entry)."""
-    def inject_kv_step(caches, slot, pos, chunk):
-        return lm.inject_kv_chunk(cfg, caches, slot, pos, chunk)
-    return inject_kv_step
+def make_inject_state_step(cfg: ModelConfig) -> Callable:
+    """Prefix cache: write a cached state chunk into a slot (the
+    prefill-from-cache entry)."""
+    def inject_state_step(caches, slot, pos, chunk):
+        return lm.inject_state_chunk(cfg, caches, slot, pos, chunk)
+    return inject_state_step
+
+
+# deprecated factory aliases (the lm.* shims under them warn per call)
+make_extract_kv_step = make_extract_state_step
+make_inject_kv_step = make_inject_state_step

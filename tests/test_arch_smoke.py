@@ -52,7 +52,7 @@ def test_decode_step(arch):
     cfg = get_config(arch).reduced()
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     b, cache_len = 2, 32
-    caches = lm.init_caches(cfg, b, cache_len, prefilled=cache_len - 1)
+    caches = lm.init_slot_states(cfg, b, cache_len, prefilled=cache_len - 1)
     toks = jnp.zeros((b, 1), jnp.int32)
     serve = jax.jit(steps.make_serve_step(cfg))
     logits, new_caches = serve(params, caches, toks)

@@ -1,9 +1,10 @@
-"""The legacy ``cim.*_pytree`` entry points are deprecation shims.
+"""The legacy ``cim.*_pytree`` and ``lm`` KV-era entry points are shims.
 
 Contract: each shim fires ``DeprecationWarning`` exactly once per call and
-returns **bit-identical** results to its private ``*_impl`` twin (the twins
-are what the deployment/sweep layers call; the shims only exist for old
-user code).
+returns **bit-identical** results to its replacement (``cim.*_impl`` twins;
+``lm.init_slot_states`` / ``extract_state_chunk`` / ``inject_state_chunk``
+for the slot-state protocol renames). The shims only exist for old user
+code — nothing inside the repo calls them.
 """
 import warnings
 
@@ -89,3 +90,76 @@ def test_shims_bit_identical_to_impl(tree):
             assert ((a == b) | (np.isnan(a) & np.isnan(b))).all()
         assert int(st_old["corrected"]) == int(st_new["corrected"])
         assert int(st_old["uncorrectable"]) == int(st_new["uncorrectable"])
+
+
+# --------------------------------------------------------------------------
+# lm slot-state protocol renames (PR 10): init_caches / extract_kv_chunk /
+# inject_kv_chunk forward to init_slot_states / extract_state_chunk /
+# inject_state_chunk.
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = get_config("olmo-1b").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(3), cfg)
+    return cfg, params, lm
+
+
+def _trees_bitwise_equal(x, y):
+    fx, tx = jax.tree_util.tree_flatten(x)
+    fy, ty = jax.tree_util.tree_flatten(y)
+    assert tx == ty
+    for a, b in zip(fx, fy):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        assert (a == b).all()
+
+
+@pytest.mark.parametrize("name", ["init_caches", "extract_kv_chunk",
+                                  "inject_kv_chunk"])
+def test_lm_shim_warns(lm_setup, name):
+    cfg, params, lm = lm_setup
+    caches = lm.init_slot_states(cfg, 2, 16)
+    chunk = lm.extract_state_chunk(cfg, caches, 0, 0, 8)
+    calls = {
+        "init_caches": lambda: lm.init_caches(cfg, 2, 16),
+        "extract_kv_chunk": lambda: lm.extract_kv_chunk(
+            cfg, caches, 0, 0, 8),
+        "inject_kv_chunk": lambda: lm.inject_kv_chunk(
+            cfg, caches, 1, 0, chunk),
+    }
+    with pytest.warns(DeprecationWarning, match=name):
+        calls[name]()
+
+
+def test_lm_new_names_do_not_warn(lm_setup):
+    cfg, params, lm = lm_setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        caches = lm.init_slot_states(cfg, 2, 16)
+        chunk = lm.extract_state_chunk(cfg, caches, 0, 0, 8)
+        lm.inject_state_chunk(cfg, caches, 1, 0, chunk)
+
+
+def test_lm_shims_bit_identical(lm_setup):
+    cfg, params, lm = lm_setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        c_old = lm.init_caches(cfg, 2, 16)
+        c_new = lm.init_slot_states(cfg, 2, 16)
+        _trees_bitwise_equal(c_old, c_new)
+        # prefill a real chunk so extract sees non-zero rows (per-slot pos
+        # vector, as the engine sets up)
+        c_new["pos"] = jax.numpy.zeros((2,), jax.numpy.int32)
+        toks = np.arange(8, dtype=np.int32)
+        _, c_new = lm.prefill_chunk(params, cfg, c_new, toks, 0, 0, length=8)
+        ch_old = lm.extract_kv_chunk(cfg, c_new, 0, 0, 8)
+        ch_new = lm.extract_state_chunk(cfg, c_new, 0, 0, 8)
+        _trees_bitwise_equal(ch_old, ch_new)
+        i_old = lm.inject_kv_chunk(cfg, c_new, 1, 0, ch_new)
+        i_new = lm.inject_state_chunk(cfg, c_new, 1, 0, ch_new)
+        _trees_bitwise_equal(i_old, i_new)

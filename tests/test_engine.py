@@ -8,17 +8,23 @@ The acceptance contract of ``repro.launch.engine``:
   for static and per-read dynamic injection, on the fused and hbm serve
   paths, on one device and (subprocess) under a forced-8-device "model"
   mesh. Seeds are keyed by (leaf, request, position) — never slot index or
-  engine step — and dense decode math is row-independent.
+  engine step — and decode math is row-independent across slots for every
+  slot-state kind. The scenario matrix asserts this for all five kinds the
+  slot-state protocol serves: attn (KV rows), local (rolling-window ring),
+  rwkv / rec (recurrent folds with inactive-slot freezing), and drop-free
+  moe (capacity never binds at these shapes — ``moe.drop_free``).
 * **scheduler edges** — empty-queue idle steps are no-ops, evicted slots are
   reused lowest-index-first, prompts longer than the prefill chunk split
   raggedly without changing results, and a single-slot engine degenerates
   bit-identically to the lock-step ``lm.prefill``/``lm.decode`` serve path.
 """
+import dataclasses
 import json
 import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -203,12 +209,89 @@ def test_request_exceeding_max_len_rejected(setup):
         eng.run([big])
 
 
-def test_engine_rejects_token_by_token_archs(setup):
-    """Recurrent / rolling-window block kinds cannot chunk-prefill into
-    slots: the engine must refuse them up front."""
-    cfg = get_config("rwkv6-1.6b").reduced()
-    with pytest.raises(ValueError, match="rwkv"):
-        lm.check_engine_kinds(cfg)
+def test_engine_accepts_all_slot_state_kinds():
+    """The slot-state protocol serves every registered block kind — the old
+    token-by-token rejection of recurrent / rolling-window architectures is
+    gone. ``check_engine_kinds`` returns the per-block specs the engine
+    schedules from, and each spec advertises the fields scheduling needs."""
+    expect = {
+        "olmo-1b": {"attn"},
+        "rwkv6-1.6b": {"rwkv"},
+        "recurrentgemma-9b": {"rec", "local"},
+        "qwen3-moe-235b-a22b": {"moe"},
+    }
+    for name, kinds in expect.items():
+        specs = lm.check_engine_kinds(get_config(name).reduced())
+        assert {s.kind for s in specs} == kinds, name
+    rwkv_spec, = set(lm.check_engine_kinds(get_config("rwkv6-1.6b").reduced()))
+    assert rwkv_spec.advance == "scan" and rwkv_spec.cache_unit == "state"
+    assert rwkv_spec.fold_state and not rwkv_spec.window_bound
+    moe_spec, = set(lm.check_engine_kinds(
+        get_config("qwen3-moe-235b-a22b").reduced()))
+    assert moe_spec.capacity_coupled and moe_spec.cache_unit == "rows"
+
+
+# --------------------------------------------------------------------------
+# Scenario matrix: the batch-invariance contract for every slot-state kind.
+# --------------------------------------------------------------------------
+
+KINDS = ("attn", "local", "rwkv", "rec", "moe")
+
+
+def _kind_cfg(kind):
+    if kind == "attn":
+        return get_config("olmo-1b").reduced()
+    if kind == "local":
+        # synthetic pure-local model: rolling-window ring with a window
+        # smaller than max_len so eviction/wraparound is actually exercised
+        return dataclasses.replace(get_config("olmo-1b").reduced(),
+                                   block_pattern=("local",), local_window=16)
+    if kind == "rwkv":
+        return get_config("rwkv6-1.6b").reduced()
+    if kind == "rec":
+        return get_config("recurrentgemma-9b").reduced()
+    return get_config("qwen3-moe-235b-a22b").reduced()
+
+
+_KIND_CACHE = {}
+
+
+def _kind_setup(kind):
+    if kind not in _KIND_CACHE:
+        cfg = _kind_cfg(kind)
+        key = jax.random.PRNGKey(0)
+        _KIND_CACHE[kind] = (cfg, lm.init_lm(key, cfg),
+                             jax.random.fold_in(key, 1))
+    return _KIND_CACHE[kind]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("inject", ["static", "dynamic"])
+def test_scenario_matrix_batch_invariance(kind, inject):
+    """For each architecture class the engine serves, a request's tokens,
+    logits, and ECC stream accounting are bit-identical solo vs co-batched,
+    under static and per-read dynamic injection. MoE runs drop-free at these
+    shapes, so it carries the full guarantee with no capacity warning."""
+    cfg, params, dkey = _kind_setup(kind)
+    sparams = _serving_params(params, dkey, inject=inject, serve_path="fused")
+    reqs = _requests(n=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no capacity-coupling warning allowed
+        eng = engine_lib.Engine(cfg, sparams, n_slots=SLOTS, max_len=MAX_LEN,
+                                chunk=CHUNK, collect_logits=True)
+    assert eng.capacity_coupled is False
+    co, _ = eng.run(reqs)
+    assert sorted(co) == sorted(r.rid for r in reqs)
+    for rid in (0, 2):
+        solo_eng = engine_lib.Engine(cfg, sparams, n_slots=SLOTS,
+                                     max_len=MAX_LEN, chunk=CHUNK,
+                                     collect_logits=True)
+        solo, _ = solo_eng.run([r for r in reqs if r.rid == rid])
+        assert co[rid].tokens == solo[rid].tokens, (kind, inject, rid)
+        assert np.array_equal(co[rid].logits, solo[rid].logits), \
+            (kind, inject, rid)
+        assert co[rid].ecc == solo[rid].ecc, (kind, inject, rid)
+        assert np.isfinite(co[rid].logits).all(), (kind, inject, rid)
 
 
 def test_load_gen_open_loop_poisson():
@@ -226,6 +309,16 @@ def test_load_gen_open_loop_poisson():
         assert ra.tokens.max() < 64
 
 
+_KIND_CFG_SNIPPET = {
+    "attn": 'cfg = get_config("olmo-1b").reduced()',
+    "local": ('import dataclasses\n'
+              'cfg = dataclasses.replace(get_config("olmo-1b").reduced(), '
+              'block_pattern=("local",), local_window=16)'),
+    "rwkv": 'cfg = get_config("rwkv6-1.6b").reduced()',
+    "rec": 'cfg = get_config("recurrentgemma-9b").reduced()',
+    "moe": 'cfg = get_config("qwen3-moe-235b-a22b").reduced()',
+}
+
 _MESH_INVARIANCE_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -239,7 +332,7 @@ _MESH_INVARIANCE_SCRIPT = textwrap.dedent("""
     from repro.launch.mesh import make_host_mesh
     from repro.models import lm
 
-    cfg = get_config("olmo-1b").reduced()
+    {cfg_snippet}
     key = jax.random.PRNGKey(0)
     params = lm.init_lm(key, cfg)
     dkey = jax.random.fold_in(key, 1)
@@ -269,15 +362,18 @@ _MESH_INVARIANCE_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_batch_invariance_on_8_device_mesh(tmp_path):
+@pytest.mark.parametrize("kind", KINDS)
+def test_batch_invariance_on_8_device_mesh(tmp_path, kind):
     """Dynamic-inject fused serving through the shard_map'd kernel on a
-    forced-8-device "model" mesh: solo == co-batched, bitwise."""
-    path = tmp_path / "mesh_engine.py"
-    path.write_text(_MESH_INVARIANCE_SCRIPT)
+    forced-8-device "model" mesh: solo == co-batched, bitwise, for every
+    slot-state kind."""
+    path = tmp_path / f"mesh_engine_{kind}.py"
+    path.write_text(_MESH_INVARIANCE_SCRIPT.replace(
+        "{cfg_snippet}", _KIND_CFG_SNIPPET[kind]))
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run([sys.executable, str(path)], capture_output=True,
                          text=True, env=env, cwd=os.getcwd(), timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
+    assert out.returncode == 0, (kind, out.stderr[-3000:])
     got = json.loads(out.stdout.strip().splitlines()[-1])
     assert got == {"tokens_equal": True, "logits_equal": True,
                    "ecc_equal": True, "n_done": 3, "finite": True}

@@ -141,10 +141,10 @@ def test_prefix_cache_hash_consing_and_trie_paths():
     pc = engine_lib.PrefixCache()
     a = np.arange(8, dtype=np.int32)
     b = a + 1
-    n1 = pc.insert(None, a, kv="kv_a", salt=1)
-    assert pc.insert(None, a, kv="other", salt=1) is n1    # hash-consed
+    n1 = pc.insert(None, a, state="kv_a", salt=1)
+    assert pc.insert(None, a, state="other", salt=1) is n1    # hash-consed
     assert pc.inserts == 1
-    n2 = pc.insert(n1, b, kv="kv_b", salt=2)
+    n2 = pc.insert(n1, b, state="kv_b", salt=2)
     assert pc.lookup(None, a) is n1
     assert pc.lookup(n1, b) is n2
     assert pc.lookup(None, b) is None                      # wrong parent
@@ -154,10 +154,10 @@ def test_prefix_cache_hash_consing_and_trie_paths():
 
 def test_prefix_cache_lru_evicts_leaves_only():
     pc = engine_lib.PrefixCache(max_chunks=2)
-    root = pc.insert(None, [1], kv=0, salt=0)
-    pc.insert(root, [2], kv=0, salt=0)                     # child of root
+    root = pc.insert(None, [1], state=0, salt=0)
+    pc.insert(root, [2], state=0, salt=0)                     # child of root
     pc.lookup(None, [1])                # root is now the RECENT one
-    pc.insert(None, [3], kv=0, salt=0)  # over capacity -> evict one leaf
+    pc.insert(None, [3], state=0, salt=0)  # over capacity -> evict one leaf
     assert pc.evictions == 1
     # the child was the oldest leaf; root survives even though it is older
     # than its child was (evicting it would orphan reachable descendants)
@@ -168,8 +168,8 @@ def test_prefix_cache_lru_evicts_leaves_only():
 
 def test_prefix_cache_invalidate():
     pc = engine_lib.PrefixCache()
-    n = pc.insert(None, [1, 2], kv=0, salt=0)
-    pc.insert(n, [3, 4], kv=0, salt=0)
+    n = pc.insert(None, [1, 2], state=0, salt=0)
+    pc.insert(n, [3, 4], state=0, salt=0)
     pc.invalidate()
     assert len(pc) == 0 and pc.invalidations == 1
     assert pc.lookup(None, [1, 2]) is None

@@ -46,6 +46,14 @@ PUBLIC_API_SNAPSHOT = (
     "cim_linear_store",
     "cim_linear_store_sharded",
     "fault_inject_bits",
+    # expert-parallel MoE deployment (each expert its own macro)
+    "ExpertDeployment",
+    # slot-state protocol (the engine <-> architecture boundary)
+    "SlotStateSpec",
+    "extract_state_chunk",
+    "init_slot_states",
+    "inject_state_chunk",
+    "slot_state_spec",
     # serving engine (continuous batching, per-request fault streams)
     "Engine",
     "LoadGen",

@@ -107,7 +107,7 @@ def test_int8_kv_cache_close_to_bf16():
     outs = {}
     for mode in ("compute", "int8"):
         c = dataclasses.replace(cfg, kv_cache_dtype=mode)
-        caches = lm.init_caches(c, 2, 16, prefilled=0)
+        caches = lm.init_slot_states(c, 2, 16, prefilled=0)
         serve = jax.jit(steps_lib.make_serve_step(c))
         logits = None
         for i in range(4):
